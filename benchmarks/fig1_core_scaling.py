@@ -1,0 +1,68 @@
+"""Paper Fig. 1 — normalized IPC vs. number of compute cores (BL system).
+
+Reproduces the two key observations:
+  (1) memory-bound apps saturate as SMs increase (9 'saturators'),
+  (2) five 'thrashers' (kmeans, histo, mri-gri, spmv, lbm) *lose*
+      performance past a knee,
+  (3) compute-bound apps scale ~linearly to 68 SMs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import cache_sim as cs
+from repro.core import traces as tr
+
+from . import common as C
+
+THRASHERS = ("kmeans", "histo", "mri-gri", "spmv", "lbm")
+
+
+def run() -> Dict[str, List[float]]:
+    apps = tr.MEMORY_BOUND + tr.COMPUTE_BOUND
+    grid = list(C.GRID)
+    curves: Dict[str, List[float]] = {}
+    rows = []
+    for app in apps:
+        ipcs = [cs.run(app, "BL", n_compute=n, length=C.TRACE_LEN).ipc
+                for n in grid]
+        base = ipcs[0]
+        norm = [x / base for x in ipcs]
+        curves[app] = norm
+        rows.append([app, tr.WORKLOADS[app].memory_bound] + [f"{x:.3f}" for x in norm])
+    C.write_csv("fig1_core_scaling",
+                ["app", "memory_bound"] + [f"sm{n}" for n in grid], rows)
+
+    # --- validation against the paper's observations
+    sat_frac = []           # memory-bound: perf(68)/max(perf) ~ saturation
+    for app in tr.MEMORY_BOUND:
+        sat_frac.append(curves[app][-1] / max(curves[app]))
+    drop = [curves[a][-1] / max(curves[a]) for a in THRASHERS]
+    comp_gain = [curves[a][-1] / curves[a][0] for a in tr.COMPUTE_BOUND]
+    C.verdict("fig1.saturation",
+              all(f <= 1.0 + 1e-9 for f in sat_frac),
+              f"mem-bound perf(68SM)/peak = {min(sat_frac):.2f}..{max(sat_frac):.2f}")
+    C.verdict("fig1.thrashers-drop", all(d < 0.95 for d in drop),
+              f"thrashers perf(68)/peak = {['%.2f' % d for d in drop]} (<0.95 expected)")
+    C.verdict("fig1.compute-bound-scales", all(g > 3.0 for g in comp_gain),
+              f"compute-bound perf(68)/perf({C.GRID[0]}) = "
+              f"{['%.1f' % g for g in comp_gain]}")
+    # paper: on average 56% of cores saturate performance
+    knees = []
+    for app in tr.MEMORY_BOUND:
+        c = curves[app]
+        peak = max(c)
+        for n, v in zip(C.GRID, c):
+            if v >= 0.95 * peak:
+                knees.append(n / 68.0)
+                break
+    avg_knee = sum(knees) / len(knees)
+    C.verdict("fig1.avg-saturation-point", 0.3 <= avg_knee <= 0.8,
+              f"avg fraction of cores to reach 95% of peak = {avg_knee:.2f} "
+              f"(paper: ~0.56)")
+    return curves
+
+
+if __name__ == "__main__":
+    with C.Timer("fig1 core scaling"):
+        run()

@@ -1,0 +1,55 @@
+"""Paper Fig. 2 — effect of 2x / 4x LLC capacity on memory-bound apps.
+
+Best-over-core-grid normalized IPC per app for conventional-LLC scales
+{1x, 2x, 4x}.  Paper: 4x improves all 14 apps, up to 2.34x (kmeans),
+1.57x geometric mean.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Dict
+
+from repro.core import cache_sim as cs
+from repro.core import traces as tr
+
+from . import common as C
+
+SCALES = (1.0, 2.0, 4.0)
+
+
+def _best_ipc(app: str, conv_scale: float) -> float:
+    name = f"_LLC{conv_scale:g}x"
+    if name not in cs.SYSTEMS:
+        cs.SYSTEMS[name] = replace(cs.SYSTEMS["IBL"], name=name,
+                                   conv_scale=conv_scale)
+    return max(cs.run(app, name, n_compute=n, length=C.TRACE_LEN).ipc
+               for n in C.GRID)
+
+
+def run() -> Dict[str, Dict[float, float]]:
+    out: Dict[str, Dict[float, float]] = {}
+    rows = []
+    for app in tr.MEMORY_BOUND:
+        ipc = {s: _best_ipc(app, s) for s in SCALES}
+        out[app] = {s: ipc[s] / ipc[1.0] for s in SCALES}
+        rows.append([app] + [f"{out[app][s]:.3f}" for s in SCALES])
+    g2 = C.geomean([out[a][2.0] for a in tr.MEMORY_BOUND])
+    g4 = C.geomean([out[a][4.0] for a in tr.MEMORY_BOUND])
+    rows.append(["geomean", "1.000", f"{g2:.3f}", f"{g4:.3f}"])
+    C.write_csv("fig2_llc_size", ["app", "x1", "x2", "x4"], rows)
+
+    C.verdict("fig2.all-apps-gain-4x",
+              all(out[a][4.0] >= 1.0 for a in tr.MEMORY_BOUND),
+              f"min 4x gain = {min(out[a][4.0] for a in tr.MEMORY_BOUND):.2f}")
+    C.verdict("fig2.4x-geomean", 1.2 <= g4 <= 2.2,
+              f"4x LLC geomean speedup = {g4:.2f} (paper: 1.57)")
+    best = max(tr.MEMORY_BOUND, key=lambda a: out[a][4.0])
+    C.verdict("fig2.max-gainer", out[best][4.0] > 1.5,
+              f"largest 4x gain = {best} at {out[best][4.0]:.2f}x "
+              f"(paper: kmeans 2.34x)")
+    return out
+
+
+if __name__ == "__main__":
+    with C.Timer("fig2 LLC size"):
+        run()

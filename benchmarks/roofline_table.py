@@ -1,0 +1,75 @@
+"""§Roofline aggregation — reads results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun --sweep``) and emits the per-(arch x shape
+x mesh) roofline table used by EXPERIMENTS.md.
+
+No model is compiled here; this is pure aggregation of the dry-run
+artifacts (the dry-run itself needs the 512-device XLA flag and runs as
+its own process).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from . import common as C
+
+DRYRUN_DIRS = {"baseline": C.RESULTS_DIR / "dryrun",
+               "optimized": C.RESULTS_DIR / "dryrun_opt"}
+
+
+def load(tag: str) -> List[Dict]:
+    d = DRYRUN_DIRS[tag]
+    out = []
+    for f in sorted(d.glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def run():
+    rows = []
+    n_ok = n_skip = 0
+    for tag in ("baseline", "optimized"):
+        if not DRYRUN_DIRS[tag].exists():
+            continue
+        for j in load(tag):
+            if j.get("skipped"):
+                if tag == "optimized":
+                    n_skip += 1
+                rows.append([tag, j["arch"], j["shape"], j.get("mesh", "-"),
+                             "skip", j.get("reason", ""), "", "", "",
+                             "", "", ""])
+                continue
+            if not j.get("ok"):
+                rows.append([tag, j["arch"], j["shape"], j.get("mesh", "-"),
+                             "FAIL", j.get("error", "")[:60], "", "", "",
+                             "", "", ""])
+                continue
+            if tag == "optimized":
+                n_ok += 1
+            rows.append([
+                tag, j["arch"], j["shape"], j["mesh"], "ok", j["dominant"],
+                f"{j['t_compute_s']:.4g}", f"{j['t_memory_s']:.4g}",
+                f"{j['t_collective_s']:.4g}",
+                f"{j.get('roofline_fraction', 0):.3f}",
+                f"{j.get('useful_flops_ratio', 0):.3f}",
+                f"{j.get('bytes_per_chip', 0) / 2**30:.2f}",
+            ])
+    C.write_csv("roofline_table",
+                ["sweep", "arch", "shape", "mesh", "status", "dominant",
+                 "t_compute_s", "t_memory_s", "t_collective_s",
+                 "roofline_fraction", "useful_flops_ratio",
+                 "mem_GiB_per_chip"], rows)
+
+    both = [r for r in rows if r[0] == "optimized" and r[4] == "ok"]
+    pod2 = [r for r in both if r[3] == "2x16x16"]
+    C.verdict("roofline.all-cells-compile", n_ok >= 70,
+              f"{n_ok} ok cells across meshes ({n_skip} documented skips)")
+    C.verdict("roofline.multi-pod", len(pod2) >= 35,
+              f"{len(pod2)} multi-pod (2x16x16) cells compiled")
+    return rows
+
+
+if __name__ == "__main__":
+    with C.Timer("roofline table aggregation"):
+        run()

@@ -1,0 +1,64 @@
+"""Benchmark driver — one module per paper table/figure (DESIGN.md §6).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig12,fig13] [--profile std]
+
+Profiles (or env REPRO_BENCH_PROFILE): quick | std | full — controls trace
+length and mode-split sweep grids.  Every module writes a CSV into
+``benchmarks/out/`` and prints PASS/WARN verdicts against the paper's own
+reported numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated module keys (fig1,fig2,fig5,fig11,"
+                         "fig12,fig13,tab3,bw,overheads,roofline)")
+    ap.add_argument("--profile", default=None, choices=("quick", "std", "full"))
+    args = ap.parse_args()
+    if args.profile:
+        os.environ["REPRO_BENCH_PROFILE"] = args.profile
+
+    # import after profile env is set (common.py reads it at import time)
+    from . import common as C
+    from . import (bw_analysis, fig1_core_scaling, fig2_llc_size,
+                   fig5_latency, fig11_characterization, fig12_endtoend,
+                   fig13_predictor, roofline_table, tab3_mode_split,
+                   tab_overheads)
+
+    modules = {
+        "fig5": ("Fig. 5 latency timelines", fig5_latency.run),
+        "fig11": ("Fig. 11 extended-LLC characterization",
+                  fig11_characterization.run),
+        "overheads": ("§7.5 overheads", tab_overheads.run),
+        "roofline": ("§Roofline table (dry-run aggregation)",
+                     roofline_table.run),
+        "fig1": ("Fig. 1 core scaling", fig1_core_scaling.run),
+        "fig2": ("Fig. 2 LLC sizes", fig2_llc_size.run),
+        "tab3": ("Table 3 mode split", tab3_mode_split.run),
+        "fig12": ("Fig. 12 end-to-end, 9 systems", fig12_endtoend.run),
+        "fig13": ("Fig. 13 predictor ablation", fig13_predictor.run),
+        "bw": ("§7.4 bandwidth analysis", bw_analysis.run),
+    }
+    only = [k.strip() for k in args.only.split(",") if k.strip()]
+    t0 = time.time()
+    print(f"benchmark profile = {C.PROFILE} (trace len {C.TRACE_LEN}, "
+          f"grid {C.GRID})")
+    ran = 0
+    for key, (label, fn) in modules.items():
+        if only and key not in only:
+            continue
+        with C.Timer(label):
+            fn()
+        ran += 1
+    print(f"\n{ran} benchmark modules done in {time.time() - t0:.0f}s; "
+          f"CSVs in {C.OUT_DIR}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper §7.5 — storage and power overheads of the Morpheus controller.
+
+Storage: 16 KiB Bloom filters + 5 KiB query-logic unit per LLC partition
+(= 21 KiB x 10 partitions = 210 KiB, ~4% of the 5 MiB LLC).
+Power: 0.93% of total GPU power.
+"""
+from __future__ import annotations
+
+from repro.core.energy import PaperGPU
+
+from . import common as C
+
+PARTITIONS = 10
+SETS_PER_PARTITION = 256
+FILTER_BYTES = 32                    # §4.1.2: 32-byte Bloom filters
+
+
+def run():
+    gpu = PaperGPU()
+    bloom_bytes = 2 * FILTER_BYTES * SETS_PER_PARTITION     # BF1+BF2 per set
+    query_unit_bytes = 5 * 1024          # request queue + WST + data buffers
+    per_partition = bloom_bytes + query_unit_bytes
+    total = per_partition * PARTITIONS
+    frac_of_llc = total / (5 * (1 << 20))
+
+    rows = [
+        ["bloom_filters_per_partition_KiB", f"{bloom_bytes / 1024:.0f}"],
+        ["query_unit_per_partition_KiB", f"{query_unit_bytes / 1024:.0f}"],
+        ["total_per_partition_KiB", f"{per_partition / 1024:.0f}"],
+        ["total_KiB", f"{total / 1024:.0f}"],
+        ["fraction_of_conv_LLC", f"{frac_of_llc:.3f}"],
+        ["controller_power_frac", f"{gpu.controller_power_frac:.4f}"],
+    ]
+    C.write_csv("tab_overheads", ["metric", "value"], rows)
+
+    C.verdict("overheads.storage-per-partition",
+              abs(per_partition / 1024 - 21) <= 1,
+              f"{per_partition / 1024:.0f} KiB per partition (paper: 21 KiB "
+              f"= 16 Bloom + 5 query unit)")
+    C.verdict("overheads.fraction-of-llc", frac_of_llc < 0.05,
+              f"{frac_of_llc:.1%} of conventional LLC capacity (paper: ~4%)")
+    C.verdict("overheads.power", gpu.controller_power_frac < 0.01,
+              f"controller power = {gpu.controller_power_frac:.2%} "
+              f"(paper: 0.93%)")
+    return rows
+
+
+if __name__ == "__main__":
+    with C.Timer("overhead analysis (§7.5)"):
+        run()

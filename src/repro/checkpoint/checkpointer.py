@@ -1,0 +1,112 @@
+"""Sharded checkpoint/restore with manifests and async save.
+
+Layout: ``<dir>/step_<N>/leaf_<i>.npy`` + ``manifest.json`` recording the
+pytree structure, leaf paths, shapes, dtypes and the mesh it was saved
+under.  Single-host writes whole arrays; the manifest's per-leaf metadata
+is what lets ``elastic.reshard`` re-place them onto a different mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _leaf_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree: PyTree, *,
+         mesh_desc: str = "", keep: int = 3, async_: bool = False
+         ) -> Path:
+    """Write a checkpoint; returns its directory.  ``async_`` runs the file
+    writes on a daemon thread (the arrays are first fetched to host)."""
+    ckpt_dir = Path(ckpt_dir)
+    out = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    names, leaves, _ = _leaf_paths(tree)
+    host_leaves = [np.asarray(x) for x in leaves]
+
+    def _write():
+        tmp.mkdir(parents=True, exist_ok=True)
+        manifest = {"step": step, "mesh": mesh_desc, "leaves": []}
+        for i, (name, arr) in enumerate(zip(names, host_leaves)):
+            logical_dtype = str(arr.dtype)
+            if arr.dtype.kind == "V" or logical_dtype == "bfloat16":
+                # numpy can't round-trip ml_dtypes (bfloat16 etc.) through
+                # .npy without pickling; store the raw bits
+                arr = arr.view(np.uint16 if arr.dtype.itemsize == 2
+                               else np.uint8)
+            np.save(tmp / f"leaf_{i}.npy", arr)
+            manifest["leaves"].append({
+                "index": i, "path": name, "shape": list(arr.shape),
+                "dtype": logical_dtype})
+        json.dump(manifest, open(tmp / "manifest.json", "w"), indent=1)
+        if out.exists():
+            shutil.rmtree(out)
+        tmp.rename(out)   # atomic publish
+        _gc(ckpt_dir, keep)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        t.join(timeout=0)  # fire and forget; latest() ignores tmp dirs
+    else:
+        _write()
+    return out
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest(ckpt_dir: str | Path) -> Optional[Path]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(p for p in ckpt_dir.glob("step_*")
+                   if p.is_dir() and (p / "manifest.json").exists())
+    return steps[-1] if steps else None
+
+
+def restore(ckpt: str | Path, template: PyTree, *, shardings: PyTree = None
+            ) -> Tuple[int, PyTree]:
+    """Restore into the template's structure; optionally re-place leaves
+    with the given shardings (elastic restore onto a new mesh)."""
+    ckpt = Path(ckpt)
+    manifest = json.load(open(ckpt / "manifest.json"))
+    names, leaves, treedef = _leaf_paths(template)
+    by_path = {l["path"]: l for l in manifest["leaves"]}
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for name, tmpl, sh in zip(names, leaves, shard_leaves):
+        meta = by_path.get(name)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = np.load(ckpt / f"leaf_{meta['index']}.npy")
+        if meta.get("dtype") == "bfloat16" and arr.dtype == np.uint16:
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"{name}: shape {arr.shape} != {tmpl.shape}")
+        x = jnp.asarray(arr, dtype=tmpl.dtype)
+        if sh is not None:
+            x = jax.device_put(x, sh)
+        out.append(x)
+    return manifest["step"], jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,25 @@
+"""Elastic resharding: resume a checkpoint on a different mesh.
+
+The manifest stores full (unsharded) leaf arrays plus the mesh descriptor;
+resuming on a new topology is therefore: rebuild shardings for the NEW mesh
+from the same logical rules, then ``restore(..., shardings=new)``.  This is
+what lets a 2-pod job continue as a 1-pod job after a pod loss (the
+fault-tolerance path in distributed/fault_tolerance.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from jax.sharding import Mesh
+
+from ..distributed import sharding as shd
+from . import checkpointer as ckpt
+
+PyTree = Any
+
+
+def restore_on_mesh(ckpt_path, template_params: PyTree, mesh: Mesh):
+    """Restore params re-placed for ``mesh`` (any shape with the same axis
+    names) using the standard parameter sharding rules."""
+    shardings = shd.param_shardings(template_params, mesh)
+    return ckpt.restore(ckpt_path, template_params, shardings=shardings)

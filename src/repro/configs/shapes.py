@@ -1,0 +1,26 @@
+"""Assigned input-shape presets (one set, shared by all LM-family archs).
+
+``train_4k``   lowers ``train_step``; ``prefill_32k`` lowers the prefill
+forward; ``decode_32k``/``long_500k`` lower ``serve_step`` (one new token
+against a KV cache of ``seq_len``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

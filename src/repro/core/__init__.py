@@ -1,0 +1,21 @@
+"""Morpheus core: the paper's contribution as composable JAX modules.
+
+Layers:
+  * ``address_separation`` — static request routing (§4.1.1)
+  * ``bloom``              — double-Bloom hit/miss predictor (§4.1.2)
+  * ``tag_store``          — Algorithm-1 tag/LRU/dirty metadata model
+  * ``extended_cache``     — byte-budgeted compressed extended tier (§4.2-4.3)
+  * ``compression``        — BDI reference semantics (§4.3.1)
+  * ``controller``         — the Morpheus controller state machine (§4.1)
+  * ``cache_sim``          — the paper's nine-system evaluation model (§6-7)
+  * ``traces``             — Table-2 workload access-trace generators
+  * ``policy``             — Table-3 compute/cache mode split
+  * ``energy``             — latency/energy constants (paper + TPU analogue)
+"""
+from . import (address_separation, bloom, cache_sim, compression, controller,
+               energy, extended_cache, policy, tag_store, traces)
+
+__all__ = [
+    "address_separation", "bloom", "cache_sim", "compression", "controller",
+    "energy", "extended_cache", "policy", "tag_store", "traces",
+]

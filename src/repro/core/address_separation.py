@@ -1,0 +1,118 @@
+"""Static address separation (paper §4.1.1).
+
+Morpheus splits the block-address space *statically* into two partitions
+proportional to the conventional and extended LLC capacities; the Morpheus
+controller routes each request by set number.  Inside the extended tier the
+same principle recurses: sets are split across cache-mode cores (here:
+cache-mode chips) and, within a core, across memory units (paper: register
+file vs. L1/shared memory; here: VMEM-resident pool vs. HBM pool),
+proportionally to each unit's capacity.
+
+All functions are scalar-jittable (uint32 in, int32 out) and vmap-able so
+they run both inside the lax.scan trace simulator and on batched request
+vectors in the serving controller.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# Tier codes
+CONVENTIONAL = 0
+EXTENDED = 1
+
+# Extended-tier memory-unit codes (paper: register file / shared / L1)
+UNIT_VMEM = 0   # fast unit (paper: register file)
+UNIT_HBM = 1    # bulk unit (paper: unified L1/shared)
+
+
+@dataclass(frozen=True)
+class AddressMap:
+    """Static parameters of the separation scheme.
+
+    ``conv_sets``            sets in the conventional LLC
+    ``ext_sets``             sets in the extended LLC (total over all owners)
+    ``num_cache_chips``      chips in cache mode (0 => extended tier disabled)
+    ``sets_per_chip``        ext sets owned by one cache-mode chip
+    ``vmem_sets_per_chip``   of those, how many live in the fast (VMEM) unit
+    """
+
+    conv_sets: int
+    ext_sets: int
+    num_cache_chips: int
+    sets_per_chip: int
+    vmem_sets_per_chip: int
+
+    def __post_init__(self):
+        if self.num_cache_chips > 0:
+            assert self.sets_per_chip * self.num_cache_chips == self.ext_sets, (
+                "extended sets must tile evenly over cache-mode chips")
+            assert 0 <= self.vmem_sets_per_chip <= self.sets_per_chip
+        else:
+            assert self.ext_sets == 0
+
+    @property
+    def total_sets(self) -> int:
+        return self.conv_sets + self.ext_sets
+
+
+def make_map(*, conv_sets: int, num_cache_chips: int, sets_per_chip: int,
+             vmem_fraction: float = 2.0 / 3.0) -> AddressMap:
+    """Build an AddressMap.  ``vmem_fraction`` mirrors the paper's final
+    split of 32 register-file warps vs. 16 L1 warps (§5, 'Combining')."""
+    ext_sets = num_cache_chips * sets_per_chip
+    vmem_sets = int(round(sets_per_chip * vmem_fraction)) if num_cache_chips else 0
+    return AddressMap(conv_sets=conv_sets, ext_sets=ext_sets,
+                      num_cache_chips=num_cache_chips,
+                      sets_per_chip=sets_per_chip,
+                      vmem_sets_per_chip=vmem_sets)
+
+
+def set_index(amap: AddressMap, block_addr: jnp.ndarray) -> jnp.ndarray:
+    """Global set number of a block address (modulo interleaving, exactly
+    the static mapping a conventional GPU uses across LLC partitions)."""
+    return (block_addr % jnp.uint32(amap.total_sets)).astype(jnp.int32)
+
+
+def tag_of(amap: AddressMap, block_addr: jnp.ndarray) -> jnp.ndarray:
+    """Tag bits = block address / total_sets (the part not implied by set)."""
+    return (block_addr // jnp.uint32(amap.total_sets)).astype(jnp.uint32)
+
+
+def route(amap: AddressMap, block_addr: jnp.ndarray
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Controller routing: (tier, local_set_index).
+
+    tier==CONVENTIONAL: local index into the conventional LLC's sets.
+    tier==EXTENDED:     index into the extended tier's global set space
+                        [0, ext_sets) — see ``owner_of``/``unit_of``.
+    """
+    s = set_index(amap, block_addr)
+    is_ext = s >= amap.conv_sets
+    tier = jnp.where(is_ext, EXTENDED, CONVENTIONAL).astype(jnp.int32)
+    local = jnp.where(is_ext, s - amap.conv_sets, s).astype(jnp.int32)
+    return tier, local
+
+
+def owner_of(amap: AddressMap, ext_set: jnp.ndarray) -> jnp.ndarray:
+    """Which cache-mode chip owns an extended set (block-contiguous tiling:
+    chip c owns sets [c*sets_per_chip, (c+1)*sets_per_chip))."""
+    return (ext_set // jnp.int32(max(amap.sets_per_chip, 1))).astype(jnp.int32)
+
+
+def unit_of(amap: AddressMap, ext_set: jnp.ndarray) -> jnp.ndarray:
+    """Memory unit within the owner chip (paper §4.2 task 3): the first
+    ``vmem_sets_per_chip`` sets of each chip live in the fast unit."""
+    within = ext_set % jnp.int32(max(amap.sets_per_chip, 1))
+    return jnp.where(within < amap.vmem_sets_per_chip, UNIT_VMEM, UNIT_HBM
+                     ).astype(jnp.int32)
+
+
+def capacity_bytes(amap: AddressMap, ways: int, block_bytes: int
+                   ) -> Tuple[int, int]:
+    """(conventional, extended) data capacities implied by the map."""
+    conv = amap.conv_sets * ways * block_bytes
+    ext = amap.ext_sets * ways * block_bytes
+    return conv, ext

@@ -1,0 +1,153 @@
+"""Base-Delta-Immediate cache compression (paper §4.3.1, after BDI [33]).
+
+The paper compresses each inserted/updated 128-byte extended-LLC block with
+BDI over 4-byte segments and classifies the result into three levels:
+
+  * ``HIGH``  — 4x: deltas from the base fit in int8  -> 32 B payload
+  * ``LOW``   — 2x: deltas fit in int16               -> 64 B payload
+  * ``UNCOMP``— 1x: stored verbatim                   -> 128 B payload
+
+Like the paper, the base segment is stored out-of-line ("auxiliary
+registers"), so the payload is deltas only.  The number of physical slots
+dedicated to each level adapts per epoch from level-frequency counters
+(paper: epochs of 10,000 cycles).
+
+This module is the *reference semantics* (pure jnp, vectorized over blocks)
+used by the cache simulator and as the oracle for the Pallas kernel in
+``repro.kernels.bdi``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+# compression level codes
+HIGH, LOW, UNCOMP = 0, 1, 2
+LEVEL_BYTES = {HIGH: 32, LOW: 64, UNCOMP: 128}
+BLOCK_BYTES = 128
+SEGMENTS = BLOCK_BYTES // 4  # 32 four-byte segments (paper choice)
+
+
+def _wrap_deltas(blocks_u32: jnp.ndarray) -> jnp.ndarray:
+    """Two's-complement deltas from the base segment, as uint32 (wraps).
+
+    Pure 32-bit arithmetic: works without jax x64 and matches what the
+    Pallas kernel does on hardware."""
+    base = blocks_u32[..., :1].astype(jnp.uint32)
+    return (blocks_u32.astype(jnp.uint32) - base)  # mod-2^32 subtract
+
+
+def _fits_signed(d_u32: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Does the two's-complement value in d_u32 fit in `bits` signed bits?"""
+    hi = jnp.uint32((1 << (bits - 1)) - 1)          # e.g. 127
+    lo = jnp.uint32(0x100000000 - (1 << (bits - 1)))  # e.g. 2^32-128
+    return (d_u32 <= hi) | (d_u32 >= lo)
+
+
+def classify(blocks_u32: jnp.ndarray) -> jnp.ndarray:
+    """Per-block compression level.
+
+    ``blocks_u32``: (..., 32) uint32 — one 128-B block per row as 4-B segments.
+    Returns (...,) int32 level in {HIGH, LOW, UNCOMP}.
+    """
+    d = _wrap_deltas(blocks_u32)
+    fits8 = jnp.all(_fits_signed(d, 8), axis=-1)
+    fits16 = jnp.all(_fits_signed(d, 16), axis=-1)
+    return jnp.where(fits8, HIGH, jnp.where(fits16, LOW, UNCOMP)).astype(jnp.int32)
+
+
+class Compressed(NamedTuple):
+    level: jnp.ndarray    # (...,) int32
+    base: jnp.ndarray     # (...,) uint32 — base segment (aux-register analog)
+    payload: jnp.ndarray  # (..., 32) uint32 — deltas packed per level; for
+    #                       UNCOMP this is the raw block.  Physical footprint
+    #                       is LEVEL_BYTES[level]; we keep the logical array
+    #                       dense and account footprint separately, exactly
+    #                       like the simulator accounts register slots.
+
+
+def compress(blocks_u32: jnp.ndarray) -> Compressed:
+    """Compress blocks; shape-stable (payload always (...,32) u32) so it
+    jits, with the *physical* size given by ``level``."""
+    level = classify(blocks_u32)
+    base = blocks_u32[..., 0]
+    # deltas as two's-complement u32 (mod-2^32); HIGH/LOW use low 8/16 bits
+    payload_deltas = _wrap_deltas(blocks_u32)
+    is_unc = (level == UNCOMP)[..., None]
+    payload = jnp.where(is_unc, blocks_u32, payload_deltas)
+    return Compressed(level=level, base=base, payload=payload)
+
+
+def decompress(c: Compressed) -> jnp.ndarray:
+    """Exact inverse of ``compress`` (lossless for all levels)."""
+    # mod-2^32 add inverts the wrapped subtract for any delta
+    restored = c.base[..., None].astype(jnp.uint32) + c.payload.astype(jnp.uint32)
+    return jnp.where((c.level == UNCOMP)[..., None], c.payload, restored)
+
+
+def physical_bytes(level: jnp.ndarray) -> jnp.ndarray:
+    """Physical footprint in bytes per block given its level."""
+    return jnp.where(level == HIGH, LEVEL_BYTES[HIGH],
+                     jnp.where(level == LOW, LEVEL_BYTES[LOW],
+                               LEVEL_BYTES[UNCOMP])).astype(jnp.int32)
+
+
+def compression_ratio(level: jnp.ndarray) -> jnp.ndarray:
+    """Mean logical/physical ratio over a batch of blocks."""
+    phys = physical_bytes(level).astype(jnp.float32)
+    return jnp.float32(BLOCK_BYTES) / jnp.mean(phys)
+
+
+# ---------------------------------------------------------------------------
+# Epoch-adaptive level capacity (paper §4.3.1: counters per epoch decide how
+# many register slots each level gets; initially everything UNCOMP).
+# ---------------------------------------------------------------------------
+
+class LevelAllocator(NamedTuple):
+    counts: jnp.ndarray        # (3,) int64 — blocks seen per level this epoch
+    slots: jnp.ndarray         # (3,) int32 — current physical 32-B slot quota
+    epoch_len: jnp.ndarray     # () int32
+    tick: jnp.ndarray          # () int32
+    total_slots: jnp.ndarray   # () int32 — physical 32-B slots available
+
+
+def make_allocator(total_bytes: int, epoch_len: int = 10_000) -> LevelAllocator:
+    total_slots = total_bytes // 32
+    slots = jnp.asarray([0, 0, total_slots], dtype=jnp.int32)  # all UNCOMP at t=0
+    return LevelAllocator(
+        counts=jnp.zeros((3,), dtype=jnp.int64),
+        slots=slots,
+        epoch_len=jnp.asarray(epoch_len, jnp.int32),
+        tick=jnp.zeros((), jnp.int32),
+        total_slots=jnp.asarray(total_slots, jnp.int32),
+    )
+
+
+def allocator_observe(a: LevelAllocator, level: jnp.ndarray) -> LevelAllocator:
+    """Count one inserted/updated block; at epoch end re-apportion slots
+    proportionally to observed level mix (weighted by slot cost 1/2/4)."""
+    counts = a.counts.at[level].add(1)
+    tick = a.tick + 1
+    at_epoch = tick >= a.epoch_len
+
+    # epoch-end re-apportionment, computed unconditionally and selected with
+    # jnp.where so this stays usable inside scan bodies (no lax.cond pytrees)
+    cost = jnp.asarray([1, 2, 4], dtype=jnp.float32)  # 32B slots per block
+    demand = counts.astype(jnp.float32) * cost
+    frac = demand / jnp.maximum(jnp.sum(demand), 1.0)
+    new_slots = jnp.floor(frac * a.total_slots.astype(jnp.float32)).astype(jnp.int32)
+    # give rounding remainder to UNCOMP (safe: never over-promises)
+    new_slots = new_slots.at[UNCOMP].add(a.total_slots - jnp.sum(new_slots))
+
+    counts = jnp.where(at_epoch, jnp.zeros_like(counts), counts)
+    slots = jnp.where(at_epoch, new_slots, a.slots)
+    tick = jnp.where(at_epoch, 0, tick)
+    return a._replace(counts=counts, slots=slots, tick=tick)
+
+
+def effective_capacity_blocks(a: LevelAllocator) -> jnp.ndarray:
+    """How many logical 128-B blocks fit in the physical slots under the
+    current level apportionment (paper: compression grows effective LLC)."""
+    per_level_blocks = a.slots // jnp.asarray([1, 2, 4], dtype=jnp.int32)
+    return jnp.sum(per_level_blocks)

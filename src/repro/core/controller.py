@@ -1,0 +1,378 @@
+"""The Morpheus controller (paper §4.1) as a functional, scan-able machine.
+
+One ``step`` processes one LLC request exactly as Fig. 3/6 describe:
+
+  1. *address separation* routes the request to the conventional LLC or the
+     extended LLC (static split, §4.1.1);
+  2. for extended-tier requests, the *hit/miss predictor* (double Bloom
+     filter, §4.1.2) decides whether to forward the request over the
+     interconnect to the owning cache-mode chip or to go straight to the
+     backing store (predicted miss — as cheap as a conventional miss);
+  3. the extended tier performs the tag lookup / LRU / insert the
+     extended-LLC kernel would execute (Algorithm 1), with optional BDI
+     compression determining each block's physical footprint (§4.3.1).
+
+Implementation note: the step is *straight-line masked code* — every array
+receives exactly one dynamic row update per step (writing the old row back
+when the branch is not taken).  ``lax.cond`` over the full state would make
+XLA copy the whole cache state per trace element; the masked form lets the
+scan update buffers in place (~100x faster on CPU).
+
+Correctness invariant used to merge branches: a predicted miss can never be
+an actual hit (Bloom has no false negatives; PERFECT mirrors the lookup;
+NONE always forwards), so the extended-tier cases reduce to
+``hit -> touch`` and ``~hit -> insert`` with the NoC/latency cost depending
+on the prediction.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import address_separation as asep
+from . import bloom as bloomlib
+from .compression import BLOCK_BYTES, HIGH, LOW
+from .energy import PaperGPU
+from .tag_store import LRU_MAX
+
+
+class Predictor(enum.Enum):
+    BLOOM = "bloom"       # paper design (§4.1.2)
+    NONE = "none"         # ablation: forward everything (Fig. 13 No-Prediction)
+    PERFECT = "perfect"   # ablation: oracle (Fig. 13 Perfect-Prediction)
+
+
+@dataclass(frozen=True)
+class MorpheusConfig:
+    amap: asep.AddressMap
+    conv_ways: int = 32
+    ext_ways: int = 32              # logical ways at 128 B (budget = ways*128)
+    compression: bool = False
+    predictor: Predictor = Predictor.BLOOM
+    indirect_mov: bool = False      # §4.3.2 ISA support: faster data access
+    costs: PaperGPU = PaperGPU()
+
+    @property
+    def ext_enabled(self) -> bool:
+        return self.amap.ext_sets > 0
+
+    @property
+    def ext_max_ways(self) -> int:
+        return self.ext_ways * (BLOCK_BYTES // 32) if self.compression \
+            else self.ext_ways
+
+    @property
+    def ext_budget_bytes(self) -> int:
+        return self.ext_ways * BLOCK_BYTES
+
+    def latencies(self) -> Tuple[float, float, float, float, float]:
+        """(conv_hit, conv_miss, ext_hit, ext_miss, pred_miss) in ns."""
+        c = self.costs
+        ext_hit = c.ext_llc.hit_latency_ns
+        ext_miss = c.ext_llc.miss_latency_ns
+        if self.indirect_mov:
+            # §4.3.2: native Indirect-MOV removes the brx.idx switch (3 insts,
+            # 2 branches -> 1 inst) from every data-array access.
+            ext_hit -= 40.0
+            ext_miss -= 40.0
+        if self.compression:
+            ext_hit += 10.0  # BDI decompress on the hit path (§4.3.1)
+        return (c.conv_llc.hit_latency_ns, c.conv_llc.miss_latency_ns,
+                ext_hit, ext_miss, c.predicted_miss_latency_ns)
+
+
+class Stats(NamedTuple):
+    conv_hits: jnp.ndarray       # int32 counters
+    conv_misses: jnp.ndarray
+    ext_hits: jnp.ndarray
+    ext_false_pos: jnp.ndarray   # forwarded but actually a miss
+    ext_pred_miss: jnp.ndarray   # predicted miss, went straight to DRAM
+    ext_true_miss: jnp.ndarray
+    dram_accesses: jnp.ndarray
+    writebacks: jnp.ndarray
+    latency_ns: jnp.ndarray      # float32 sums
+    energy_nJ: jnp.ndarray
+    noc_bytes: jnp.ndarray       # extended-tier interconnect traffic (§7.4)
+    conv_bytes: jnp.ndarray
+    dram_bytes: jnp.ndarray
+    bloom_swaps: jnp.ndarray     # int32
+
+
+_INT_FIELDS = ("conv_hits", "conv_misses", "ext_hits", "ext_false_pos",
+               "ext_pred_miss", "ext_true_miss", "dram_accesses",
+               "writebacks", "bloom_swaps")
+
+
+def _zero_stats() -> Stats:
+    vals = {}
+    for f in Stats._fields:
+        dt = jnp.int32 if f in _INT_FIELDS else jnp.float32
+        vals[f] = jnp.zeros((), dt)
+    return Stats(**vals)
+
+
+class MorpheusState(NamedTuple):
+    # conventional LLC (hardware-managed, Algorithm-1-equivalent metadata)
+    conv_tags: jnp.ndarray    # (conv_sets, conv_ways) uint32
+    conv_valid: jnp.ndarray
+    conv_dirty: jnp.ndarray
+    conv_lru: jnp.ndarray
+    # extended LLC (byte-budgeted for compression)
+    ext_tags: jnp.ndarray     # (ext_sets, ext_max_ways)
+    ext_valid: jnp.ndarray
+    ext_dirty: jnp.ndarray
+    ext_lru: jnp.ndarray
+    ext_size: jnp.ndarray     # int32 physical bytes per block
+    ext_used: jnp.ndarray     # (ext_sets,) int32
+    # predictor
+    bf1: jnp.ndarray          # (ext_sets, words) uint32
+    bf2: jnp.ndarray
+    n_mru: jnp.ndarray        # (ext_sets,) int32
+    stats: Stats
+
+
+def make_state(cfg: MorpheusConfig) -> MorpheusState:
+    cs, cw = max(cfg.amap.conv_sets, 1), cfg.conv_ways
+    es, ew = max(cfg.amap.ext_sets, 1), cfg.ext_max_ways
+    words = 8  # 32-byte Bloom filters (paper §4.1.2 'Cost')
+    return MorpheusState(
+        conv_tags=jnp.zeros((cs, cw), jnp.uint32),
+        conv_valid=jnp.zeros((cs, cw), jnp.bool_),
+        conv_dirty=jnp.zeros((cs, cw), jnp.bool_),
+        conv_lru=jnp.zeros((cs, cw), jnp.uint32),
+        ext_tags=jnp.zeros((es, ew), jnp.uint32),
+        ext_valid=jnp.zeros((es, ew), jnp.bool_),
+        ext_dirty=jnp.zeros((es, ew), jnp.bool_),
+        ext_lru=jnp.zeros((es, ew), jnp.uint32),
+        ext_size=jnp.zeros((es, ew), jnp.int32),
+        ext_used=jnp.zeros((es,), jnp.int32),
+        bf1=jnp.zeros((es, words), jnp.uint32),
+        bf2=jnp.zeros((es, words), jnp.uint32),
+        n_mru=jnp.zeros((es,), jnp.int32),
+        stats=_zero_stats(),
+    )
+
+
+def _idx(a, i):
+    return jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+
+
+def _upd(a, row, i):
+    return jax.lax.dynamic_update_index_in_dim(a, row, i, 0)
+
+
+def step(cfg: MorpheusConfig, st: MorpheusState,
+         addr: jnp.ndarray, is_write: jnp.ndarray, level: jnp.ndarray
+         ) -> MorpheusState:
+    """Process one LLC request.  ``level`` is the block's BDI level (from
+    data contents in the real system; from the trace generator in the sim)."""
+    c = cfg.costs
+    lat_ch, lat_cm, lat_eh, lat_em, lat_pm = cfg.latencies()
+    e_conv = BLOCK_BYTES * c.conv_llc.energy_pJ_per_B * 1e-3   # nJ
+    e_ext = BLOCK_BYTES * c.ext_llc.energy_pJ_per_B * 1e-3
+    e_dram = BLOCK_BYTES * c.dram.energy_pJ_per_B * 1e-3
+
+    tier, local_set = asep.route(cfg.amap, addr)
+    tag = asep.tag_of(cfg.amap, addr)
+    is_ext = jnp.bool_(cfg.ext_enabled) & (tier == asep.EXTENDED)
+    conv_set = jnp.where(is_ext, 0, local_set)
+    ext_set = jnp.where(is_ext, local_set, 0)
+    is_write = jnp.bool_(is_write)
+
+    # ----- conventional LLC row update (identity when routed extended) -----
+    ctags, cvalid = _idx(st.conv_tags, conv_set), _idx(st.conv_valid, conv_set)
+    cdirty, clru = _idx(st.conv_dirty, conv_set), _idx(st.conv_lru, conv_set)
+    cmatch = cvalid & (ctags == tag)
+    c_hit = jnp.any(cmatch)
+    way_hit = jnp.argmax(cmatch).astype(jnp.int32)
+    vkey = jnp.where(cvalid, clru.astype(jnp.int32), -1)
+    way_vic = jnp.argmin(vkey).astype(jnp.int32)
+    way = jnp.where(c_hit, way_hit, way_vic)
+    onehot = jnp.arange(ctags.shape[0], dtype=jnp.int32) == way
+    c_evict_wb = ~c_hit & cvalid[way_vic] & cdirty[way_vic]
+    n_ctags = jnp.where(onehot & ~c_hit, tag, ctags)
+    n_cvalid = cvalid | (onehot & ~c_hit)
+    n_cdirty = jnp.where(onehot, jnp.where(c_hit, cdirty | is_write, is_write),
+                         cdirty)
+    n_clru = jnp.where(onehot, LRU_MAX,
+                       jnp.maximum(clru, 1) - 1).astype(jnp.uint32)
+    sel_c = ~is_ext
+    st = st._replace(
+        conv_tags=_upd(st.conv_tags, jnp.where(sel_c, n_ctags, ctags), conv_set),
+        conv_valid=_upd(st.conv_valid, jnp.where(sel_c, n_cvalid, cvalid), conv_set),
+        conv_dirty=_upd(st.conv_dirty, jnp.where(sel_c, n_cdirty, cdirty), conv_set),
+        conv_lru=_upd(st.conv_lru, jnp.where(sel_c, n_clru, clru), conv_set),
+    )
+
+    # ----- extended tier: predict -> lookup -> touch/insert ----------------
+    etags, evalid = _idx(st.ext_tags, ext_set), _idx(st.ext_valid, ext_set)
+    edirty, elru = _idx(st.ext_dirty, ext_set), _idx(st.ext_lru, ext_set)
+    esize, eused = _idx(st.ext_size, ext_set), _idx(st.ext_used, ext_set)
+    bf1, bf2 = _idx(st.bf1, ext_set), _idx(st.bf2, ext_set)
+    n = _idx(st.n_mru, ext_set)
+
+    ematch = evalid & (etags == tag)
+    e_hit = jnp.any(ematch)
+    e_way = jnp.argmax(ematch).astype(jnp.int32)
+
+    words = bf1.shape[0]
+    bits = bloomlib._hash_bits(tag, words * 32)
+    if cfg.predictor is Predictor.BLOOM:
+        pred = bloomlib._test(bf1, bits)
+    elif cfg.predictor is Predictor.PERFECT:
+        pred = e_hit
+    else:
+        pred = jnp.bool_(True)
+
+    phys = jnp.where(~jnp.bool_(cfg.compression), BLOCK_BYTES,
+                     jnp.where(level == HIGH, 32,
+                               jnp.where(level == LOW, 64, BLOCK_BYTES))
+                     ).astype(jnp.int32)
+
+    # touch path (hit): Algorithm 1 lines 8-12
+    eidx = jnp.arange(etags.shape[0], dtype=jnp.int32)
+    t_onehot = eidx == e_way
+    t_lru = jnp.where(t_onehot, LRU_MAX, jnp.maximum(elru, 1) - 1
+                      ).astype(jnp.uint32)
+    t_dirty = edirty | (t_onehot & is_write)
+
+    # insert path (miss): LRU-evict until the block fits (≤4 evictions)
+    i_tags, i_valid, i_dirty = etags, evalid, edirty
+    i_lru, i_size, i_used = elru, esize, eused
+    evictions = jnp.int32(0)
+    wbs = jnp.int32(0)
+    budget = cfg.ext_budget_bytes
+    for _ in range(BLOCK_BYTES // 32):
+        need = (i_used + phys) > budget
+        key = jnp.where(i_valid, i_lru.astype(jnp.int32),
+                        jnp.int32(LRU_MAX) + 1)
+        v = jnp.argmin(key).astype(jnp.int32)
+        can = need & jnp.any(i_valid)
+        oh = eidx == v
+        evictions += can.astype(jnp.int32)
+        wbs += (can & i_dirty[v]).astype(jnp.int32)
+        i_used = jnp.where(can, i_used - i_size[v], i_used)
+        i_valid = jnp.where(can & oh, False, i_valid)
+        i_dirty = jnp.where(can & oh, False, i_dirty)
+        i_size = jnp.where(can & oh, 0, i_size)
+    free_way = jnp.argmax(~i_valid).astype(jnp.int32)
+    oh = eidx == free_way
+    i_tags = jnp.where(oh, tag, i_tags)
+    i_valid = i_valid | oh
+    i_dirty = jnp.where(oh, is_write, i_dirty)
+    i_size = jnp.where(oh, phys, i_size)
+    i_lru = jnp.where(oh, LRU_MAX, jnp.maximum(i_lru, 1) - 1).astype(jnp.uint32)
+    i_used = i_used + phys
+
+    # merge: hit -> touch rows; miss -> insert rows; gate by is_ext
+    n_etags = jnp.where(e_hit, etags, i_tags)
+    n_evalid = jnp.where(e_hit, evalid, i_valid)
+    n_edirty = jnp.where(e_hit, t_dirty, i_dirty)
+    n_elru = jnp.where(e_hit, t_lru, i_lru)
+    n_esize = jnp.where(e_hit, esize, i_size)
+    n_eused = jnp.where(e_hit, eused, i_used)
+    st = st._replace(
+        ext_tags=_upd(st.ext_tags, jnp.where(is_ext, n_etags, etags), ext_set),
+        ext_valid=_upd(st.ext_valid, jnp.where(is_ext, n_evalid, evalid), ext_set),
+        ext_dirty=_upd(st.ext_dirty, jnp.where(is_ext, n_edirty, edirty), ext_set),
+        ext_lru=_upd(st.ext_lru, jnp.where(is_ext, n_elru, elru), ext_set),
+        ext_size=_upd(st.ext_size, jnp.where(is_ext, n_esize, esize), ext_set),
+        ext_used=_upd(st.ext_used, jnp.where(is_ext, n_eused, eused), ext_set),
+    )
+
+    # Bloom maintenance (Fig. 6(b)): every ext access inserts into both
+    # filters; n += (tag not already in BF2); swap at n >= associativity.
+    mask = bloomlib._bit_mask(bits, words)
+    was_in_bf2 = bloomlib._test(bf2, bits)
+    u_bf1, u_bf2 = bf1 | mask, bf2 | mask
+    u_n = n + jnp.where(was_in_bf2, 0, 1).astype(jnp.int32)
+    do_swap = u_n >= cfg.ext_ways    # logical associativity
+    n_bf1 = jnp.where(do_swap, u_bf2, u_bf1)
+    n_bf2 = jnp.where(do_swap, jnp.zeros_like(u_bf2), u_bf2)
+    u_n = jnp.where(do_swap, 0, u_n)
+    use_bloom = is_ext & jnp.bool_(cfg.predictor is Predictor.BLOOM)
+    st = st._replace(
+        bf1=_upd(st.bf1, jnp.where(use_bloom, n_bf1, bf1), ext_set),
+        bf2=_upd(st.bf2, jnp.where(use_bloom, n_bf2, bf2), ext_set),
+        n_mru=_upd(st.n_mru, jnp.where(use_bloom, u_n, n), ext_set),
+    )
+
+    # ----- statistics -------------------------------------------------------
+    i1 = lambda b: b.astype(jnp.int32)
+    f1 = lambda b: b.astype(jnp.float32)
+    ext_hit_e = is_ext & e_hit                       # served by ext tier
+    ext_fp = is_ext & ~e_hit & pred                  # forwarded, missed
+    ext_pm = is_ext & ~pred                          # straight to DRAM
+    conv_hit_e = sel_c & c_hit
+    conv_miss_e = sel_c & ~c_hit
+    dram = conv_miss_e | (is_ext & ~e_hit)
+    wb = i1(conv_miss_e & c_evict_wb) + jnp.where(is_ext & ~e_hit, wbs, 0)
+
+    lat = (f1(conv_hit_e) * lat_ch + f1(conv_miss_e) * lat_cm
+           + f1(ext_hit_e) * lat_eh + f1(ext_fp) * lat_em + f1(ext_pm) * lat_pm)
+    energy = (f1(sel_c) * e_conv                    # conv lookup+data
+              + f1(ext_hit_e | ext_fp) * e_ext      # ext lookup+data
+              + f1(ext_pm) * e_ext * 0.05           # predictor-only energy
+              + f1(dram) * e_dram + f1(wb > 0) * wb * e_dram)
+    # Extra interconnect traffic of the extended tier: one 128 B data leg
+    # per lookup that reaches a cache-mode core (reply on hit, fp probe),
+    # one per insert payload, plus dirty writebacks leaving the core.
+    # Predicted misses cost nothing extra (Fig. 5: same path as a
+    # conventional miss); request headers are folded into the measured
+    # per-core ext bandwidth (34 GB/s is end-to-end for 128 B blocks).
+    noc = (i1(ext_hit_e | ext_fp) + i1(is_ext & ~e_hit)
+           + jnp.where(is_ext & ~e_hit, wbs, 0)) * BLOCK_BYTES
+
+    s = st.stats
+    st = st._replace(stats=Stats(
+        conv_hits=s.conv_hits + i1(conv_hit_e),
+        conv_misses=s.conv_misses + i1(conv_miss_e),
+        ext_hits=s.ext_hits + i1(ext_hit_e),
+        ext_false_pos=s.ext_false_pos + i1(ext_fp),
+        ext_pred_miss=s.ext_pred_miss + i1(ext_pm),
+        ext_true_miss=s.ext_true_miss + i1(is_ext & ~e_hit),
+        dram_accesses=s.dram_accesses + i1(dram),
+        writebacks=s.writebacks + wb,
+        latency_ns=s.latency_ns + lat,
+        energy_nJ=s.energy_nJ + energy,
+        noc_bytes=s.noc_bytes + f1(noc),
+        conv_bytes=s.conv_bytes + f1(sel_c) * BLOCK_BYTES,
+        dram_bytes=s.dram_bytes + f1(dram) * BLOCK_BYTES
+        + f1(wb > 0) * wb * BLOCK_BYTES,
+        bloom_swaps=s.bloom_swaps + i1(use_bloom & do_swap),
+    ))
+    return st
+
+
+def simulate(cfg: MorpheusConfig, addrs: jnp.ndarray, writes: jnp.ndarray,
+             levels: jnp.ndarray, warmup: int = 0) -> Stats:
+    """Replay a request trace through the controller via ``lax.scan``.
+
+    The first ``warmup`` accesses update cache/predictor state but are
+    excluded from the returned stats (cold/compulsory misses would
+    otherwise dominate short traces and mask steady-state behaviour)."""
+    init = make_state(cfg)
+    zeros = _zero_stats()
+
+    def body(st, req):
+        a, w, l, i = req
+        st = step(cfg, st, a, w, l)
+        if warmup:
+            stats = jax.tree.map(
+                lambda s, z: jnp.where(i < warmup, z, s), st.stats, zeros)
+            st = st._replace(stats=stats)
+        return st, ()
+
+    n = addrs.shape[0]
+    final, _ = jax.lax.scan(body, init, (addrs.astype(jnp.uint32),
+                                         writes.astype(jnp.bool_),
+                                         levels.astype(jnp.int32),
+                                         jnp.arange(n, dtype=jnp.int32)))
+    return final.stats
+
+
+simulate_jit = jax.jit(simulate, static_argnums=(0, 4))

@@ -1,0 +1,74 @@
+"""Energy and latency models.
+
+Two constant sets:
+
+* ``PaperGPU`` — the RTX-3080-era constants the paper measures/uses (§4.1.2
+  Fig. 5, §5 Fig. 11, §7.5).  Used by the cache simulator so Fig. 12/13
+  reproduction is apples-to-apples with the paper.
+* ``TPUv5e`` — the TPU-pod analogue used by the serving tier and roofline
+  (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI per the assignment).
+
+All latencies in ns, energies in pJ/B, bandwidths in B/s.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TierCosts:
+    hit_latency_ns: float
+    miss_latency_ns: float          # latency of a miss *serviced below*
+    bandwidth_Bps: float
+    energy_pJ_per_B: float
+
+
+@dataclass(frozen=True)
+class PaperGPU:
+    """Constants from the paper (Figs. 5, 11; §5 text; §7.5)."""
+
+    # conventional LLC: ~160 ns hit, 608 ns miss (DRAM), ~300 GB/s/partition
+    conv_llc: TierCosts = TierCosts(160.0, 608.0, 300e9, 10.0)
+    # extended LLC (register file + L1, 32+16 warps, §5 'Combining'):
+    # 185 ns kernel-side + interconnect => ~300 ns effective hit; miss 773 ns
+    ext_llc: TierCosts = TierCosts(300.0, 773.0, 34e9, 61.0)
+    # off-chip GDDR6X
+    dram: TierCosts = TierCosts(608.0, 608.0, 760e9, 170.0)
+    # per-chip-cache-mode capacity (bytes): register file + L1 combined
+    # (§5: 328 KiB per cache-mode SM)
+    ext_capacity_per_core: int = 328 * 1024
+    # predicted-miss path: as fast as a conventional miss (Fig. 5)
+    predicted_miss_latency_ns: float = 608.0
+    # Morpheus controller adders (§7.5)
+    controller_power_frac: float = 0.0093
+    controller_storage_bytes: int = 21 * 1024
+    # GPU-level power model (W) for perf/W: rough RTX 3080 components
+    core_power_W: float = 3.2          # per active SM
+    static_power_W: float = 60.0
+
+
+@dataclass(frozen=True)
+class TPUv5e:
+    """TPU-pod analogue constants (assignment-provided roofline numbers)."""
+
+    peak_flops_bf16: float = 197e12
+    hbm_Bps: float = 819e9
+    ici_Bps_per_link: float = 50e9
+    # two-tier KV cache analogue costs
+    local_hbm: TierCosts = TierCosts(1_000.0, 5_000.0, 819e9, 4.0)
+    remote_hbm: TierCosts = TierCosts(4_000.0, 9_000.0, 50e9, 12.0)
+    host_offload: TierCosts = TierCosts(50_000.0, 50_000.0, 8e9, 60.0)
+    vmem_bytes: int = 128 * 1024 * 1024
+    hbm_bytes: int = 16 * (1 << 30)
+
+
+def perf_per_watt(ipc: float, active_cores: int, cache_cores: int,
+                  gpu: PaperGPU = PaperGPU(), *, morpheus_on: bool = True,
+                  mem_energy_W: float = 0.0) -> float:
+    """Paper §7.2 metric: IPC / average power.  Cache-mode cores burn core
+    power too (they execute the helper kernel); power-gated cores don't."""
+    power = gpu.static_power_W + gpu.core_power_W * (active_cores + cache_cores)
+    power += mem_energy_W
+    if morpheus_on:
+        power *= (1.0 + gpu.controller_power_frac)
+    return ipc / power

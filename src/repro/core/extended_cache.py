@@ -1,0 +1,145 @@
+"""Extended-LLC storage model: byte-budgeted, compression-aware sets.
+
+Models the storage the extended-LLC kernel manages inside a cache-mode
+chip's memory units (paper §4.2, §4.3.1).  Each set has a fixed *physical*
+byte budget (``ways * 128`` bytes — what the uncompressed layout would
+hold).  With compression enabled, blocks occupy 32/64/128 physical bytes
+according to their BDI level, so a set can hold up to ``4x ways`` logical
+blocks (paper Fig. 9).  Without compression every block occupies 128 B and
+this degenerates to a plain ``ways``-way set.
+
+Insertion may need multiple LRU evictions to free enough bytes (a 128-B
+insert can displace up to four 32-B blocks); the eviction loop is unrolled
+(bounded by 4) so everything stays jittable inside ``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .compression import BLOCK_BYTES
+from .tag_store import LRU_MAX
+
+MAX_EVICTIONS = 4  # 128 B insert / 32 B min victim
+
+
+class ExtCacheState(NamedTuple):
+    tags: jnp.ndarray   # (num_sets, max_ways) uint32
+    valid: jnp.ndarray  # (num_sets, max_ways) bool
+    dirty: jnp.ndarray  # (num_sets, max_ways) bool
+    lru: jnp.ndarray    # (num_sets, max_ways) uint32
+    size: jnp.ndarray   # (num_sets, max_ways) int32 — physical bytes
+    used: jnp.ndarray   # (num_sets,) int32 — physical bytes occupied
+
+
+class ExtInsertResult(NamedTuple):
+    way: jnp.ndarray         # () int32
+    evictions: jnp.ndarray   # () int32 — valid blocks displaced
+    writebacks: jnp.ndarray  # () int32 — of those, dirty ones
+
+
+def make_state(num_sets: int, ways: int, *, compression: bool) -> ExtCacheState:
+    max_ways = ways * (BLOCK_BYTES // 32) if compression else ways
+    shape = (num_sets, max_ways)
+    return ExtCacheState(
+        tags=jnp.zeros(shape, jnp.uint32),
+        valid=jnp.zeros(shape, jnp.bool_),
+        dirty=jnp.zeros(shape, jnp.bool_),
+        lru=jnp.zeros(shape, jnp.uint32),
+        size=jnp.zeros(shape, jnp.int32),
+        used=jnp.zeros((num_sets,), jnp.int32),
+    )
+
+
+def set_budget_bytes(ways: int) -> int:
+    return ways * BLOCK_BYTES
+
+
+def _row(state: ExtCacheState, s: jnp.ndarray):
+    get = lambda a: jax.lax.dynamic_index_in_dim(a, s, 0, keepdims=False)
+    return (get(state.tags), get(state.valid), get(state.dirty),
+            get(state.lru), get(state.size), get(state.used))
+
+
+def _write_row(state: ExtCacheState, s, tags, valid, dirty, lru, size, used):
+    put = lambda a, v: jax.lax.dynamic_update_index_in_dim(a, v, s, 0)
+    return ExtCacheState(put(state.tags, tags), put(state.valid, valid),
+                         put(state.dirty, dirty), put(state.lru, lru),
+                         put(state.size, size), put(state.used, used))
+
+
+def lookup(state: ExtCacheState, s: jnp.ndarray, tag: jnp.ndarray
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(hit, way) — Algorithm 1 semantics (valid & tag match, ffs)."""
+    tags, valid, _, _, _, _ = _row(state, s)
+    match = valid & (tags == tag.astype(jnp.uint32))
+    return jnp.any(match), jnp.argmax(match).astype(jnp.int32)
+
+
+def touch(state: ExtCacheState, s: jnp.ndarray, way: jnp.ndarray,
+          *, write: jnp.ndarray | bool = False) -> ExtCacheState:
+    tags, valid, dirty, lru, size, used = _row(state, s)
+    onehot = jnp.arange(lru.shape[0], dtype=jnp.int32) == way
+    lru = jnp.where(onehot, LRU_MAX, jnp.maximum(lru, 1) - 1).astype(jnp.uint32)
+    dirty = dirty | (onehot & jnp.bool_(write))
+    return _write_row(state, s, tags, valid, dirty, lru, size, used)
+
+
+def insert(state: ExtCacheState, s: jnp.ndarray, tag: jnp.ndarray,
+           phys_bytes: jnp.ndarray, budget: int,
+           *, write: jnp.ndarray | bool = False
+           ) -> Tuple[ExtCacheState, ExtInsertResult]:
+    """Insert a block of ``phys_bytes`` into set ``s``, LRU-evicting until
+    it fits within ``budget`` physical bytes (paper §4.2.1 miss handling +
+    §4.3.1 compressed layout)."""
+    tags, valid, dirty, lru, size, used = _row(state, s)
+    ways = lru.shape[0]
+    idx = jnp.arange(ways, dtype=jnp.int32)
+
+    evictions = jnp.int32(0)
+    writebacks = jnp.int32(0)
+    for _ in range(MAX_EVICTIONS):
+        need = (used + phys_bytes) > budget
+        key = jnp.where(valid, lru.astype(jnp.int64), jnp.int64(LRU_MAX) + 1)
+        v = jnp.argmin(key).astype(jnp.int32)        # LRU valid victim
+        can_evict = need & jnp.any(valid)
+        onehot = idx == v
+        evictions += can_evict.astype(jnp.int32)
+        writebacks += (can_evict & dirty[v]).astype(jnp.int32)
+        used = jnp.where(can_evict, used - size[v], used)
+        valid = jnp.where(can_evict & onehot, False, valid)
+        dirty = jnp.where(can_evict & onehot, False, dirty)
+        size = jnp.where(can_evict & onehot, 0, size)
+
+    # place into the first invalid way
+    free_way = jnp.argmax(~valid).astype(jnp.int32)
+    onehot = idx == free_way
+    tags = jnp.where(onehot, tag.astype(jnp.uint32), tags)
+    valid = valid | onehot
+    dirty = jnp.where(onehot, jnp.bool_(write), dirty)
+    size = jnp.where(onehot, phys_bytes, size)
+    lru = jnp.where(onehot, LRU_MAX, jnp.maximum(lru, 1) - 1).astype(jnp.uint32)
+    used = used + phys_bytes
+
+    new_state = _write_row(state, s, tags, valid, dirty, lru, size, used)
+    return new_state, ExtInsertResult(way=free_way, evictions=evictions,
+                                      writebacks=writebacks)
+
+
+# ---------------------------------------------------------------------------
+# Capacity accounting (paper §5 characterization analogue)
+# ---------------------------------------------------------------------------
+
+def capacity_per_cache_chip(*, vmem_budget_bytes: int, hbm_budget_bytes: int,
+                            aux_fraction: float = 0.09) -> dict:
+    """Usable extended-cache bytes one cache-mode chip contributes.
+
+    ``aux_fraction`` mirrors the paper's auxiliary-register overhead (the
+    RTX 3080 register file is 256 KiB of which 239 KiB max was usable =>
+    ~7-9% aux, depending on warp count).
+    """
+    vmem = int(vmem_budget_bytes * (1.0 - aux_fraction))
+    hbm = hbm_budget_bytes  # bulk pool needs no aux carve-out
+    return {"vmem_bytes": vmem, "hbm_bytes": hbm, "total_bytes": vmem + hbm}

@@ -1,0 +1,61 @@
+"""Compute/cache mode-partition policy (paper Table 3 analogue).
+
+The paper determines, offline per application, the number of cores in
+compute mode that maximizes performance; the remainder go to cache mode
+(bounded by 75% of cores, §4.1.3).  This module reproduces that offline
+sweep against the system model, and is also what the serving launcher uses
+to decide how many chips of a pod to dedicate to the extended cache tier.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Sequence
+
+from . import cache_sim as cs
+from . import traces as tr
+
+
+@dataclass(frozen=True)
+class ModeSplit:
+    app: str
+    system: str
+    n_compute: int
+    n_cache: int
+    exec_time_s: float
+
+
+DEFAULT_GRID: Sequence[int] = (10, 14, 18, 24, 32, 40, 48, 56, 62, 68)
+
+
+def best_split(app: str, system: str, *, grid: Sequence[int] = DEFAULT_GRID,
+               length: int = 60_000, seed: int = 0) -> ModeSplit:
+    """Sweep compute-core counts; cache mode gets the rest (Morpheus) or
+    power-gating (IBL).  Returns the fastest split."""
+    spec = cs.SYSTEMS[system]
+    w = tr.WORKLOADS[app]
+    best = None
+    for n_compute in grid:
+        n_cache = 0
+        if spec.morpheus and w.memory_bound:
+            n_cache = min(cs.TOTAL_CORES - n_compute,
+                          int(cs.TOTAL_CORES * cs.MAX_CACHE_FRAC))
+            if n_cache <= 0:
+                continue
+        r = cs.run(app, system, n_compute=n_compute, n_cache=n_cache,
+                   length=length, seed=seed)
+        if best is None or r.exec_time_s < best.exec_time_s:
+            best = ModeSplit(app, system, n_compute, n_cache, r.exec_time_s)
+    assert best is not None
+    return best
+
+
+def table3(systems: Sequence[str] = ("IBL", "Morpheus-Basic", "Morpheus-ALL"),
+           apps: Sequence[str] | None = None, *, length: int = 60_000,
+           ) -> Dict[str, Dict[str, ModeSplit]]:
+    """Paper Table 3: per-app compute-core counts for each system."""
+    apps = list(apps or (tr.MEMORY_BOUND + tr.COMPUTE_BOUND))
+    out: Dict[str, Dict[str, ModeSplit]] = {}
+    for system in systems:
+        out[system] = {app: best_split(app, system, length=length)
+                       for app in apps}
+    return out

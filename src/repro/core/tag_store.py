@@ -1,0 +1,134 @@
+"""Set-associative tag store with LRU counters, valid and dirty bits.
+
+This is the functional model of the metadata the extended-LLC kernel keeps
+in the metadata register (paper Fig. 8 (3)-(4), (7)): per block an LRU
+counter, a dirty bit, a valid bit, and the tag.  The same structure also
+models the *conventional* LLC in the cache simulator (the paper's baseline
+LLC is hardware-managed but behaviourally identical: set-associative, LRU).
+
+LRU semantics follow paper Algorithm 1 lines 8-12 exactly:
+  * on hit, the hit way's counter is reset to ``LRU_MAX`` (0xfff);
+  * all other ways' counters are decremented (saturating at 0);
+  * the replacement victim is the way with the minimum counter, invalid
+    ways first (modelled as counter -1 for selection purposes).
+
+All state lives in flat arrays indexed ``(num_sets, ways)`` so a trace can
+be replayed under ``jax.lax.scan``; per-access work is O(ways) via dynamic
+row indexing.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LRU_MAX_INT = 0xFFF  # paper Algorithm 1 line 9
+LRU_MAX = jnp.uint32(LRU_MAX_INT)
+
+
+class TagStoreState(NamedTuple):
+    tags: jnp.ndarray    # (num_sets, ways) uint32
+    valid: jnp.ndarray   # (num_sets, ways) bool
+    dirty: jnp.ndarray   # (num_sets, ways) bool
+    lru: jnp.ndarray     # (num_sets, ways) uint32 — decrementing counters
+
+
+class LookupResult(NamedTuple):
+    hit: jnp.ndarray         # () bool
+    way: jnp.ndarray         # () int32 — hit way (valid only when hit)
+
+
+class InsertResult(NamedTuple):
+    way: jnp.ndarray            # () int32 — way written
+    evicted_valid: jnp.ndarray  # () bool — a valid block was evicted
+    evicted_dirty: jnp.ndarray  # () bool — ... and it was dirty (writeback)
+    evicted_tag: jnp.ndarray    # () uint32
+
+
+def make_state(num_sets: int, ways: int) -> TagStoreState:
+    return TagStoreState(
+        tags=jnp.zeros((num_sets, ways), dtype=jnp.uint32),
+        valid=jnp.zeros((num_sets, ways), dtype=jnp.bool_),
+        dirty=jnp.zeros((num_sets, ways), dtype=jnp.bool_),
+        lru=jnp.zeros((num_sets, ways), dtype=jnp.uint32),
+    )
+
+
+def _row(state: TagStoreState, set_idx: jnp.ndarray):
+    get = lambda a: jax.lax.dynamic_index_in_dim(a, set_idx, 0, keepdims=False)
+    return get(state.tags), get(state.valid), get(state.dirty), get(state.lru)
+
+
+def _write_row(state: TagStoreState, set_idx: jnp.ndarray, tags, valid, dirty, lru
+               ) -> TagStoreState:
+    put = lambda a, v: jax.lax.dynamic_update_index_in_dim(a, v, set_idx, 0)
+    return TagStoreState(
+        tags=put(state.tags, tags),
+        valid=put(state.valid, valid),
+        dirty=put(state.dirty, dirty),
+        lru=put(state.lru, lru),
+    )
+
+
+def lookup(state: TagStoreState, set_idx: jnp.ndarray, tag: jnp.ndarray
+           ) -> LookupResult:
+    """Tag lookup (paper Algorithm 1 lines 2-7): valid & tag-match per way,
+    ballot -> first-set index.  Pure query; LRU update is in ``touch``."""
+    tags, valid, _, _ = _row(state, set_idx)
+    match = valid & (tags == tag.astype(jnp.uint32))          # line 2-3
+    hit = jnp.any(match)                                      # line 4-5 ballot
+    way = jnp.argmax(match).astype(jnp.int32)                 # line 6 ffs
+    return LookupResult(hit=hit, way=way)
+
+
+def touch(state: TagStoreState, set_idx: jnp.ndarray, way: jnp.ndarray,
+          *, write: jnp.ndarray | bool = False) -> TagStoreState:
+    """LRU update on hit (Algorithm 1 lines 8-12) + dirty set on write hit."""
+    tags, valid, dirty, lru = _row(state, set_idx)
+    ways = lru.shape[0]
+    onehot = jnp.arange(ways, dtype=jnp.int32) == way
+    # hit way -> LRU_MAX; others -> saturating decrement
+    dec = jnp.maximum(lru, 1) - 1
+    lru = jnp.where(onehot, LRU_MAX, dec).astype(jnp.uint32)
+    dirty = dirty | (onehot & jnp.bool_(write))
+    return _write_row(state, set_idx, tags, valid, dirty, lru)
+
+
+def victim(state: TagStoreState, set_idx: jnp.ndarray) -> jnp.ndarray:
+    """LRU victim way: invalid ways first, else min counter."""
+    _, valid, _, lru = _row(state, set_idx)
+    # invalid => effective key -1 so they are always chosen first
+    key = jnp.where(valid, lru.astype(jnp.int64), -1)
+    return jnp.argmin(key).astype(jnp.int32)
+
+
+def insert(state: TagStoreState, set_idx: jnp.ndarray, tag: jnp.ndarray,
+           *, write: jnp.ndarray | bool = False
+           ) -> Tuple[TagStoreState, InsertResult]:
+    """Fill a block after a miss: pick LRU victim, record writeback need,
+    install the new tag with counter LRU_MAX (it is now MRU)."""
+    tags, valid, dirty, lru = _row(state, set_idx)
+    ways = lru.shape[0]
+    key = jnp.where(valid, lru.astype(jnp.int64), -1)
+    w = jnp.argmin(key).astype(jnp.int32)
+    onehot = jnp.arange(ways, dtype=jnp.int32) == w
+
+    ev_valid = valid[w]
+    ev_dirty = valid[w] & dirty[w]
+    ev_tag = tags[w]
+
+    tags = jnp.where(onehot, tag.astype(jnp.uint32), tags)
+    valid = valid | onehot
+    dirty = jnp.where(onehot, jnp.bool_(write), dirty)
+    dec = jnp.maximum(lru, 1) - 1
+    lru = jnp.where(onehot, LRU_MAX, dec).astype(jnp.uint32)
+
+    new_state = _write_row(state, set_idx, tags, valid, dirty, lru)
+    return new_state, InsertResult(way=w, evicted_valid=ev_valid,
+                                   evicted_dirty=ev_dirty, evicted_tag=ev_tag)
+
+
+def occupancy(state: TagStoreState) -> jnp.ndarray:
+    """Fraction of valid blocks (diagnostic)."""
+    return jnp.mean(state.valid.astype(jnp.float32))

@@ -1,0 +1,84 @@
+"""Synthetic LM data pipeline: seeded token streams, document packing,
+host-side sharding onto the mesh.
+
+Real deployments swap ``SyntheticSource`` for a file-backed source; the
+packing/sharding layers are source-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class SyntheticSource:
+    """Zipf-distributed token 'documents' with EOS separators — enough
+    structure for a LM loss to fall measurably in a few hundred steps."""
+    vocab_size: int
+    seed: int = 0
+    mean_doc_len: int = 64
+    zipf_a: float = 1.3
+
+    def documents(self) -> Iterator[np.ndarray]:
+        rng = np.random.default_rng(self.seed)
+        top = max(self.vocab_size - 2, 2)
+        while True:
+            n = max(4, int(rng.exponential(self.mean_doc_len)))
+            toks = rng.zipf(self.zipf_a, size=n) % top + 1
+            # inject n-gram structure: repeat a motif so the model has
+            # something learnable
+            if n >= 12:
+                motif = toks[:4]
+                toks[4:8] = motif
+            yield toks.astype(np.int32)
+
+
+class PackedBatcher:
+    """Greedy document packing into fixed (batch, seq) windows with EOS=0
+    separators; targets are next-token shifted."""
+
+    def __init__(self, source: SyntheticSource, batch: int, seq: int):
+        self.source = source
+        self.batch = batch
+        self.seq = seq
+        self._docs = source.documents()
+        self._buf = np.zeros(0, np.int32)
+
+    def _fill(self, n: int) -> np.ndarray:
+        while len(self._buf) < n:
+            d = next(self._docs)
+            self._buf = np.concatenate([self._buf, d, [0]])
+        out, self._buf = self._buf[:n], self._buf[n:]
+        return out
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        need = self.batch * (self.seq + 1)
+        flat = self._fill(need).reshape(self.batch, self.seq + 1)
+        return {"tokens": flat[:, :-1].copy(),
+                "targets": flat[:, 1:].copy()}
+
+
+def shard_batch(batch: Dict[str, np.ndarray], mesh: Optional[Mesh]
+                ) -> Dict[str, jnp.ndarray]:
+    """Place a host batch onto the mesh (batch dim over data axes)."""
+    if mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    out = {}
+    for k, v in batch.items():
+        spec = P(axes, *([None] * (v.ndim - 1))) if axes else P()
+        out[k] = jax.device_put(jnp.asarray(v), NamedSharding(mesh, spec))
+    return out
+
+
+def make_pipeline(vocab_size: int, batch: int, seq: int, *, seed: int = 0
+                  ) -> PackedBatcher:
+    return PackedBatcher(SyntheticSource(vocab_size, seed=seed), batch, seq)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the Morpheus hot paths.
+
+<name>.py holds the pl.pallas_call + BlockSpec kernel, ops.py the jit'd
+public wrappers, ref.py the pure-jnp oracles used by the allclose tests.
+Kernels run in interpret mode on CPU (this container) and compiled on TPU.
+"""
+from . import bdi, bloom_query, decode_attn, gather_blocks, ops, ref, tag_lookup
+
+__all__ = ["bdi", "bloom_query", "decode_attn", "gather_blocks", "ops",
+           "ref", "tag_lookup"]

@@ -1,0 +1,95 @@
+"""Pallas kernels: BDI compression / decompression (paper §4.3.1).
+
+Blocks are 128 B = 32 four-byte segments.  Compression classifies each
+block by whether all two's-complement deltas from the base segment fit in
+int8 (HIGH, 4x) / int16 (LOW, 2x) / neither (UNCOMP), and emits the delta
+payload; the base is carried out-of-line (the paper's 'auxiliary
+registers').  All arithmetic is mod-2^32 uint32 — identical to what the
+dynamic-range check costs on the VPU.
+
+Tiling: (BLOCKS_PER_TILE, 32) uint32 tiles in VMEM; one grid dim over the
+block batch.  Used on the serving path fused around the block gather
+(decompress-on-read), see kernels/ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.compression import HIGH, LOW, UNCOMP
+
+BLOCKS_PER_TILE = 256
+SEGMENTS = 32
+
+
+def _compress_kernel(blocks_ref, level_ref, base_ref, payload_ref):
+    blocks = blocks_ref[...]                    # (N, 32) uint32
+    base = blocks[:, 0]
+    deltas = blocks - base[:, None]             # mod-2^32
+    hi8 = jnp.uint32(127)
+    lo8 = jnp.uint32(0x100000000 - 128)
+    hi16 = jnp.uint32(32767)
+    lo16 = jnp.uint32(0x100000000 - 32768)
+    fits8 = jnp.all((deltas <= hi8) | (deltas >= lo8), axis=1)
+    fits16 = jnp.all((deltas <= hi16) | (deltas >= lo16), axis=1)
+    level = jnp.where(fits8, HIGH, jnp.where(fits16, LOW, UNCOMP)
+                      ).astype(jnp.int32)
+    level_ref[...] = level
+    base_ref[...] = base
+    payload_ref[...] = jnp.where((level == UNCOMP)[:, None], blocks, deltas)
+
+
+def _decompress_kernel(level_ref, base_ref, payload_ref, out_ref):
+    level = level_ref[...]
+    base = base_ref[...]
+    payload = payload_ref[...]
+    restored = base[:, None] + payload          # mod-2^32 add inverts
+    out_ref[...] = jnp.where((level == UNCOMP)[:, None], payload, restored)
+
+
+def _tiles(n: int):
+    bt = min(BLOCKS_PER_TILE, n)
+    assert n % bt == 0, (n, bt)
+    return bt, (n // bt,)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bdi_compress(blocks: jnp.ndarray, *, interpret: bool = True):
+    """blocks (N, 32) u32 -> (level (N,) i32, base (N,) u32, payload (N,32))."""
+    n, segs = blocks.shape
+    assert segs == SEGMENTS
+    bt, grid = _tiles(n)
+    row = lambda i: (i, 0)
+    vec = lambda i: (i,)
+    return pl.pallas_call(
+        _compress_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, segs), row)],
+        out_specs=[pl.BlockSpec((bt,), vec), pl.BlockSpec((bt,), vec),
+                   pl.BlockSpec((bt, segs), row)],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.uint32),
+                   jax.ShapeDtypeStruct((n, segs), jnp.uint32)],
+        interpret=interpret,
+    )(blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bdi_decompress(level: jnp.ndarray, base: jnp.ndarray,
+                   payload: jnp.ndarray, *, interpret: bool = True):
+    n, segs = payload.shape
+    bt, grid = _tiles(n)
+    row = lambda i: (i, 0)
+    vec = lambda i: (i,)
+    return pl.pallas_call(
+        _decompress_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt,), vec), pl.BlockSpec((bt,), vec),
+                  pl.BlockSpec((bt, segs), row)],
+        out_specs=pl.BlockSpec((bt, segs), row),
+        out_shape=jax.ShapeDtypeStruct((n, segs), jnp.uint32),
+        interpret=interpret,
+    )(level, base, payload)

@@ -1,0 +1,55 @@
+"""Pallas kernel: indirect block gather — the Indirect-MOV analogue.
+
+The paper needs a new ISA instruction (§4.3.2) because GPU register files
+are immediate-indexed; on TPU the data array lives in VMEM which is
+address-indexed, so the 'optimized Indirect-MOV' is simply a dynamic-index
+row read inside the kernel.  This kernel is the extended-LLC *data array
+access* path: given per-set way indices (from tag_lookup), it pulls the hit
+block out of each set's (ways, words) data tile.
+
+Tiling: one grid step owns SET_BLOCK sets; the (SET_BLOCK, ways, words)
+data tile sits in VMEM.  The gather is a one-hot contraction over the ways
+axis — on TPU this maps to a VPU select-accumulate (no serialized loads),
+which is the whole point of the adaptation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SET_BLOCK = 64
+
+
+def _gather_kernel(way_ref, data_ref, out_ref):
+    data = data_ref[...]                       # (SB, W, words) uint32
+    way = way_ref[...]                         # (SB,) int32
+    w_iota = jax.lax.broadcasted_iota(jnp.int32, data.shape[:2], 1)
+    onehot = (w_iota == way[:, None])          # (SB, W)
+    # one-hot select over ways (VPU select + OR-reduce; rows are disjoint
+    # so OR == select — exact for uint32 payloads)
+    sel = jnp.where(onehot[..., None], data, jnp.uint32(0))
+    out = sel[:, 0]
+    for i in range(1, sel.shape[1]):
+        out = out | sel[:, i]
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_blocks(data: jnp.ndarray, way: jnp.ndarray, *,
+                  interpret: bool = True):
+    """data (S, W, words) u32; way (S,) i32 -> (S, words) u32."""
+    s, w, words = data.shape
+    sb = min(SET_BLOCK, s)
+    assert s % sb == 0, (s, sb)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(s // sb,),
+        in_specs=[pl.BlockSpec((sb,), lambda i: (i,)),
+                  pl.BlockSpec((sb, w, words), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((sb, words), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, words), jnp.uint32),
+        interpret=interpret,
+    )(way, data)

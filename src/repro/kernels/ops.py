@@ -1,0 +1,69 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; TPU is
+the *target*) and False on real TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import bdi as _bdi
+from . import bloom_query as _bq
+from . import decode_attn as _da
+from . import gather_blocks as _gb
+from . import tag_lookup as _tl
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def tag_lookup(tags, valid, lru, req, *, interpret=None):
+    """Algorithm-1 tag lookup over all sets: (hit, way, new_lru)."""
+    it = _interpret_default() if interpret is None else interpret
+    return _tl.tag_lookup(tags, valid.astype(jnp.int32), lru, req,
+                          interpret=it)
+
+
+def bdi_compress(blocks, *, interpret=None):
+    it = _interpret_default() if interpret is None else interpret
+    return _bdi.bdi_compress(blocks, interpret=it)
+
+
+def bdi_decompress(level, base, payload, *, interpret=None):
+    it = _interpret_default() if interpret is None else interpret
+    return _bdi.bdi_decompress(level, base, payload, interpret=it)
+
+
+def gather_blocks(data, way, *, interpret=None):
+    """Indirect-MOV data-array access: select the hit way's block."""
+    it = _interpret_default() if interpret is None else interpret
+    return _gb.gather_blocks(data, way, interpret=it)
+
+
+def bloom_query(filters, tags, *, interpret=None):
+    """(predicted (Q,) i32, insert_masks (Q, words) u32)."""
+    it = _interpret_default() if interpret is None else interpret
+    return _bq.bloom_query(filters, tags, interpret=it)
+
+
+def decode_attention(q, k, v, valid, *, interpret=None, t_block=None):
+    it = _interpret_default() if interpret is None else interpret
+    kw = {"t_block": t_block} if t_block else {}
+    return _da.decode_attention(q, k, v, valid, interpret=it, **kw)
+
+
+def cached_block_read(data, way, level, base, *, interpret=None):
+    """Fused extended-LLC read path: Indirect-MOV gather + BDI
+    decompress-on-read (beyond-paper fusion — one VMEM round trip)."""
+    payload = gather_blocks(data, way, interpret=interpret)
+    return bdi_decompress(level, base, payload, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, interpret=None):
+    from . import flash_attn as _fa
+    it = _interpret_default() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, interpret=it)

@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bloom import _HASH_MULTIPLIERS, NUM_HASHES
+from ..core.compression import HIGH, LOW, UNCOMP
+from ..core.tag_store import LRU_MAX
+
+Array = jnp.ndarray
+
+
+# ----------------------------------------------------------- tag lookup
+
+def tag_lookup(tags: Array, valid: Array, lru: Array, req: Array
+               ) -> Tuple[Array, Array, Array]:
+    """Vectorized Algorithm 1 over sets.
+
+    tags/valid/lru: (S, W); req: (S,) request tag per set (one warp per set).
+    Returns (hit (S,), way (S,), new_lru (S, W))."""
+    match = valid.astype(bool) & (tags == req[:, None])          # lines 2-3
+    hit = jnp.any(match, axis=1)                                 # ballot
+    way = jnp.argmax(match, axis=1).astype(jnp.int32)            # ffs
+    onehot = jax.nn.one_hot(way, tags.shape[1], dtype=bool) & hit[:, None]
+    dec = jnp.maximum(lru, 1) - 1
+    new_lru = jnp.where(onehot, LRU_MAX, jnp.where(hit[:, None], dec, lru))
+    return hit, way, new_lru.astype(jnp.uint32)
+
+
+# ----------------------------------------------------------------- BDI
+
+def bdi_compress(blocks: Array) -> Tuple[Array, Array, Array]:
+    """blocks (N, 32) u32 -> (level (N,), base (N,), payload (N, 32))."""
+    base = blocks[:, 0]
+    deltas = blocks - base[:, None]          # mod-2^32 two's complement
+    hi8, lo8 = jnp.uint32(127), jnp.uint32(0x100000000 - 128)
+    hi16, lo16 = jnp.uint32(32767), jnp.uint32(0x100000000 - 32768)
+    fits8 = jnp.all((deltas <= hi8) | (deltas >= lo8), axis=1)
+    fits16 = jnp.all((deltas <= hi16) | (deltas >= lo16), axis=1)
+    level = jnp.where(fits8, HIGH, jnp.where(fits16, LOW, UNCOMP)
+                      ).astype(jnp.int32)
+    payload = jnp.where((level == UNCOMP)[:, None], blocks, deltas)
+    return level, base, payload
+
+
+def bdi_decompress(level: Array, base: Array, payload: Array) -> Array:
+    restored = base[:, None] + payload
+    return jnp.where((level == UNCOMP)[:, None], payload, restored)
+
+
+# --------------------------------------------------------- gather blocks
+
+def gather_blocks(data: Array, way: Array) -> Array:
+    """Indirect-MOV: data (S, W, words) u32, way (S,) -> (S, words)."""
+    return jnp.take_along_axis(
+        data, way[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+
+
+# ----------------------------------------------------------- bloom query
+
+def bloom_hash_bits(tag: Array, num_bits: int) -> Array:
+    tag = tag.astype(jnp.uint32)
+    muls = jnp.asarray(_HASH_MULTIPLIERS[:NUM_HASHES], dtype=jnp.uint32)
+    h = (tag[..., None] * muls) ^ ((tag[..., None] * muls) >> jnp.uint32(15))
+    return (h % jnp.uint32(num_bits)).astype(jnp.int32)
+
+
+def bloom_query(filters: Array, tags: Array) -> Array:
+    """filters (Q, words) u32 (already gathered per query), tags (Q,) u32
+    -> predicted hit (Q,) bool."""
+    words = filters.shape[1]
+    bits = bloom_hash_bits(tags, words * 32)          # (Q, K)
+    word_idx = bits // 32
+    bit_idx = (bits % 32).astype(jnp.uint32)
+    w = jnp.take_along_axis(filters, word_idx, axis=1)
+    present = ((w >> bit_idx) & jnp.uint32(1)) == 1
+    return jnp.all(present, axis=1)
+
+
+def bloom_insert(filters: Array, tags: Array) -> Array:
+    """OR the K hash bits of each tag into its filter row."""
+    words = filters.shape[1]
+    bits = bloom_hash_bits(tags, words * 32)          # (Q, K)
+    word_idx = bits // 32                              # (Q, K)
+    one = jnp.uint32(1)
+    masks = jnp.zeros_like(filters)
+    for i in range(bits.shape[1]):
+        m = (one << (bits[:, i] % 32).astype(jnp.uint32))
+        masks = masks.at[jnp.arange(filters.shape[0]), word_idx[:, i]].set(
+            masks[jnp.arange(filters.shape[0]), word_idx[:, i]] | m)
+    return filters | masks
+
+
+# ----------------------------------------------------------- decode attn
+
+def decode_attention(q: Array, k: Array, v: Array, valid: Array) -> Array:
+    """Single-token decode attention.
+
+    q (B, H, hd); k/v (B, T, KV, hd); valid (B, T) bool mask.
+    Returns (B, H, hd) in f32."""
+    b, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bngd,btnd->bngt", qg, k.astype(jnp.float32))
+    logits *= hd ** -0.5
+    logits = jnp.where(valid[:, None, None, :], logits, -2e38)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngt,btnd->bngd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, hd)
+
+
+# ------------------------------------------------------------ flash attn
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, softcap: float = 0.0,
+                    scale=None) -> Array:
+    """Oracle for kernels/flash_attn.py: materialized-scores attention.
+
+    q (B, S, H, hd); k (B, T, KV, hd); v (B, T, KV, hdv) -> (B, S, H, hdv).
+    """
+    b, s, h, hd = q.shape
+    t, kvh, hdv = k.shape[1], k.shape[2], v.shape[3]
+    g = h // kvh
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(b, s, kvh, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bsngd,btnd->bnsgt", qg,
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool) if not causal else (j <= i)
+    if window:
+        mask = mask & (i - j < window)
+    logits = jnp.where(mask[None, None, :, None, :], logits, -2e38)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnsgt,btnd->bsngd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hdv).astype(q.dtype)

@@ -1,0 +1,77 @@
+"""Pallas kernel: extended-LLC tag lookup + LRU update (paper Algorithm 1).
+
+Hardware mapping (DESIGN.md §2): one *warp owns one cache set* becomes one
+*grid program instance owns a tile of sets*; the warp's 32 lanes comparing
+32 ways in parallel become the VPU lanes comparing the way dimension; the
+``ballot_sync``/``ffs`` pair becomes a masked reduce + argmax over lanes —
+no divergence, which is exactly why this layout is TPU-native.
+
+Tiling: sets are tiled ``SET_BLOCK`` per program; the (SET_BLOCK, ways)
+metadata tiles live in VMEM (ways <= 128 so a tile is a few KiB; the MXU is
+not involved — this is a VPU kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.tag_store import LRU_MAX_INT
+
+SET_BLOCK = 256
+
+
+def _tag_lookup_kernel(req_ref, tags_ref, valid_ref, lru_ref,
+                       hit_ref, way_ref, newlru_ref):
+    tags = tags_ref[...]                       # (SB, W) uint32
+    valid = valid_ref[...] != 0                # (SB, W)
+    lru = lru_ref[...]                         # (SB, W) uint32
+    req = req_ref[...]                         # (SB,) uint32
+
+    match = valid & (tags == req[:, None])             # Alg.1 lines 2-3
+    hit = jnp.any(match, axis=1)                       # ballot_sync
+    way = jnp.argmax(match, axis=1).astype(jnp.int32)  # ffs
+    w_iota = jax.lax.broadcasted_iota(jnp.int32, tags.shape, 1)
+    onehot = (w_iota == way[:, None]) & hit[:, None]
+    dec = jnp.maximum(lru, 1) - 1                      # saturating decrement
+    new_lru = jnp.where(onehot, jnp.uint32(LRU_MAX_INT),
+                        jnp.where(hit[:, None], dec, lru))
+
+    hit_ref[...] = hit.astype(jnp.int32)
+    way_ref[...] = way
+    newlru_ref[...] = new_lru.astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tag_lookup(tags: jnp.ndarray, valid: jnp.ndarray, lru: jnp.ndarray,
+               req: jnp.ndarray, *, interpret: bool = True):
+    """tags/valid/lru (S, W); req (S,).  Returns (hit, way, new_lru)."""
+    s, w = tags.shape
+    sb = min(SET_BLOCK, s)
+    assert s % sb == 0, (s, sb)
+    grid = (s // sb,)
+    row = lambda i: (i, 0)
+    vec = lambda i: (i,)
+    return pl.pallas_call(
+        _tag_lookup_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb,), vec),
+            pl.BlockSpec((sb, w), row),
+            pl.BlockSpec((sb, w), row),
+            pl.BlockSpec((sb, w), row),
+        ],
+        out_specs=[
+            pl.BlockSpec((sb,), vec),
+            pl.BlockSpec((sb,), vec),
+            pl.BlockSpec((sb, w), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+            jax.ShapeDtypeStruct((s, w), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(req, tags, valid, lru)

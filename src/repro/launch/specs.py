@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape)`` returns the batch pytree for the shape's kind;
+``abstract_params``/``abstract_caches`` eval_shape the model's state.
+Modality frontends are stubs exactly as assigned: [audio] archs get
+precomputed frame embeddings, [vlm] archs get precomputed patch embeddings
+plus M-RoPE position streams.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..configs.base import ArchConfig
+from ..configs.shapes import ShapeConfig
+from ..models import layers as L
+from ..models.transformer import LM
+
+ENC_FRAMES = 1024       # audio stub: encoder frame count
+VLM_PATCHES = 256       # vision stub: patch prefix length
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": sds((b, s), i32)}
+        if shape.kind == "train":
+            batch["targets"] = sds((b, s), i32)
+        if cfg.is_encdec:
+            batch["frame_embeds"] = sds((b, ENC_FRAMES, cfg.d_model),
+                                        jnp.float32)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = sds((b, VLM_PATCHES, cfg.d_model),
+                                        jnp.float32)
+        if cfg.mrope_sections is not None:
+            batch["positions"] = sds((3, b, s), i32)
+        return batch
+    # decode: one new token against a seq_len-sized cache
+    return {"tokens": sds((b,), i32), "cur_pos": sds((), i32)}
+
+
+def abstract_params(model: LM):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_caches(model: LM, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+
+    def mk():
+        # cache dtype follows the model dtype.  bf16 KV caches are the TPU
+        # production choice (half the bytes), but the CPU measurement
+        # backend promotes every bf16 dynamic-update-slice to f32 — a full
+        # stacked-cache convert round-trip per layer trip (~26x the real
+        # write traffic) — so the dry-run measures the f32 variant and
+        # EXPERIMENTS.md carries the bf16 projection (see §Perf iter 3).
+        c = model.init_caches(b, s, cache_dtype=L.dtype_of(model.cfg))
+        if model.cfg.is_encdec:
+            c["enc_out"] = jnp.zeros((b, ENC_FRAMES, model.cfg.d_model),
+                                     L.dtype_of(model.cfg))
+        return c
+
+    return jax.eval_shape(mk)

@@ -1,0 +1,6 @@
+"""Model zoo: 10 assigned architectures built from ArchConfig patterns."""
+from . import attention, layers, mamba2, moe, transformer
+from .transformer import LM, build_model
+
+__all__ = ["attention", "layers", "mamba2", "moe", "transformer", "LM",
+           "build_model"]

@@ -1,0 +1,394 @@
+"""Attention: GQA, sliding-window, logit softcap, qk-norm, M-RoPE, MLA,
+cross-attention, and KV-cache decode (ring buffers for local layers).
+
+Layout conventions:
+  activations  x        (B, S, D)
+  queries      q        (B, S, H, hd)
+  keys/values  k, v     (B, T, KV, hd)
+  kv cache     {"k","v": (B, C, KV, hd), "pos": (B, C) int32 (-1 = empty)}
+
+Local (sliding-window) layers allocate ``C = min(seq, window)`` ring-buffer
+caches — at 500k context this is what makes SWA archs feasible.  Position
+metadata travels with the cache so ring overwrite keeps masking exact.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, LayerSpec
+from ..distributed import context as dist_ctx
+from . import layers as L
+
+Array = jnp.ndarray
+NEG = -2.0e38
+
+
+# ------------------------------------------------------------------ params
+
+def init_attn(key, cfg: ArchConfig, dtype, *, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    if cfg.mla and not cross:
+        r, rd, nd, vd = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                         cfg.v_head_dim)
+        return {
+            "wq": (jax.random.normal(ks[0], (d, h * (nd + rd))) * s).astype(dtype),
+            "w_dkv": (jax.random.normal(ks[1], (d, r + rd)) * s).astype(dtype),
+            "kv_norm": L.init_rms(r, dtype),
+            "w_ukv": (jax.random.normal(ks[2], (r, h * (nd + vd)))
+                      * r ** -0.5).astype(dtype),
+            "wo": (jax.random.normal(ks[3], (h * vd, d))
+                   * (h * vd) ** -0.5).astype(dtype),
+        }
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * (h * hd) ** -0.5
+               ).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rms(hd, dtype)
+        p["k_norm"] = L.init_rms(hd, dtype)
+    return p
+
+
+# ------------------------------------------------------------------- core
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Array, cfg: ArchConfig) -> Array:
+    """q (B,S,H,hd) x k/v (B,T,KV,hd) -> (B,S,H,hd), GQA-grouped."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bsngd,btnd->bnsgt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = L.softcap(logits, cfg.logit_softcap)
+    logits = logits + jnp.where(mask[:, None, :, None, :], 0.0, NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnsgt,btnd->bsngd", w, v.astype(jnp.float32))
+    # v's head dim may differ from q/k's (MLA: nope+rope vs v_head_dim)
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+def _full_mask(s: int, kind: str, window: int, *, causal: bool) -> Array:
+    """(S, S) attendance mask for a full (non-cached) forward."""
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = jnp.ones((s, s), bool) if not causal else (j <= i)
+    if kind == "local" and window:
+        m = m & (i - j < window)
+    return m
+
+
+# query-chunked attention kicks in above this sequence length: it bounds
+# the materialized logits to (B, H, CHUNK, T) per scan step instead of
+# (B, H, S, S) — mandatory at 32k+ context.
+CHUNK_THRESHOLD = 8192
+Q_CHUNK = 2048
+
+
+def _sdpa_chunked(q: Array, k: Array, v: Array, cfg: ArchConfig,
+                  kind: str, window: int, *, causal: bool) -> Array:
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    chunk = Q_CHUNK if s % Q_CHUNK == 0 else next(
+        c for c in (1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1) if s % c == 0)
+    nc = s // chunk
+    qs = jnp.moveaxis(q.reshape(b, nc, chunk, h, hd), 1, 0)
+    starts = jnp.arange(nc, dtype=jnp.int32) * chunk
+    jt = jnp.arange(t, dtype=jnp.int32)[None, :]
+
+    def body(_, inp):
+        qi, start = inp
+        i = start + jnp.arange(chunk, dtype=jnp.int32)[:, None]
+        m = jnp.ones((chunk, t), bool) if not causal else (jt <= i)
+        if kind == "local" and window:
+            m = m & (i - jt < window)
+        return None, _sdpa(qi, k, v, m[None], cfg)
+
+    _, outs = jax.lax.scan(body, None, (qs, starts))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, v.shape[-1])
+
+
+def _angles(cfg: ArchConfig, positions: Array) -> Array:
+    hd = cfg.qk_rope_dim if cfg.mla else cfg.resolved_head_dim
+    if cfg.mrope_sections is not None and positions.ndim == 3:
+        return L.mrope_angles(positions, hd, cfg.rope_theta,
+                              cfg.mrope_sections)
+    if positions.ndim == 3:        # mrope-shaped positions, plain rope arch
+        positions = positions[0]
+    return L.rope_angles(positions, hd, cfg.rope_theta)
+
+
+def _project_qkv(p: dict, x: Array, cfg: ArchConfig, angles) -> Tuple[Array, Array, Array]:
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.mla:
+        return _project_mla(p, x, cfg, angles)
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+        k = L.rms_norm(k, p["k_norm"])
+    if angles is not None:
+        q = L.apply_rope(q, angles)
+        k = L.apply_rope(k, angles)
+    return q, k, v
+
+
+def _project_mla(p: dict, x: Array, cfg: ArchConfig, angles):
+    """DeepSeek-V2 Multi-head Latent Attention.  The cacheable object is the
+    compressed latent c_kv (rank ``kv_lora_rank``) + the shared rope key —
+    this is exactly the page type Morpheus caches for this arch."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    r, rd, nd, vd = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                     cfg.v_head_dim)
+    q = (x @ p["wq"]).reshape(b, s, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    dkv = x @ p["w_dkv"]                       # (B,S,r+rd)
+    c_kv = L.rms_norm(dkv[..., :r], p["kv_norm"])
+    k_rope = dkv[..., None, r:]                # (B,S,1,rd) shared across heads
+    if angles is not None:
+        q_rope = L.apply_rope(q_rope, angles)
+        k_rope = L.apply_rope(k_rope, angles)
+    ukv = (c_kv @ p["w_ukv"]).reshape(b, s, h, nd + vd)
+    k_nope, v = ukv[..., :nd], ukv[..., nd:]
+    k_rope_b = jnp.broadcast_to(k_rope, (b, s, h, rd))
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], -1)
+    return q_full, k_full, v
+
+
+def _context_parallel_constraint(q, k, v, cfg: ArchConfig):
+    """Context-parallel attention layout for uneven tensor parallelism.
+
+    When num_kv_heads does not divide the `model` axis (e.g. qwen2-vl: 4
+    KV heads on a 16-way axis) GSPMD's default is to shard the score
+    contraction and ALL-REDUCE the (b, kv, s_chunk, g, T) logits — ~540 MB
+    x 16 chunk-steps per layer at 32k (measured: 1.7 TB/chip/step, the
+    dominant collective).  Pinning q to a sequence-sharded layout and K/V
+    to replicated turns that into one K/V all-gather per layer (~270 MB)
+    and keeps the attention FLOPs evenly split over the axis.
+    """
+    mesh = dist_ctx.get_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return q, k, v
+    n = mesh.shape["model"]
+    # Fires only for UNEVEN head counts (q heads don't divide the axis,
+    # e.g. qwen2-vl's 28 heads on 16 chips).  When heads divide evenly
+    # GSPMD's head-sharded attention is already collective-free and this
+    # constraint would only add resharding traffic.
+    if cfg.num_heads % n == 0 or q.shape[1] % n != 0:
+        return q, k, v
+    batch = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_batch = 1
+    for a in batch:
+        n_batch *= int(mesh.shape[a])
+    bspec = batch if batch and q.shape[0] % n_batch == 0 else None
+    q = jax.lax.with_sharding_constraint(
+        q, NamedSharding(mesh, P(bspec, "model", None, None)))
+    k = jax.lax.with_sharding_constraint(
+        k, NamedSharding(mesh, P(bspec, None, None, None)))
+    v = jax.lax.with_sharding_constraint(
+        v, NamedSharding(mesh, P(bspec, None, None, None)))
+    return q, k, v
+
+
+def attention(p: dict, x: Array, cfg: ArchConfig, spec: LayerSpec,
+              positions: Array, *, causal: bool = True) -> Array:
+    """Full (train/prefill) self-attention for one layer."""
+    angles = _angles(cfg, positions)
+    q, k, v = _project_qkv(p, x, cfg, angles)
+    q, k, v = _context_parallel_constraint(q, k, v, cfg)
+    b, s = x.shape[:2]
+    if s > CHUNK_THRESHOLD:
+        out = _sdpa_chunked(q, k, v, cfg, spec.attn_kind, cfg.window,
+                            causal=causal)
+    else:
+        mask = _full_mask(s, spec.attn_kind, cfg.window, causal=causal)
+        out = _sdpa(q, k, v, mask[None], cfg)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def cross_attention(p: dict, x: Array, enc_kv: Tuple[Array, Array],
+                    cfg: ArchConfig) -> Array:
+    """Decoder cross-attention; enc_kv = (k, v) precomputed from encoder."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k, v = enc_kv
+    mask = jnp.ones((1, s, k.shape[1]), bool)
+    out = _sdpa(q, k, v, mask, cfg)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def encode_cross_kv(p: dict, enc_out: Array, cfg: ArchConfig):
+    b, t, d = enc_out.shape
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(b, t, kv, hd)
+    v = (enc_out @ p["wv"]).reshape(b, t, kv, hd)
+    return k, v
+
+
+# --------------------------------------------------------------- KV cache
+
+def cache_size(cfg: ArchConfig, spec: LayerSpec, max_len: int) -> int:
+    if spec.attn_kind == "local" and cfg.window:
+        return min(max_len, cfg.window)
+    return max_len
+
+
+def init_kv_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, max_len: int,
+                  dtype) -> Dict[str, Array]:
+    c = cache_size(cfg, spec, max_len)
+    if cfg.mla:
+        # cache the compressed latent + shared rope key (per-token bytes =
+        # kv_lora_rank + qk_rope_dim, ~8x smaller than full K/V)
+        return {
+            "c_kv": jnp.zeros((batch, c, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, c, 1, cfg.qk_rope_dim), dtype),
+            "pos": jnp.full((c,), -1, jnp.int32),
+        }
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, c, kv, hd), dtype),
+        "v": jnp.zeros((batch, c, kv, hd), dtype),
+        "pos": jnp.full((c,), -1, jnp.int32),
+    }
+
+
+def decode_attention(p: dict, x: Array, cache: Dict[str, Array],
+                     cur_pos: Array, cfg: ArchConfig, spec: LayerSpec
+                     ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode: write slot, attend over cache.
+
+    x (B, 1, D); ``cur_pos`` () int32 — absolute position of the new token.
+    Ring indexing (pos % C) makes local layers O(window) memory."""
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    c = cache["pos"].shape[0]
+    slot = (cur_pos % c).astype(jnp.int32)
+    angles = _angles(cfg, jnp.full((b, 1), cur_pos, jnp.int32))
+
+    if cfg.mla:
+        r, rd, nd, vd = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                         cfg.v_head_dim)
+        q = (x @ p["wq"]).reshape(b, 1, h, nd + rd)
+        q_nope, q_rope = q[..., :nd], q[..., nd:]
+        dkv = x @ p["w_dkv"]
+        c_new = L.rms_norm(dkv[..., :r], p["kv_norm"])
+        k_rope_new = dkv[..., None, r:]
+        q_rope = L.apply_rope(q_rope, angles)
+        k_rope_new = L.apply_rope(k_rope_new, angles)
+        cache = dict(cache)
+        cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), slot, axis=1)
+        cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+            slot, axis=1)
+        cache["pos"] = jax.lax.dynamic_update_index_in_dim(
+            cache["pos"], cur_pos.astype(jnp.int32), slot, 0)
+        # Absorbed-MLA decode (§Perf iteration mla-1, the DeepSeek-V2
+        # serving trick): attention runs IN LATENT SPACE.  Per step this
+        # reads the (B, C, r) latent cache once instead of decompressing a
+        # (B, C, H, nd+vd) K/V for every cached token (~12x less HBM
+        # traffic at 32k context).  Algebra: scores = q_nope·K_nope
+        # = (q_nope·W_UK)·c_kv, and out = (w·c_kv)·W_UV.
+        f32 = jnp.float32
+        w_ukv = p["w_ukv"].reshape(r, h, nd + vd)
+        w_uk, w_uv = w_ukv[..., :nd], w_ukv[..., nd:]
+        ckv = cache["c_kv"].astype(f32)                      # (B, C, r)
+        q_eff = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(f32),
+                           w_uk.astype(f32))                 # (B, H, r)
+        s_nope = jnp.einsum("bhr,btr->bht", q_eff, ckv)
+        s_rope = jnp.einsum("bhd,btd->bht", q_rope[:, 0].astype(f32),
+                            cache["k_rope"][:, :, 0].astype(f32))
+        scale = (nd + rd) ** -0.5
+        logits = (s_nope + s_rope) * scale                   # (B, H, C)
+        valid = cache["pos"] >= 0
+        mask = valid[None, None, :] & (cache["pos"][None, None, :] <= cur_pos)
+        logits = jnp.where(mask, logits, NEG)
+        w = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bht,btr->bhr", w, ckv)           # (B, H, r)
+        out = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(f32))
+        out = out.reshape(b, 1, h * vd).astype(x.dtype)
+        return out @ p["wo"], cache
+
+    kvh = cfg.num_kv_heads
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    k_new = (x @ p["wk"]).reshape(b, 1, kvh, hd)
+    v_new = (x @ p["wv"]).reshape(b, 1, kvh, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+        k_new = L.rms_norm(k_new, p["k_norm"])
+    q = L.apply_rope(q, angles)
+    k_new = L.apply_rope(k_new, angles)
+
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    cache["pos"] = jax.lax.dynamic_update_index_in_dim(
+        cache["pos"], cur_pos.astype(jnp.int32), slot, 0)
+
+    pos = cache["pos"]
+    valid = (pos >= 0) & (pos <= cur_pos)
+    if spec.attn_kind == "local" and cfg.window:
+        valid = valid & (cur_pos - pos < cfg.window)
+    mask = valid[None, None, :]
+    out = _sdpa(q, cache["k"], cache["v"], mask, cfg)
+    return out.reshape(b, 1, -1) @ p["wo"], cache
+
+
+def prefill_into_cache(p: dict, x: Array, cache: Dict[str, Array],
+                       cfg: ArchConfig, spec: LayerSpec
+                       ) -> Tuple[Array, Dict[str, Array]]:
+    """Full forward over the prompt that also fills the KV cache (the last
+    ``cache_size`` positions for ring caches)."""
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    angles = _angles(cfg, positions)
+    q, k, v = _project_qkv(p, x, cfg, angles)
+    q, k, v = _context_parallel_constraint(q, k, v, cfg)
+    if s > CHUNK_THRESHOLD:
+        out = _sdpa_chunked(q, k, v, cfg, spec.attn_kind, cfg.window,
+                            causal=True)
+    else:
+        mask = _full_mask(s, spec.attn_kind, cfg.window, causal=True)
+        out = _sdpa(q, k, v, mask[None], cfg)
+    y = out.reshape(b, s, -1) @ p["wo"]
+
+    c = cache["pos"].shape[0]
+    keep = min(c, s)
+    tail_pos = jnp.arange(s - keep, s, dtype=jnp.int32)
+    slots = tail_pos % c   # ring-consistent slots (so decode overwrite is LRU)
+    cache = dict(cache)
+    if cfg.mla:
+        # recompute latents for the cached suffix (cheap projections)
+        dkv = x[:, s - keep:] @ p["w_dkv"]
+        r = cfg.kv_lora_rank
+        cache["c_kv"] = cache["c_kv"].at[:, slots].set(
+            L.rms_norm(dkv[..., :r], p["kv_norm"]).astype(cache["c_kv"].dtype))
+        kr = dkv[..., None, r:]
+        pos_tail = jnp.broadcast_to(tail_pos, (b, keep))
+        cache["k_rope"] = cache["k_rope"].at[:, slots].set(
+            L.apply_rope(kr, _angles(cfg, pos_tail)).astype(
+                cache["k_rope"].dtype))
+    else:
+        cache["k"] = cache["k"].at[:, slots].set(
+            k[:, s - keep:].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, slots].set(
+            v[:, s - keep:].astype(cache["v"].dtype))
+    cache["pos"] = cache["pos"].at[slots].set(tail_pos)
+    return y, cache

@@ -1,0 +1,128 @@
+"""Common model layers: norms, RoPE / M-RoPE, MLPs, embeddings, softcap."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+Array = jnp.ndarray
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------- norms
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def init_rms(d: int, dtype) -> Array:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------- softcap
+
+def softcap(x: Array, cap: float) -> Array:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_angles(positions: Array, head_dim: int, theta: float) -> Array:
+    """positions (..., S) -> angles (..., S, head_dim//2), f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def mrope_angles(positions: Array, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]) -> Array:
+    """Qwen2-VL M-RoPE: ``positions`` (3, B, S) t/h/w streams; each RoPE
+    frequency slot draws its position from its section's stream."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)          # (half,)
+    pos = positions.astype(jnp.float32)                    # (3, B, S)
+    pos_per_slot = jnp.take(pos, sec_id, axis=0)           # (half, B, S)
+    pos_per_slot = jnp.moveaxis(pos_per_slot, 0, -1)       # (B, S, half)
+    return pos_per_slot * inv
+
+
+def apply_rope(x: Array, angles: Array) -> Array:
+    """x (B, S, H, D); angles (B, S, D//2) or (S, D//2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[..., None, :]   # (B, S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------- MLP
+
+def init_dense_mlp(key, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_f = f ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d)) * s_f).astype(dtype),
+    }
+
+
+def dense_mlp(p: dict, x: Array, act: str) -> Array:
+    a = x @ p["w_gate"]
+    a = jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a)
+    return (a * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------- embed
+
+def init_embed(key, cfg: ArchConfig, dtype) -> dict:
+    v = cfg.padded_vocab()
+    k1, k2 = jax.random.split(key)
+    p = {"embed": (jax.random.normal(k1, (v, cfg.d_model)) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(k2, (cfg.d_model, v))
+                        * cfg.d_model ** -0.5).astype(dtype)
+    return p
+
+
+def embed_tokens(p: dict, tokens: Array, cfg: ArchConfig) -> Array:
+    x = jnp.take(p["embed"], tokens, axis=0)
+    # gemma-style sqrt(d) embedding scale keeps activation magnitude O(1)
+    return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+
+def logits_head(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"].T
+    else:
+        logits = x @ p["unembed"]
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits
+
+
+def cross_entropy(logits: Array, targets: Array, vocab_size: int) -> Array:
+    """Mean CE over tokens; ignores padded vocab tail by masking targets."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

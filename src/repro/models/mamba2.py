@@ -1,0 +1,278 @@
+"""Mamba-2 SSD (state-space duality) blocks — chunked matmul form for
+train/prefill (MXU-friendly) and the O(1) recurrent form for decode.
+
+Follows the minimal SSD algorithm of Dao & Gu (arXiv:2405.21060): within a
+chunk the output is an attention-like masked matmul; across chunks a small
+recurrent state (H, P, N) is passed.  All einsums are matmuls the TPU MXU
+executes natively — this is the hardware adaptation of the CUDA scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as L
+
+Array = jnp.ndarray
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
+    """Projections are kept SEPARATE (w_z/w_x/w_B/w_C/w_dt instead of one
+    fused in_proj) so each can carry its own sharding: the d_inner channels
+    shard over the ``model`` axis, while the small B/C/dt projections stay
+    replicated."""
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, di)) * s).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d, di)) * s).astype(dtype),
+        "w_B": (jax.random.normal(ks[2], (d, g * n)) * s).astype(dtype),
+        "w_C": (jax.random.normal(ks[3], (d, g * n)) * s).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (d, h)) * s).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (cfg.conv_width, di))
+                   * 0.1).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (cfg.conv_width, g * n))
+                   * 0.1).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (cfg.conv_width, g * n))
+                   * 0.1).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),          # A = -exp(A_log) = -1
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": L.init_rms(di, dtype),
+        "out_proj": (jax.random.normal(ks[0], (di, d)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv along time: x (b,s,ch), w (width,ch)."""
+    s = x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (w.shape[0] - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + s] * w[i] for i in range(w.shape[0]))
+
+
+def _segsum(a: Array) -> Array:
+    """a (..., L) -> (..., L, L) with out[i,j] = sum_{k in (j, i]} a[k],
+    -inf above the diagonal (the 1-semiseparable decay mask)."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    out = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int = 128,
+                init_state: Array | None = None) -> Tuple[Array, Array]:
+    """SSD forward — chunk-parallel (Dao & Gu blocked algorithm).
+
+    x  (b, s, h, p)   dt (b, s, h)   A (h,)  negative
+    B  (b, s, g, n)   C  (b, s, g, n)
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+
+    All O(s·l) / O(s·p·n) matmuls are batched over the chunk axis and sit
+    OUTSIDE the recurrence; the only sequential pass is a ``lax.scan``
+    carrying the (b,h,p,n) inter-chunk state — a few MB — so the compiled
+    step never drags activations through the loop (the naive
+    scan-over-chunks form moved ~20x more HBM bytes: copies, transposes
+    and dynamic-update-slices of the full chunk inputs on every trip).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    # §Perf iteration 5: heads are grouped as (g, rep) and every einsum
+    # keeps the group dim explicit instead of jnp.repeat-ing B/C up to h
+    # heads — the repeat materialized (b,k,l,h,n) copies (1.2 GB/layer at
+    # this cell's shapes) plus their gradients for data that is identical
+    # within a group.
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, g, rep, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, g, rep).astype(f32)
+    Bc = B.reshape(b, nc, chunk, g, n).astype(f32)
+    Cc = C.reshape(b, nc, chunk, g, n).astype(f32)
+    Af = A.reshape(g, rep).astype(f32)
+
+    dA = dtc * Af                              # (b,k,l,g,r)
+    A_cum = jnp.cumsum(dA, axis=2)             # (b,k,l,g,r)
+    A_tot = A_cum[:, :, -1]                    # (b,k,g,r)
+    xdt = xc * dtc[..., None]                  # (b,k,l,g,r,p)
+
+    # ---- intra-chunk: per-group scores, per-head decay mask
+    dAh = jnp.moveaxis(dA, 2, 4)               # (b,k,g,r,l)
+    Lmask = jnp.exp(_segsum(dAh))              # (b,k,g,r,l,l)
+    scores = jnp.einsum("bklgn,bksgn->bkgls", Cc, Bc)   # shared in group
+    attn = scores[:, :, :, None] * Lmask       # (b,k,g,r,l,s)
+    y_diag = jnp.einsum("bkgrls,bksgrp->bklgrp", attn, xdt)
+
+    # ---- per-chunk local end-states (parallel over k)
+    decay_to_end = jnp.exp(A_tot[:, :, None] - A_cum)      # (b,k,l,g,r)
+    local = jnp.einsum("bklgn,bklgr,bklgrp->bkgrpn",
+                       Bc, decay_to_end, xdt)
+
+    # ---- tiny sequential pass: state entering each chunk
+    T = jnp.exp(A_tot)                         # (b,k,g,r)
+    s0 = (jnp.zeros((b, g, rep, p, n), f32) if init_state is None
+          else init_state.reshape(b, g, rep, p, n).astype(f32))
+
+    def body(state, inp):
+        Tk, lk = inp                           # (b,g,r), (b,g,r,p,n)
+        nxt = state * Tk[..., None, None] + lk
+        return nxt, state                      # emit state ENTERING chunk k
+
+    final, S_enter = jax.lax.scan(
+        body, s0, (jnp.moveaxis(T, 1, 0), jnp.moveaxis(local, 1, 0)))
+    S_enter = jnp.moveaxis(S_enter, 0, 1)      # (b,k,g,r,p,n)
+
+    # ---- state contribution to each chunk's outputs (parallel over k)
+    y_off = jnp.einsum("bklgn,bkgrpn,bklgr->bklgrp",
+                       Cc, S_enter, jnp.exp(A_cum))
+    y = (y_diag + y_off).reshape(b, s, h, p).astype(x.dtype)
+    return y, final.reshape(b, h, p, n).astype(x.dtype)
+
+
+def ssd_chunked_seq(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                    chunk: int = 128,
+                    init_state: Array | None = None) -> Tuple[Array, Array]:
+    """Reference sequential-scan SSD (the pre-hillclimb form).  Kept as an
+    oracle: tests assert ssd_chunked == ssd_chunked_seq == the O(s)
+    recurrence."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    f32 = jnp.float32
+    xc = jnp.moveaxis(x.reshape(b, nc, chunk, h, p), 1, 0).astype(f32)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, chunk, h), 1, 0).astype(f32)
+    Bc = jnp.moveaxis(B.reshape(b, nc, chunk, g, n), 1, 0).astype(f32)
+    Cc = jnp.moveaxis(C.reshape(b, nc, chunk, g, n), 1, 0).astype(f32)
+    Af = A.astype(f32)
+
+    s0 = (jnp.zeros((b, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def body(state, inp):
+        xi, dti, Bi, Ci = inp                 # (b,l,h,p), (b,l,h), (b,l,g,n)
+        Bi = jnp.repeat(Bi, rep, axis=2)      # (b,l,h,n)
+        Ci = jnp.repeat(Ci, rep, axis=2)
+        dA = jnp.moveaxis(dti * Af, -1, 1)    # (b,h,l)
+        A_cum = jnp.cumsum(dA, axis=-1)       # (b,h,l)
+
+        # intra-chunk: attention-like masked matmul
+        Lmask = jnp.exp(_segsum(dA))          # (b,h,l,l)
+        y_diag = jnp.einsum("blhn,bshn,bhls,bsh,bshp->blhp",
+                            Ci, Bi, Lmask, dti, xi)
+        # contribution of the incoming state
+        state_decay = jnp.exp(A_cum)          # (b,h,l)
+        y_off = jnp.einsum("blhn,bhpn,bhl->blhp", Ci, state, state_decay)
+        # state update
+        decay_to_end = jnp.exp(A_cum[..., -1:] - A_cum)   # (b,h,l)
+        new_state = (state * jnp.exp(A_cum[..., -1])[..., None, None]
+                     + jnp.einsum("blhn,bhl,blh,blhp->bhpn",
+                                  Bi, decay_to_end, dti, xi))
+        return new_state, y_diag + y_off
+
+    final, ys = jax.lax.scan(body, s0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p).astype(x.dtype)
+    return y, final.astype(x.dtype)
+
+
+def ssd_step(state: Array, x: Array, dt: Array, A: Array, B: Array, C: Array
+             ) -> Tuple[Array, Array]:
+    """Recurrent single-token step.
+    state (b,h,p,n); x (b,h,p); dt (b,h); B,C (b,g,n).
+    y = C . (state*dA + dt*x (x) B)"""
+    f32 = jnp.float32
+    h = x.shape[1]
+    rep = h // B.shape[1]
+    Bh = jnp.repeat(B, rep, axis=1).astype(f32)       # (b,h,n)
+    Ch = jnp.repeat(C, rep, axis=1).astype(f32)
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))      # (b,h)
+    upd = (dt.astype(f32)[..., None, None]
+           * x.astype(f32)[..., None] * Bh[..., None, :])  # (b,h,p,n)
+    new_state = state.astype(f32) * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# ------------------------------------------------------------- full block
+
+def _project(p: dict, x: Array, cfg: ArchConfig):
+    """x (b,s,d) -> z, xs(conv+silu), B, C, dt  (train/prefill path)."""
+    b, s, _ = x.shape
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    h, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    z = x @ p["w_z"]
+    xr = _causal_conv(x @ p["w_x"], p["conv_x"])
+    Br = _causal_conv(x @ p["w_B"], p["conv_B"])
+    Cr = _causal_conv(x @ p["w_C"], p["conv_C"])
+    xs = jax.nn.silu(xr).reshape(b, s, h, hp)
+    Bm = jax.nn.silu(Br).reshape(b, s, g, n)
+    Cm = jax.nn.silu(Cr).reshape(b, s, g, n)
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    return z, xs, Bm, Cm, dt
+
+
+def mamba_block(p: dict, x: Array, cfg: ArchConfig, chunk: int = 128) -> Array:
+    """Train/prefill forward (no cache)."""
+    b, s, d = x.shape
+    di = cfg.d_inner
+    z, xs, Bm, Cm, dt = _project(p, x, cfg)
+    A = -jnp.exp(p["A_log"])
+    ck = chunk if s % chunk == 0 else (s if s < chunk else
+                                       next(c for c in (64, 32, 16, 8, 4, 2, 1)
+                                            if s % c == 0))
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, chunk=ck)
+    y = y.reshape(b, s, di)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"]
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> Dict[str, Array]:
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    h, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * g * n), dtype),
+        "ssm": jnp.zeros((batch, h, hp, n), dtype),
+    }
+
+
+def mamba_decode_step(p: dict, x: Array, cache: Dict[str, Array],
+                      cfg: ArchConfig) -> Tuple[Array, Dict[str, Array]]:
+    """x (b, 1, d) -> (y (b,1,d), cache)."""
+    b = x.shape[0]
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    h, hp = cfg.ssm_heads, cfg.ssm_head_dim
+
+    x0 = x[:, 0]
+    z = x0 @ p["w_z"]
+    xbc_new = jnp.concatenate(
+        [x0 @ p["w_x"], x0 @ p["w_B"], x0 @ p["w_C"]], axis=-1)
+    dt = x0 @ p["w_dt"]
+
+    hist = jnp.concatenate([cache["conv"], xbc_new[:, None]], axis=1)
+    w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    xbc = jnp.sum(hist * w[None], axis=1)
+    xbc = jax.nn.silu(xbc)
+    new_conv = hist[:, 1:]
+
+    xs = xbc[..., :di].reshape(b, h, hp)
+    Bm = xbc[..., di:di + g * n].reshape(b, g, n)
+    Cm = xbc[..., di + g * n:].reshape(b, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, new_ssm = ssd_step(cache["ssm"], xs, dt, A, Bm, Cm)
+    y = y.reshape(b, di)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "ssm": new_ssm.astype(cache["ssm"].dtype)}

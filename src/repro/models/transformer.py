@@ -1,0 +1,354 @@
+"""Model assembly: decoder-only LMs, the enc-dec (seamless) variant, and the
+hybrid/SSM stacks — built from ``ArchConfig`` layer patterns.
+
+Compile-time discipline: the repeating block pattern is executed with
+``jax.lax.scan`` over *stacked* block parameters, so HLO size is O(pattern)
+rather than O(num_layers).  Prefix layers are unrolled.  Each block is
+wrapped in ``jax.checkpoint`` (remat) for train.
+"""
+from __future__ import annotations
+
+import os
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, LayerSpec
+from . import attention as A
+from . import layers as L
+from . import mamba2 as M
+from . import moe as MoE
+
+Array = jnp.ndarray
+PyTree = Any
+
+
+# ----------------------------------------------------------------- layers
+
+def _has_mlp(cfg: ArchConfig, spec: LayerSpec) -> bool:
+    return spec.mlp == "moe" or cfg.d_ff > 0
+
+
+def init_layer(key, cfg: ArchConfig, spec: LayerSpec, dtype,
+               *, cross: bool = False) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict = {"ln1": L.init_rms(cfg.d_model, dtype)}
+    if spec.mixer == "mamba":
+        p["mixer"] = M.init_mamba(k1, cfg, dtype)
+    else:
+        p["mixer"] = A.init_attn(k1, cfg, dtype)
+    if _has_mlp(cfg, spec):
+        p["ln2"] = L.init_rms(cfg.d_model, dtype)
+        if spec.mlp == "moe":
+            p["mlp"] = MoE.init_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = L.init_dense_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    if cross:
+        p["ln_x"] = L.init_rms(cfg.d_model, dtype)
+        p["xattn"] = A.init_attn(k3, cfg, dtype, cross=True)
+    return p
+
+
+def apply_layer_full(p: dict, x: Array, cfg: ArchConfig, spec: LayerSpec,
+                     positions: Array, *, causal: bool = True,
+                     enc_kv=None) -> Array:
+    """Train / no-cache forward for one layer."""
+    h = L.rms_norm(x, p["ln1"])
+    if spec.mixer == "mamba":
+        h = M.mamba_block(p["mixer"], h, cfg)
+    else:
+        h = A.attention(p["mixer"], h, cfg, spec, positions, causal=causal)
+    x = x + h
+    if enc_kv is not None:
+        h = L.rms_norm(x, p["ln_x"])
+        x = x + A.cross_attention(p["xattn"], h, enc_kv, cfg)
+    if _has_mlp(cfg, spec):
+        h = L.rms_norm(x, p["ln2"])
+        if spec.mlp == "moe":
+            x = x + MoE.moe_mlp(p["mlp"], h, cfg)
+        else:
+            x = x + L.dense_mlp(p["mlp"], h, cfg.act)
+    return x
+
+
+def apply_layer_decode(p: dict, x: Array, cache: dict, cur_pos: Array,
+                       cfg: ArchConfig, spec: LayerSpec,
+                       enc_kv=None) -> Tuple[Array, dict]:
+    h = L.rms_norm(x, p["ln1"])
+    if spec.mixer == "mamba":
+        h, cache = M.mamba_decode_step(p["mixer"], h, cache, cfg)
+    else:
+        h, cache = A.decode_attention(p["mixer"], h, cache, cur_pos, cfg, spec)
+    x = x + h
+    if enc_kv is not None:
+        h = L.rms_norm(x, p["ln_x"])
+        x = x + A.cross_attention(p["xattn"], h, enc_kv, cfg)
+    if _has_mlp(cfg, spec):
+        h = L.rms_norm(x, p["ln2"])
+        if spec.mlp == "moe":
+            x = x + MoE.moe_mlp(p["mlp"], h, cfg)
+        else:
+            x = x + L.dense_mlp(p["mlp"], h, cfg.act)
+    return x, cache
+
+
+def apply_layer_prefill(p: dict, x: Array, cache: dict, cfg: ArchConfig,
+                        spec: LayerSpec, enc_kv=None) -> Tuple[Array, dict]:
+    h = L.rms_norm(x, p["ln1"])
+    if spec.mixer == "mamba":
+        # chunked forward, keep final state in the cache
+        b, s, _ = h.shape
+        y, cache = _mamba_prefill(p["mixer"], h, cache, cfg)
+        h = y
+    else:
+        h, cache = A.prefill_into_cache(p["mixer"], h, cache, cfg, spec)
+    x = x + h
+    if enc_kv is not None:
+        hx = L.rms_norm(x, p["ln_x"])
+        x = x + A.cross_attention(p["xattn"], hx, enc_kv, cfg)
+    if _has_mlp(cfg, spec):
+        h = L.rms_norm(x, p["ln2"])
+        if spec.mlp == "moe":
+            x = x + MoE.moe_mlp(p["mlp"], h, cfg)
+        else:
+            x = x + L.dense_mlp(p["mlp"], h, cfg.act)
+    return x, cache
+
+
+def _mamba_prefill(p: dict, x: Array, cache: dict, cfg: ArchConfig):
+    b, s, d = x.shape
+    di = cfg.d_inner
+    z, xs, Bm, Cm, dt = M._project(p, x, cfg)
+    Aa = -jnp.exp(p["A_log"])
+    ck = 128 if s % 128 == 0 else next(c for c in (64, 32, 16, 8, 4, 2, 1)
+                                       if s % c == 0)
+    y, final = M.ssd_chunked(xs, dt, Aa, Bm, Cm, chunk=ck,
+                             init_state=cache["ssm"])
+    y = y.reshape(b, s, di)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"])
+    # conv history = last (w-1) raw (pre-conv) projected inputs [x;B;C]
+    xbc_raw = jnp.concatenate([x @ p["w_x"], x @ p["w_B"], x @ p["w_C"]],
+                              axis=-1)
+    new_conv = (xbc_raw[:, -(cfg.conv_width - 1):].astype(cache["conv"].dtype)
+                if s >= cfg.conv_width - 1 else cache["conv"])
+    new_cache = {"conv": new_conv, "ssm": final.astype(cache["ssm"].dtype)}
+    return y @ p["out_proj"], new_cache
+
+
+def init_layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                     max_len: int, dtype) -> dict:
+    if spec.mixer == "mamba":
+        return M.init_mamba_cache(cfg, batch, dtype)
+    return A.init_kv_cache(cfg, spec, batch, max_len, dtype)
+
+
+# ------------------------------------------------------------------ model
+
+class LM:
+    """Decoder-only (optionally hybrid/MoE/SSM) language model.
+
+    Also covers the enc-dec (seamless) and VLM (qwen2-vl) cases through
+    optional batch inputs: ``frame_embeds`` (audio encoder stub input),
+    ``patch_embeds`` (vision prefix stub), ``positions`` (M-RoPE streams).
+    """
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = L.dtype_of(cfg)
+
+    # ------------------------------------------------------------- params
+    def init(self, rng) -> PyTree:
+        cfg = self.cfg
+        dt = self.dtype
+        r_embed, r_pre, r_blocks, r_enc, r_final = jax.random.split(rng, 5)
+        params: Dict[str, Any] = L.init_embed(r_embed, cfg, dt)
+        params["final_norm"] = L.init_rms(cfg.d_model, dt)
+
+        params["prefix"] = [
+            init_layer(k, cfg, spec, dt)
+            for k, spec in zip(jax.random.split(r_pre, max(len(cfg.prefix_layers), 1)),
+                               cfg.prefix_layers)
+        ]
+
+        def init_block(key):
+            ks = jax.random.split(key, len(cfg.block_pattern))
+            return {f"l{i}": init_layer(ks[i], cfg, spec, dt,
+                                        cross=cfg.is_encdec)
+                    for i, spec in enumerate(cfg.block_pattern)}
+
+        keys = jax.random.split(r_blocks, cfg.num_blocks)
+        params["blocks"] = jax.vmap(init_block)(keys)
+
+        if cfg.is_encdec:
+            ks = jax.random.split(r_enc, cfg.encoder_layers + 1)
+            params["encoder"] = {
+                "layers": [init_layer(ks[i], cfg, LayerSpec(), dt)
+                           for i in range(cfg.encoder_layers)],
+                "final_norm": L.init_rms(cfg.d_model, dt),
+            }
+        return params
+
+    # -------------------------------------------------------------- embed
+    def _embed_inputs(self, params, batch) -> Tuple[Array, Array]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = L.embed_tokens(params, tokens, cfg)
+        if "patch_embeds" in batch:   # VLM: vision prefix replaces the first
+            pe = batch["patch_embeds"].astype(x.dtype)  # (B, P, D) positions
+            npatch = pe.shape[1]
+            x = jnp.concatenate([pe * cfg.d_model ** 0.5,
+                                 x[:, npatch:]], axis=1)
+        b, s = tokens.shape
+        if "positions" in batch:
+            positions = batch["positions"]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return x, positions
+
+    def _encode(self, params, batch) -> Optional[Array]:
+        if not self.cfg.is_encdec:
+            return None
+        cfg = self.cfg
+        x = batch["frame_embeds"].astype(self.dtype)  # stubbed audio frontend
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        for p in params["encoder"]["layers"]:
+            x = apply_layer_full(p, x, cfg, LayerSpec(), pos, causal=False)
+        return L.rms_norm(x, params["encoder"]["final_norm"])
+
+    # ------------------------------------------------------------ forward
+    def _stack(self, params, x: Array, positions: Array, enc_out,
+               *, remat: bool = False) -> Array:
+        cfg = self.cfg
+
+        def block_fn(x, block_params, enc_kv_list):
+            for i, spec in enumerate(cfg.block_pattern):
+                enc_kv = enc_kv_list[i] if enc_kv_list is not None else None
+                x = apply_layer_full(block_params[f"l{i}"], x, cfg, spec,
+                                     positions, enc_kv=enc_kv)
+            return x
+
+        if remat:
+            # remat policy (§Perf): "full" recomputes the whole block in the
+            # backward pass; "dots" saves matmul/einsum outputs (skips
+            # recomputing the FLOP-heavy ops at the cost of storing them).
+            # Config field, env-overridable for perf experiments.
+            policy_name = os.environ.get("REPRO_REMAT_POLICY",
+                                         getattr(cfg, "remat_policy", "full"))
+            if policy_name == "dots":
+                block_fn = jax.checkpoint(
+                    block_fn,
+                    policy=jax.checkpoint_policies
+                    .dots_with_no_batch_dims_saveable)
+            else:
+                block_fn = jax.checkpoint(block_fn)
+
+        for i, spec in enumerate(cfg.prefix_layers):
+            x = apply_layer_full(params["prefix"][i], x, cfg, spec, positions)
+
+        if enc_out is not None:
+            # cross-KV projected per scanned block inside the scan body
+            def body(x, bp):
+                enc_kvs = [A.encode_cross_kv(bp[f"l{i}"]["xattn"], enc_out, cfg)
+                           for i in range(len(cfg.block_pattern))]
+                return block_fn(x, bp, enc_kvs), None
+        else:
+            def body(x, bp):
+                return block_fn(x, bp, None), None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return L.rms_norm(x, params["final_norm"])
+
+    def forward(self, params, batch, *, remat: bool = False) -> Array:
+        x, positions = self._embed_inputs(params, batch)
+        enc_out = self._encode(params, batch)
+        x = self._stack(params, x, positions, enc_out, remat=remat)
+        return L.logits_head(params, x, self.cfg)
+
+    def loss(self, params, batch, *, remat: bool = True) -> Array:
+        logits = self.forward(params, batch, remat=remat)
+        return L.cross_entropy(logits, batch["targets"], self.cfg.vocab_size)
+
+    # ------------------------------------------------------------ serving
+    def init_caches(self, batch_size: int, max_len: int,
+                    cache_dtype=None) -> PyTree:
+        cfg = self.cfg
+        dt = cache_dtype or self.dtype
+        prefix = [init_layer_cache(cfg, spec, batch_size, max_len, dt)
+                  for spec in cfg.prefix_layers]
+
+        def one_block(_):
+            return {f"l{i}": init_layer_cache(cfg, spec, batch_size, max_len, dt)
+                    for i, spec in enumerate(cfg.block_pattern)}
+
+        blocks = jax.vmap(one_block)(jnp.arange(cfg.num_blocks))
+        return {"prefix": prefix, "blocks": blocks}
+
+    def prefill(self, params, batch, caches) -> Tuple[Array, PyTree]:
+        """Run the prompt, fill caches; returns (last-token logits, caches)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        enc_out = self._encode(params, batch)
+
+        new_prefix = []
+        for i, spec in enumerate(cfg.prefix_layers):
+            x, c = apply_layer_prefill(params["prefix"][i], x,
+                                       caches["prefix"][i], cfg, spec)
+            new_prefix.append(c)
+
+        def body(x, inp):
+            bp, bc = inp
+            new_bc = {}
+            for i, spec in enumerate(cfg.block_pattern):
+                enc_kv = (A.encode_cross_kv(bp[f"l{i}"]["xattn"], enc_out, cfg)
+                          if enc_out is not None else None)
+                x, new_bc[f"l{i}"] = apply_layer_prefill(
+                    bp[f"l{i}"], x, bc[f"l{i}"], cfg, spec, enc_kv=enc_kv)
+            return x, new_bc
+
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"],
+                                               caches["blocks"]))
+        x = L.rms_norm(x, params["final_norm"])
+        logits = L.logits_head(params, x[:, -1:], self.cfg)[:, 0]
+        return logits, {"prefix": new_prefix, "blocks": new_blocks,
+                        **({"enc_out": enc_out} if enc_out is not None else {})}
+
+    def decode_step(self, params, tokens: Array, caches, cur_pos: Array
+                    ) -> Tuple[Array, PyTree]:
+        """tokens (B,) int32; cur_pos () int32 — absolute position."""
+        cfg = self.cfg
+        x = L.embed_tokens(params, tokens[:, None], cfg)
+        enc_out = caches.get("enc_out") if isinstance(caches, dict) else None
+
+        new_prefix = []
+        for i, spec in enumerate(cfg.prefix_layers):
+            x, c = apply_layer_decode(params["prefix"][i], x,
+                                      caches["prefix"][i], cur_pos, cfg, spec)
+            new_prefix.append(c)
+
+        def body(x, inp):
+            bp, bc = inp
+            new_bc = {}
+            for i, spec in enumerate(cfg.block_pattern):
+                enc_kv = (A.encode_cross_kv(bp[f"l{i}"]["xattn"], enc_out, cfg)
+                          if enc_out is not None else None)
+                x, new_bc[f"l{i}"] = apply_layer_decode(
+                    bp[f"l{i}"], x, bc[f"l{i}"], cur_pos, cfg, spec,
+                    enc_kv=enc_kv)
+            return x, new_bc
+
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"],
+                                               caches["blocks"]))
+        x = L.rms_norm(x, params["final_norm"])
+        logits = L.logits_head(params, x, self.cfg)[:, 0]
+        out = {"prefix": new_prefix, "blocks": new_blocks}
+        if enc_out is not None:
+            out["enc_out"] = enc_out
+        return logits, out
+
+
+def build_model(cfg: ArchConfig) -> LM:
+    return LM(cfg)

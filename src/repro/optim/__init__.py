@@ -1,0 +1,6 @@
+from .adamw import AdamW, AdamWState, global_norm
+from .grad_compression import Int8Compressor, CompressorState
+from .schedule import constant, cosine_with_warmup
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "Int8Compressor",
+           "CompressorState", "constant", "cosine_with_warmup"]

@@ -1,0 +1,76 @@
+"""AdamW with decoupled weight decay, global-norm clipping and optional
+int8 gradient compression hooks (see grad_compression.py).  Functional,
+optax-style (init/update) but dependency-free."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Any = jnp.float32   # bf16 for the very large archs
+    schedule: Optional[Any] = None    # callable step -> lr scale
+
+    def init(self, params: PyTree) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(z, params),
+                          nu=jax.tree.map(z, params))
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree
+               ) -> Tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        if self.clip_norm:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32)
+                          + (1 - b1) * g.astype(jnp.float32)
+                          ).astype(self.moment_dtype), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32)
+                          + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                          ).astype(self.moment_dtype), state.nu, grads)
+
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = jnp.asarray(self.learning_rate, jnp.float32)
+        if self.schedule is not None:
+            lr = lr * self.schedule(step)
+
+        def upd(p, m, v):
+            mhat = m.astype(jnp.float32) / c1
+            vhat = v.astype(jnp.float32) / c2
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # no decay on norms/biases
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))

@@ -1,0 +1,20 @@
+"""LR schedules (callable step -> multiplier)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(warmup_steps: int, total_steps: int,
+                       min_ratio: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return f
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)

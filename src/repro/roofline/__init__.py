@@ -1,0 +1,8 @@
+from . import analysis, hw
+from .analysis import (collective_bytes, collective_op_counts, cost_dict,
+                       memory_stats, model_flops)
+from .hw import CHIP, TPUChip, roofline_terms
+
+__all__ = ["analysis", "hw", "collective_bytes", "collective_op_counts",
+           "cost_dict", "memory_stats", "model_flops", "CHIP", "TPUChip",
+           "roofline_terms"]

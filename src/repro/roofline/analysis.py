@@ -1,0 +1,87 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+``cost_analysis()`` gives HLO FLOPs and bytes; collective bytes are NOT in
+cost_analysis, so we parse the post-SPMD optimized HLO text and sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (including async -start forms).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"                     # output shape (or tuple)
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\s*\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Sum of operand bytes per collective op kind over the module."""
+    per_kind: Dict[str, int] = {}
+    total = 0
+    for m in _OP_RE.finditer(hlo_text):
+        kind, args = m.group(1), m.group(2)
+        b = 0
+        for sm in _SHAPE_RE.finditer(args):
+            b += _shape_bytes(sm.group(1), sm.group(2))
+        per_kind[kind] = per_kind.get(kind, 0) + b
+        total += b
+    return total, per_kind
+
+
+def collective_op_counts(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for kind in _COLLECTIVES:
+        out[kind] = len(re.findall(rf"\b{kind}(?:-start)?\(", hlo_text))
+    return out
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def memory_stats(compiled) -> Dict[str, int]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[k] = int(getattr(ma, k, 0) or 0)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode counts one
+    token per sequence, forward-only (2*N_active per token)."""
+    total, active = cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    tokens = shape.global_batch  # decode: 1 new token per sequence
+    return 2.0 * active * tokens

@@ -1,0 +1,435 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE — for
+scan-over-blocks models that undercounts FLOPs/bytes/collectives by the
+block count.  This module parses the post-optimization HLO text and walks
+the call graph, multiplying while bodies by their trip count (recovered
+from the loop-condition constant), so the roofline terms reflect what the
+hardware would actually execute.
+
+Costs computed per op:
+  * dot:            2 * prod(output dims) * contracted_size   [FLOPs]
+  * most ops:       output bytes + operand bytes               [HBM proxy]
+  * bookkeeping     tuple / get-tuple-element / copy / parameter /
+                    constant / bitcast are FREE — while-loop carries shuffle
+                    the full model state through these every iteration, and
+                    XLA elides them via aliasing; charging them inflates the
+                    memory term by orders of magnitude.
+  * dynamic-slice:  2 x slice bytes (read + write), NOT the source buffer
+  * dyn-update-slice: 2 x update bytes; the big target buffer is aliased
+  * fusion:         charged at the boundary (output + operands), except
+                    (a) a root DUS charges 2 x update instead of the buffer,
+                    (b) operands consumed only by inner dynamic-slices
+                        charge the slice bytes — this is what makes per-step
+                        KV-cache access O(page) instead of O(cache).
+  * collectives:    operand bytes (all-reduce/gather/scatter/to-all/permute)
+
+Validated against hand-counted modules in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALL_ATTR = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w\.\-, %]+)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every array shape literal in ``text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_numel(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    out_text: str          # output type text (before opcode)
+    args_text: str         # inside parens
+    attrs_text: str        # after parens
+    line: str
+    arg_names: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+
+
+_PARAM_DECL = re.compile(r"([\w\.\-]+)\s*:\s*([a-z][a-z0-9]*\[[0-9,]*\])")
+_ARG_NAME = re.compile(r"%?([\w\.\-]+)")
+
+
+def _split_args(args: str) -> List[str]:
+    # strip HLO operand-index comments ("/*index=5*/%op") — leaving them in
+    # breaks name matching and silently DROPS an operand, shifting every
+    # later fusion parameter onto the wrong argument
+    args = re.sub(r"/\*.*?\*/", "", args)
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [a for a in out if a]
+
+
+class SymbolTable(dict):
+    """op/parameter name -> output type text (may contain shapes)."""
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str],
+                                    SymbolTable]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    table = SymbolTable()
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if (stripped.endswith("{") and "->" in stripped
+                and " = " not in stripped):
+            head = stripped
+            is_entry = head.startswith("ENTRY")
+            if is_entry:
+                head = head[len("ENTRY"):].lstrip()
+            name_tok = head.split("(")[0].split()[0].lstrip("%").rstrip()
+            cur = Computation(name_tok)
+            comps[cur.name] = cur
+            if is_entry:
+                entry = cur.name
+            # parameters declared in the header carry their shapes
+            for pm in _PARAM_DECL.finditer(line):
+                table[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # rest = "<out-type> opcode(args), attrs"; out-type may itself be a
+        # parenthesized tuple "(s32[], f32[...])" for while/tuple ops.
+        if rest.startswith("("):
+            depth = 0
+            j = 0
+            for j, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            out_text = rest[:j + 1]
+            rest2 = rest[j + 1:].lstrip()
+        else:
+            sp = rest.find(" ")
+            out_text = rest[:sp] if sp > 0 else rest
+            rest2 = rest[sp + 1:].lstrip() if sp > 0 else ""
+        paren = rest2.find("(")
+        if paren < 0:
+            continue
+        opcode = rest2[:paren].strip()
+        # balanced-paren scan for the arg list
+        depth, i = 0, paren
+        while i < len(rest2):
+            if rest2[i] == "(":
+                depth += 1
+            elif rest2[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        args = rest2[paren + 1:i]
+        attrs = rest2[i + 1:]
+        arg_names = []
+        for tok in _split_args(args):
+            if "[" not in tok:  # bare reference: resolve via symbol table
+                am = _ARG_NAME.match(tok)
+                if am:
+                    arg_names.append(am.group(1))
+        op = Op(name, opcode, out_text, args, attrs, line, arg_names)
+        cur.ops.append(op)
+        table[name] = out_text
+        # parameter ops: "%p = f32[..] parameter(0)" -> already in table
+    return comps, entry, table
+
+
+def _operand_text(op: Op, table: SymbolTable) -> str:
+    """Concatenated type text of all operands (inline or resolved)."""
+    parts = [op.args_text]
+    for n in op.arg_names:
+        parts.append(table.get(n, ""))
+    return " ".join(parts)
+
+
+def _dot_flops(op: Op, table: SymbolTable) -> int:
+    out = _first_shape_numel(op.out_text)
+    if out is None:
+        return 0
+    _, out_dims = out
+    out_numel = 1
+    for d in out_dims:
+        out_numel *= d
+    # contracted size = prod of lhs contracting dims (lhs = first operand)
+    lhs_text = op.args_text
+    if "[" not in op.args_text and op.arg_names:
+        lhs_text = table.get(op.arg_names[0], "")
+    lhs = _first_shape_numel(lhs_text)
+    cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs_text)
+    csize = 1
+    if lhs and cdims and cdims.group(1):
+        _, lhs_dims = lhs
+        for d in cdims.group(1).split(","):
+            di = int(d)
+            if di < len(lhs_dims):
+                csize *= lhs_dims[di]
+    return 2 * out_numel * csize
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Loop trip count ~= the largest integer constant in the condition."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for op in comp.ops:
+        for m in _CONST_RE.finditer(op.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _called(op: Op) -> Dict[str, str]:
+    """attr-name -> computation name (first) for call-like attrs."""
+    out = {}
+    for attr in ("condition", "body", "to_apply", "calls"):
+        m = re.search(rf"{attr}=%?([\w\.\-]+)", op.attrs_text)
+        if m:
+            out[attr] = m.group(1)
+    return out
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.collective_by_kind.items():
+            self.collective_by_kind[k] = self.collective_by_kind.get(k, 0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m, self.collective_bytes * m,
+                    {k: v * m for k, v in self.collective_by_kind.items()})
+
+
+def _comp_cost(comps: Dict[str, Computation], name: str, table: SymbolTable,
+               memo: Dict[str, Cost], *, in_fusion: bool = False) -> Cost:
+    key = name + ("#f" if in_fusion else "")
+    if key in memo:
+        return memo[key]
+    memo[key] = Cost()  # break cycles defensively
+    total = Cost()
+    comp = comps.get(name)
+    if comp is None:
+        return total
+    for op in comp.ops:
+        oc = op.opcode
+        called = _called(op)
+        if oc == "while" and "body" in called:
+            # prefer XLA's own annotation; fall back to the cond constant
+            ktc = re.search(r'known_trip_count.*?"n"\s*:\s*"(\d+)"',
+                            op.attrs_text)
+            trips = (int(ktc.group(1)) if ktc
+                     else _trip_count(comps, called.get("condition", "")))
+            body = _comp_cost(comps, called["body"], table, memo)
+            total += body.scaled(trips)
+            continue
+        if oc == "fusion" and "calls" in called:
+            # memory charged at the fusion boundary; flops from inner dots
+            inner = _comp_cost(comps, called["calls"], table, memo,
+                               in_fusion=True)
+            total += Cost(flops=inner.flops,
+                          collective_bytes=inner.collective_bytes,
+                          collective_by_kind=inner.collective_by_kind)
+            if not in_fusion:
+                total += Cost(bytes=_fusion_bytes(comps, op, called["calls"],
+                                                  table))
+            continue
+        if oc in ("call", "conditional", "async-start") and called:
+            for cname in called.values():
+                total += _comp_cost(comps, cname, table, memo)
+            continue
+        if oc.startswith(COLLECTIVES):
+            kind = next(k for k in COLLECTIVES if oc.startswith(k))
+            if oc.endswith("-done"):
+                continue  # counted at -start
+            b = _shape_bytes(_operand_text(op, table))
+            total += Cost(bytes=(0 if in_fusion else
+                                 b + _shape_bytes(op.out_text)),
+                          collective_bytes=b,
+                          collective_by_kind={kind: b})
+            continue
+        if oc in ("dot", "dot_general"):
+            total += Cost(flops=_dot_flops(op, table))
+        if oc in _FREE_OPS:
+            continue
+        if not in_fusion:
+            if oc == "dynamic-slice":
+                total += Cost(bytes=2 * _shape_bytes(op.out_text))
+            elif oc == "dynamic-update-slice":
+                upd = (table.get(op.arg_names[1], "")
+                       if len(op.arg_names) > 1 else op.out_text)
+                total += Cost(bytes=2 * _shape_bytes(upd))
+            elif oc in ("gather",):
+                total += Cost(bytes=2 * _shape_bytes(op.out_text))
+            elif oc in ("scatter",):
+                upd = (table.get(op.arg_names[-1], "")
+                       if op.arg_names else op.out_text)
+                total += Cost(bytes=2 * _shape_bytes(upd))
+            else:
+                total += Cost(bytes=_shape_bytes(op.out_text)
+                              + _shape_bytes(_operand_text(op, table)))
+    memo[key] = total
+    return total
+
+
+# ops whose bytes XLA elides via aliasing / layout bookkeeping
+_FREE_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "copy", "copy-start", "copy-done", "after-all",
+             "reshape", "transpose", "broadcast", "iota")
+
+
+def _fusion_bytes(comps: Dict[str, Computation], op: Op, fused_name: str,
+                  table: SymbolTable) -> float:
+    """Alias/slice-aware memory traffic of one fusion op (docstring above)."""
+    fused = comps.get(fused_name)
+    if fused is None:
+        return _shape_bytes(op.out_text) + _shape_bytes(
+            _operand_text(op, table))
+    # map fused-computation parameters -> fusion operand names
+    param_idx: Dict[str, int] = {}
+    for f_op in fused.ops:
+        if f_op.opcode == "parameter":
+            try:
+                param_idx[f_op.name] = int(f_op.args_text.strip())
+            except ValueError:
+                pass
+    # usage of each parameter inside the fused computation.  Layout ops
+    # (bitcast/reshape/copy/transpose) alias their input: a dynamic-slice
+    # of a bitcast of a parameter is still a slice-only use of that
+    # parameter (real traffic = slice bytes, not the full tensor) — this
+    # matters for scan-over-layers backward bodies that slice one layer's
+    # activations out of the stacked (L, ...) residual tensor.
+    _ALIAS_OPS = ("bitcast", "reshape", "copy", "transpose")
+    alias: Dict[str, str] = {n: n for n in param_idx}
+    usage: Dict[str, List[str]] = {n: [] for n in param_idx}
+    ds_bytes: Dict[str, float] = {n: 0.0 for n in param_idx}
+    root = fused.ops[-1] if fused.ops else None
+    for f_op in fused.ops:
+        if f_op.opcode == "parameter":
+            continue
+        if (f_op.opcode in _ALIAS_OPS and len(f_op.arg_names) == 1
+                and f_op.arg_names[0] in alias):
+            alias[f_op.name] = alias[f_op.arg_names[0]]
+            continue
+        for a in f_op.arg_names:
+            if a in alias:
+                pname = alias[a]
+                usage[pname].append(f_op.opcode)
+                if f_op.opcode == "dynamic-slice":
+                    ds_bytes[pname] += 2 * _shape_bytes(f_op.out_text)
+
+    total = 0.0
+    # output side: walk back through convert/bitcast/copy at the root —
+    # a convert-wrapped dynamic-update-slice is still an aliased in-place
+    # update (traffic = update bytes, not the whole stacked tensor)
+    _by_name = {f.name: f for f in fused.ops}
+    seen = set()
+    while (root is not None and root.opcode in ("convert", "bitcast", "copy")
+           and root.arg_names and root.arg_names[0] in _by_name
+           and root.name not in seen):
+        seen.add(root.name)
+        root = _by_name[root.arg_names[0]]
+    if root is not None and root.opcode == "dynamic-update-slice":
+        upd_name = root.arg_names[1] if len(root.arg_names) > 1 else None
+        # the update operand usually names an op INSIDE the fusion —
+        # resolve against the fused computation first, falling back to the
+        # whole-tensor shape only as a last resort
+        inner = {f.name: f.out_text for f in fused.ops}
+        upd_text = (inner.get(upd_name or "", "")
+                    or table.get(upd_name or "", "") or root.out_text)
+        total += 2 * _shape_bytes(upd_text)
+        dus_target = root.arg_names[0] if root.arg_names else None
+    else:
+        total += _shape_bytes(op.out_text)
+        dus_target = None
+    # input side
+    for pname, idx in param_idx.items():
+        if idx >= len(op.arg_names):
+            continue
+        operand = op.arg_names[idx]
+        uses = usage.get(pname, [])
+        if pname == dus_target:
+            continue  # aliased in-place update target
+        if uses and all(u == "dynamic-slice" for u in uses):
+            total += ds_bytes[pname]
+        else:
+            total += _shape_bytes(table.get(operand, ""))
+    return total
+
+
+def analyze(hlo: str) -> Cost:
+    comps, entry, table = parse_module(hlo)
+    if entry is None:
+        return Cost()
+    return _comp_cost(comps, entry, table, {})

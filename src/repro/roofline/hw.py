@@ -1,0 +1,37 @@
+"""TPU v5e-class hardware constants for the roofline analysis."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TPUChip:
+    peak_flops_bf16: float = 197e12   # FLOP/s
+    hbm_Bps: float = 819e9            # bytes/s
+    ici_Bps_per_link: float = 50e9    # bytes/s per link
+    ici_links: int = 4                # 2D torus: 4 links/chip
+    hbm_bytes: int = 16 * (1 << 30)
+
+
+CHIP = TPUChip()
+
+
+def roofline_terms(*, flops: float, bytes_hbm: float, bytes_collective: float,
+                   chips: int, chip: TPUChip = CHIP) -> dict:
+    """The three roofline terms in seconds (totals are whole-program, so we
+    divide by the chip count for per-chip time; collective bytes are summed
+    over all chips and cross `links` wires each)."""
+    t_compute = flops / (chips * chip.peak_flops_bf16)
+    t_memory = bytes_hbm / (chips * chip.hbm_Bps)
+    t_coll = bytes_collective / (chips * chip.ici_Bps_per_link * chip.ici_links)
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    total = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": total,
+        "roofline_fraction": (t_compute / total) if total > 0 else 0.0,
+    }

@@ -1,0 +1,6 @@
+from .engine import Engine, EngineReport, Request, PAGE_TOKENS
+from .paged_kv import GatherPlan, MorpheusPagePool, PoolConfig, page_key
+from . import sampler
+
+__all__ = ["Engine", "EngineReport", "Request", "PAGE_TOKENS", "GatherPlan",
+           "MorpheusPagePool", "PoolConfig", "page_key", "sampler"]

@@ -1,0 +1,321 @@
+"""Two-tier Morpheus page pool for serving — the paper's technique as a
+first-class serving feature.
+
+Pages (KV blocks of ``page_tokens`` tokens, MLA latents, or expert/embed
+rows) are cached in:
+
+  * the **conventional tier** — the compute chips' local HBM page pool
+    (hardware-managed analogue: plain set-assoc store, no predictor), and
+  * the **extended tier** — capacity contributed by cache-mode chips,
+    reached over ICI, fronted by the double-Bloom hit/miss predictor so
+    predicted misses skip the interconnect round trip (paper Fig. 5/6).
+
+The controller runs OUT-OF-BAND between decode steps on small arrays (the
+vLLM-style structure, see DESIGN.md): ``lookup_batch`` routes a batch of
+page keys, queries/updates the predictor and tag stores via the *batched
+Pallas kernels* (tag_lookup / bloom_query), and emits a gather plan the
+compiled step consumes.  Page payloads live in dense pools; BDI compression
+(kernels/bdi.py) stretches the extended tier's effective capacity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import address_separation as asep
+from ..core.energy import TPUv5e
+from ..kernels import ops as K
+
+Array = jnp.ndarray
+
+
+@dataclass(frozen=True)
+class PoolConfig:
+    conv_sets: int = 256
+    ext_sets_per_chip: int = 64
+    num_cache_chips: int = 4
+    ways: int = 8
+    page_words: int = 32          # uint32 words per page payload slot
+    compression: bool = True
+    predictor: str = "bloom"      # bloom | none | perfect
+    bloom_words: int = 8          # 32-byte filters (paper)
+
+    @property
+    def amap(self) -> asep.AddressMap:
+        return asep.make_map(conv_sets=self.conv_sets,
+                             num_cache_chips=self.num_cache_chips,
+                             sets_per_chip=self.ext_sets_per_chip)
+
+
+class PoolStats(NamedTuple):
+    conv_hits: int
+    conv_misses: int
+    ext_hits: int
+    ext_false_pos: int
+    ext_pred_miss: int
+    backing_fetches: int
+    time_ns: float
+    energy_nJ: float
+
+    @staticmethod
+    def zero() -> "PoolStats":
+        return PoolStats(0, 0, 0, 0, 0, 0, 0.0, 0.0)
+
+    def __add__(self, o: "PoolStats") -> "PoolStats":
+        return PoolStats(*[a + b for a, b in zip(self, o)])
+
+
+class GatherPlan(NamedTuple):
+    """What the compiled step consumes: where each requested page lives."""
+    tier: np.ndarray        # (N,) 0=conv 1=ext 2=backing(fetch+fill)
+    set_idx: np.ndarray     # (N,) set within the tier
+    way: np.ndarray         # (N,) way within the set (valid for hits)
+
+
+class MorpheusPagePool:
+    """Functional-core, convenient-shell page pool.
+
+    State arrays are jnp (so kernels run on device); the planning logic is
+    numpy (it's per-step control flow, exactly the part real systems keep on
+    host)."""
+
+    def __init__(self, cfg: PoolConfig):
+        self.cfg = cfg
+        amap = cfg.amap
+        cs, es, w = max(amap.conv_sets, 1), max(amap.ext_sets, 1), cfg.ways
+        self.conv_tags = jnp.zeros((cs, w), jnp.uint32)
+        self.conv_valid = jnp.zeros((cs, w), jnp.bool_)
+        self.conv_lru = jnp.zeros((cs, w), jnp.uint32)
+        mw = w * 4 if cfg.compression else w
+        self.ext_tags = jnp.zeros((es, mw), jnp.uint32)
+        self.ext_valid = jnp.zeros((es, mw), jnp.bool_)
+        self.ext_lru = jnp.zeros((es, mw), jnp.uint32)
+        self.ext_size = np.zeros((es, mw), np.int32)
+        self.ext_used = np.zeros((es,), np.int32)
+        self.bf1 = jnp.zeros((es, cfg.bloom_words), jnp.uint32)
+        self.bf2 = jnp.zeros((es, cfg.bloom_words), jnp.uint32)
+        self.n_mru = np.zeros((es,), np.int32)
+        # payload pools (uint32 words); extended pool stores BDI payloads
+        self.conv_data = jnp.zeros((cs, w, cfg.page_words), jnp.uint32)
+        self.ext_data = jnp.zeros((es, mw, cfg.page_words), jnp.uint32)
+        self.ext_level = jnp.full((es, mw), 2, jnp.int32)
+        self.ext_base = jnp.zeros((es, mw), jnp.uint32)
+        self.stats = PoolStats.zero()
+        self.costs = TPUv5e()
+
+    # ------------------------------------------------------------ planning
+    def lookup_batch(self, keys: np.ndarray) -> GatherPlan:
+        """Route a batch of page keys; update predictor/tag state; account
+        latency/energy with the TPU tier constants."""
+        cfg = self.cfg
+        amap = cfg.amap
+        keys = np.asarray(keys, np.uint32)
+        tier, local = asep.route(amap, jnp.asarray(keys))
+        tier, local = np.asarray(tier), np.asarray(local)
+        tags = np.asarray(asep.tag_of(amap, jnp.asarray(keys)))
+
+        n = len(keys)
+        out_tier = np.full(n, 2, np.int32)
+        out_set = local.copy()
+        out_way = np.zeros(n, np.int32)
+        add = dict(conv_hits=0, conv_misses=0, ext_hits=0, ext_false_pos=0,
+                   ext_pred_miss=0, backing_fetches=0, time_ns=0.0,
+                   energy_nJ=0.0)
+        c = self.costs
+
+        # ---- conventional tier (batched kernel over the full store)
+        conv_mask = tier == asep.CONVENTIONAL
+        if conv_mask.any():
+            idx = np.nonzero(conv_mask)[0]
+            req = np.zeros(self.conv_tags.shape[0], np.uint32)
+            req_set = local[idx]
+            # serialize duplicate sets within one batch (one request per
+            # set per round — the paper's one-warp-one-request rule)
+            for rnd in range(4):
+                first = _first_per_set(req_set)
+                if first.size == 0:
+                    break
+                sel = idx[first]
+                req[:] = 0
+                req[local[sel]] = tags[sel]
+                hit, way, new_lru = K.tag_lookup(
+                    self.conv_tags, self.conv_valid, self.conv_lru,
+                    jnp.asarray(req))
+                hit = np.asarray(hit, bool)[local[sel]]
+                way = np.asarray(way)[local[sel]]
+                self.conv_lru = new_lru
+                for j, (gi, h, w_) in enumerate(zip(sel, hit, way)):
+                    if h:
+                        out_tier[gi] = 0
+                        out_way[gi] = w_
+                        add["conv_hits"] += 1
+                        add["time_ns"] += c.local_hbm.hit_latency_ns
+                    else:
+                        self._conv_fill(local[gi], tags[gi])
+                        add["conv_misses"] += 1
+                        add["backing_fetches"] += 1
+                        add["time_ns"] += c.local_hbm.miss_latency_ns
+                req_set, idx = _drop_first(req_set, idx, first)
+
+        # ---- extended tier: predictor -> remote lookup
+        ext_mask = tier == asep.EXTENDED
+        if ext_mask.any() and amap.ext_sets > 0:
+            idx = np.nonzero(ext_mask)[0]
+            sets = local[idx]
+            # predictor (batched bloom kernel over pre-gathered filters)
+            filt = jnp.asarray(np.asarray(self.bf1)[sets])
+            pred, _ = K.bloom_query(filt, jnp.asarray(tags[idx]))
+            if cfg.predictor == "none":
+                pred = np.ones(len(idx), bool)
+            else:
+                pred = np.asarray(pred, bool)
+            ehit, eway = self._ext_lookup(sets, tags[idx])
+            if cfg.predictor == "perfect":
+                pred = ehit.copy()
+            for j, gi in enumerate(idx):
+                if pred[j] and ehit[j]:
+                    out_tier[gi] = 1
+                    out_way[gi] = eway[j]
+                    add["ext_hits"] += 1
+                    add["time_ns"] += c.remote_hbm.hit_latency_ns
+                elif pred[j]:   # forwarded but miss: full remote penalty
+                    add["ext_false_pos"] += 1
+                    add["backing_fetches"] += 1
+                    add["time_ns"] += c.remote_hbm.miss_latency_ns
+                else:           # predicted miss: straight to backing tier
+                    add["ext_pred_miss"] += 1
+                    add["backing_fetches"] += 1
+                    add["time_ns"] += c.local_hbm.miss_latency_ns
+                self._bloom_record(sets[j], tags[idx[j]])
+            self._ext_fill(sets[~ehit], tags[idx[~ehit]])
+
+        self.stats = self.stats + PoolStats(**add)
+        return GatherPlan(out_tier, out_set, out_way)
+
+    # ------------------------------------------------------------ payloads
+    def write_page(self, key: int, payload_words: Array):
+        """Install a page payload after a backing fetch (insert path)."""
+        cfg = self.cfg
+        amap = cfg.amap
+        tier, local = asep.route(amap, jnp.uint32(key))
+        tag = asep.tag_of(amap, jnp.uint32(key))
+        tier, local = int(tier), int(local)
+        if tier == asep.CONVENTIONAL:
+            hit, way = self._probe(self.conv_tags, self.conv_valid,
+                                   local, int(tag))
+            if hit:
+                self.conv_data = self.conv_data.at[local, way].set(
+                    payload_words)
+            return
+        hit, way = self._probe(self.ext_tags, self.ext_valid, local, int(tag))
+        if hit:
+            if cfg.compression:
+                lvl, base, pay = K.bdi_compress(payload_words[None])
+                self.ext_level = self.ext_level.at[local, way].set(lvl[0])
+                self.ext_base = self.ext_base.at[local, way].set(base[0])
+                self.ext_data = self.ext_data.at[local, way].set(pay[0])
+            else:
+                self.ext_data = self.ext_data.at[local, way].set(payload_words)
+
+    def read_pages(self, plan: GatherPlan) -> Array:
+        """Gather hit pages per plan (tier 2 rows return zeros — caller
+        fetches those from the backing store)."""
+        n = len(plan.tier)
+        out = np.zeros((n, self.cfg.page_words), np.uint32)
+        conv = plan.tier == 0
+        if conv.any():
+            rows = K.gather_blocks(self.conv_data[plan.set_idx[conv]],
+                                   jnp.asarray(plan.way[conv]))
+            out[conv] = np.asarray(rows)
+        ext = plan.tier == 1
+        if ext.any():
+            sets = plan.set_idx[ext]
+            ways = jnp.asarray(plan.way[ext])
+            # fused Indirect-MOV gather + BDI decompress-on-read
+            lvl = jnp.asarray(np.asarray(self.ext_level)[sets, plan.way[ext]])
+            base = jnp.asarray(np.asarray(self.ext_base)[sets, plan.way[ext]])
+            rows = K.cached_block_read(self.ext_data[sets], ways, lvl, base)
+            out[ext] = np.asarray(rows)
+        return jnp.asarray(out)
+
+    # ------------------------------------------------------------ internals
+    def _probe(self, tags, valid, s: int, tag: int) -> Tuple[bool, int]:
+        row_t = np.asarray(tags[s])
+        row_v = np.asarray(valid[s])
+        m = row_v & (row_t == np.uint32(tag))
+        if m.any():
+            return True, int(np.argmax(m))
+        return False, 0
+
+    def _conv_fill(self, s: int, tag: int):
+        row_v = np.asarray(self.conv_valid[s])
+        row_l = np.asarray(self.conv_lru[s]).astype(np.int64)
+        row_l[~row_v] = -1
+        w = int(np.argmin(row_l))
+        self.conv_tags = self.conv_tags.at[s, w].set(np.uint32(tag))
+        self.conv_valid = self.conv_valid.at[s, w].set(True)
+        self.conv_lru = self.conv_lru.at[s, w].set(0xFFF)
+
+    def _ext_lookup(self, sets: np.ndarray, tags: np.ndarray):
+        t = np.asarray(self.ext_tags)[sets]
+        v = np.asarray(self.ext_valid)[sets]
+        m = v & (t == tags[:, None])
+        return m.any(axis=1), np.argmax(m, axis=1).astype(np.int32)
+
+    def _ext_fill(self, sets: np.ndarray, tags: np.ndarray):
+        for s, tag in zip(sets, tags):
+            v = np.asarray(self.ext_valid[s])
+            l = np.asarray(self.ext_lru[s]).astype(np.int64)
+            l[~v] = -1
+            w = int(np.argmin(l))
+            self.ext_tags = self.ext_tags.at[int(s), w].set(np.uint32(tag))
+            self.ext_valid = self.ext_valid.at[int(s), w].set(True)
+            self.ext_lru = self.ext_lru.at[int(s), w].set(0xFFF)
+
+    def _bloom_record(self, s: int, tag: int):
+        _, mask = K.bloom_query(self.bf1[int(s)][None],
+                                jnp.asarray([tag], jnp.uint32))
+        in_bf2, _ = K.bloom_query(self.bf2[int(s)][None],
+                                  jnp.asarray([tag], jnp.uint32))
+        self.bf1 = self.bf1.at[int(s)].set(self.bf1[int(s)] | mask[0])
+        self.bf2 = self.bf2.at[int(s)].set(self.bf2[int(s)] | mask[0])
+        if not bool(in_bf2[0]):
+            self.n_mru[int(s)] += 1
+        if self.n_mru[int(s)] >= self.cfg.ways:   # swap (paper Fig. 6 (9))
+            self.bf1 = self.bf1.at[int(s)].set(self.bf2[int(s)])
+            self.bf2 = self.bf2.at[int(s)].set(jnp.zeros_like(self.bf2[int(s)]))
+            self.n_mru[int(s)] = 0
+
+    # ------------------------------------------------------------- metrics
+    def hit_rate(self) -> float:
+        s = self.stats
+        total = (s.conv_hits + s.conv_misses + s.ext_hits + s.ext_false_pos
+                 + s.ext_pred_miss)
+        return (s.conv_hits + s.ext_hits) / max(total, 1)
+
+
+def _first_per_set(req_set: np.ndarray) -> np.ndarray:
+    """Indices of the first occurrence of each set in the batch."""
+    _, first = np.unique(req_set, return_index=True)
+    return np.sort(first)
+
+
+def _drop_first(req_set: np.ndarray, idx: np.ndarray, first: np.ndarray):
+    mask = np.ones(len(req_set), bool)
+    mask[first] = False
+    return req_set[mask], idx[mask]
+
+
+def page_key(seq_hash: int, layer: int, page: int) -> int:
+    """Stable 32-bit page key from (sequence-prefix hash, layer, page#).
+    Python-int arithmetic masked to 64 bits (wraparound is intentional)."""
+    m64 = (1 << 64) - 1
+    x = (int(seq_hash) * 0x9E3779B97F4A7C15
+         + int(layer) * 0x85EBCA77C2B2AE63
+         + int(page)) & m64
+    x ^= x >> 33
+    return x & 0xFFFFFFFF

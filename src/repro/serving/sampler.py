@@ -1,0 +1,21 @@
+"""Token samplers for the decode loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(rng, logits: jnp.ndarray, *, temperature: float = 1.0,
+           top_k: int = 0) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0:
+        return greedy(logits)
+    logits = logits / temperature
+    if top_k:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

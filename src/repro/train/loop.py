@@ -1,0 +1,52 @@
+"""End-to-end training loop: data pipeline + train step + supervisor."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from ..configs.base import ArchConfig
+from ..data import make_pipeline, shard_batch
+from ..distributed.fault_tolerance import (SupervisorConfig, SupervisorReport,
+                                           TrainSupervisor)
+from ..models import build_model
+from ..optim import AdamW, Int8Compressor, cosine_with_warmup
+from . import train_step as TS
+
+
+def train(cfg: ArchConfig, *, steps: int = 100, batch: int = 8,
+          seq: int = 128, lr: float = 3e-4, mesh=None, microbatches: int = 1,
+          grad_compression: bool = False, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 50, seed: int = 0, log_every: int = 10,
+          print_fn=print):
+    model = build_model(cfg)
+    opt = AdamW(learning_rate=lr,
+                schedule=cosine_with_warmup(min(20, steps // 10 + 1), steps))
+    comp = Int8Compressor() if grad_compression else None
+    state = TS.init_state(model, opt, jax.random.PRNGKey(seed),
+                          compressor=comp)
+    step_raw = TS.make_train_step(model, opt, microbatches=microbatches,
+                                  compressor=comp)
+    step = jax.jit(step_raw, donate_argnums=(0,))
+
+    pipe = make_pipeline(cfg.vocab_size, batch, seq, seed=seed)
+
+    losses = []
+
+    def wrapped(state, np_batch):
+        b = shard_batch(np_batch, mesh)
+        state, metrics = step(state, b)
+        losses.append(float(metrics["loss"]))
+        if len(losses) % log_every == 0:
+            print_fn(f"step {len(losses):5d} loss {losses[-1]:.4f}")
+        return state, metrics
+
+    if ckpt_dir:
+        sup = TrainSupervisor(SupervisorConfig(ckpt_dir=ckpt_dir,
+                                               ckpt_every=ckpt_every))
+        state, rep = sup.run(wrapped, state, pipe, num_steps=steps)
+        return state, losses, rep
+    for i, np_batch in zip(range(steps), pipe):
+        state, _ = wrapped(state, np_batch)
+    return state, losses, SupervisorReport(steps_run=steps,
+                                           last_loss=losses[-1])

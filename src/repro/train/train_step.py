@@ -1,0 +1,76 @@
+"""Train step factory: value_and_grad + microbatch gradient accumulation
+(+ optional int8 gradient compression with error feedback) + AdamW.
+
+Microbatching serves two purposes at scale: (1) activation memory, and
+(2) compute/communication overlap — XLA overlaps each microbatch's
+reduce-scatter with the next microbatch's backward pass.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import LM
+from ..optim import AdamW, AdamWState, CompressorState, Int8Compressor
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: AdamWState
+    comp: Optional[CompressorState]
+
+
+def init_state(model: LM, optimizer: AdamW, rng,
+               compressor: Optional[Int8Compressor] = None) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      comp=compressor.init(params) if compressor else None)
+
+
+def make_train_step(model: LM, optimizer: AdamW, *, microbatches: int = 1,
+                    compressor: Optional[Int8Compressor] = None,
+                    remat: bool = True):
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def slice_mb(i, x):
+            mb = x.shape[0] // microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            acc_loss, acc_grads = carry
+            mb = jax.tree.map(lambda x: slice_mb(i, x), batch)
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                               acc_grads, g)
+            return (acc_loss + l, acc), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (tot_loss, tot_grads), _ = jax.lax.scan(
+            body, (jnp.float32(0), zero), jnp.arange(microbatches))
+        scale = 1.0 / microbatches
+        return tot_loss * scale, jax.tree.map(lambda g: g * scale, tot_grads)
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        loss, grads = grads_of(state.params, batch)
+        comp = state.comp
+        if compressor is not None and comp is not None:
+            grads, comp = compressor.roundtrip(grads, comp)
+        params, opt = optimizer.update(grads, state.opt, state.params)
+        metrics = {"loss": loss,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in jax.tree.leaves(grads)))}
+        return TrainState(params, opt, comp), metrics
+
+    return step

@@ -1,0 +1,113 @@
+"""Integration tests for the Morpheus controller state machine."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import address_separation as asep
+from repro.core import controller as ctl
+
+
+def _cfg(conv_sets=8, chips=2, sets_per_chip=4, **kw):
+    amap = asep.make_map(conv_sets=conv_sets, num_cache_chips=chips,
+                         sets_per_chip=sets_per_chip)
+    return ctl.MorpheusConfig(amap=amap, conv_ways=4, ext_ways=4, **kw)
+
+
+def _sim(cfg, addrs, writes=None, levels=None):
+    addrs = np.asarray(addrs, np.uint32)
+    writes = np.zeros(len(addrs), bool) if writes is None else np.asarray(writes)
+    levels = np.full(len(addrs), 2, np.int32) if levels is None else np.asarray(levels)
+    return ctl.simulate(cfg, jnp.asarray(addrs), jnp.asarray(writes),
+                        jnp.asarray(levels))
+
+
+def test_conventional_only_no_ext_traffic():
+    amap = asep.make_map(conv_sets=8, num_cache_chips=0, sets_per_chip=0)
+    cfg = ctl.MorpheusConfig(amap=amap, conv_ways=4, ext_ways=4)
+    stats = _sim(cfg, [0, 16, 0, 16, 0])  # both map to conventional sets
+    assert int(stats.ext_hits + stats.ext_true_miss) == 0
+    assert float(stats.noc_bytes) == 0.0
+    assert int(stats.conv_hits) == 3 and int(stats.conv_misses) == 2
+
+
+def test_repeat_access_hits_in_each_tier():
+    cfg = _cfg()
+    # total_sets = 8 + 8 = 16; addr 0 -> set 0 (conv); addr 8 -> set 8 (ext)
+    stats = _sim(cfg, [0, 0, 0, 8, 8, 8])
+    assert int(stats.conv_hits) == 2 and int(stats.conv_misses) == 1
+    assert int(stats.ext_hits) == 2 and int(stats.ext_true_miss) == 1
+    # first ext access: empty BF1 -> predicted miss (not a false positive)
+    assert int(stats.ext_pred_miss) == 1
+    assert int(stats.ext_false_pos) == 0
+
+
+def test_bloom_never_false_negative_vs_perfect():
+    """BLOOM must forward (at least) every request PERFECT forwards: its
+    ext_hits equals PERFECT's ext_hits on any trace."""
+    rng = np.random.default_rng(3)
+    addrs = rng.integers(0, 256, size=1500).astype(np.uint32)
+    base = _cfg(conv_sets=8, chips=2, sets_per_chip=4)
+    s_bloom = _sim(base, addrs)
+    s_perfect = _sim(_cfg(predictor=ctl.Predictor.PERFECT), addrs)
+    assert int(s_bloom.ext_hits) == int(s_perfect.ext_hits)
+    assert int(s_perfect.ext_false_pos) == 0
+
+
+def test_no_prediction_forwards_everything():
+    rng = np.random.default_rng(4)
+    addrs = rng.integers(0, 256, size=800).astype(np.uint32)
+    s_none = _sim(_cfg(predictor=ctl.Predictor.NONE), addrs)
+    assert int(s_none.ext_pred_miss) == 0
+    # every miss is a (costly) forwarded miss
+    assert int(s_none.ext_false_pos) == int(s_none.ext_true_miss)
+
+
+def test_predictor_latency_ordering():
+    """Fig. 13: Perfect <= Bloom <= No-Prediction in total latency."""
+    rng = np.random.default_rng(5)
+    addrs = rng.integers(0, 512, size=3000).astype(np.uint32)
+    lat = {}
+    for p in ctl.Predictor:
+        lat[p] = float(_sim(_cfg(predictor=p), addrs).latency_ns)
+    assert lat[ctl.Predictor.PERFECT] <= lat[ctl.Predictor.BLOOM] + 1e-3
+    assert lat[ctl.Predictor.BLOOM] <= lat[ctl.Predictor.NONE] + 1e-3
+
+
+def test_compression_increases_ext_hits():
+    """Zipf-ish trace with highly compressible blocks: compression must not
+    reduce (and normally increases) extended-tier hits."""
+    rng = np.random.default_rng(6)
+    u = rng.random(6000)
+    addrs = ((u ** 2.0) * 1024).astype(np.uint32)
+    levels = np.zeros(len(addrs), np.int32)  # all HIGH-compressible
+    s_off = _sim(_cfg(), addrs, levels=levels)
+    s_on = _sim(_cfg(compression=True), addrs, levels=levels)
+    assert int(s_on.ext_hits) >= int(s_off.ext_hits)
+
+
+def test_indirect_mov_reduces_latency():
+    rng = np.random.default_rng(7)
+    addrs = rng.integers(0, 128, size=2000).astype(np.uint32)
+    s_base = _sim(_cfg(), addrs)
+    s_imov = _sim(_cfg(indirect_mov=True), addrs)
+    assert int(s_imov.ext_hits) == int(s_base.ext_hits)   # same behaviour
+    assert float(s_imov.latency_ns) < float(s_base.latency_ns)
+
+
+def test_writeback_accounting():
+    cfg = _cfg(conv_sets=1, chips=1, sets_per_chip=1)  # tiny: 1 conv, 1 ext set
+    # conv set: ways=4; write 5 distinct conv-mapped blocks (set 0 of 2 total)
+    addrs = [0, 2, 4, 6, 8]  # even -> set 0 (conv), total_sets=2
+    stats = _sim(cfg, addrs, writes=[True] * 5)
+    assert int(stats.writebacks) == 1  # 5th insert evicts a dirty block
+
+
+def test_stats_conservation():
+    """Every request is accounted in exactly one outcome bucket."""
+    rng = np.random.default_rng(8)
+    addrs = rng.integers(0, 4096, size=4000).astype(np.uint32)
+    s = _sim(_cfg(conv_sets=32, chips=4, sets_per_chip=8), addrs)
+    total = (int(s.conv_hits) + int(s.conv_misses) + int(s.ext_hits)
+             + int(s.ext_true_miss))
+    assert total == 4000
+    assert int(s.ext_true_miss) == int(s.ext_false_pos) + int(s.ext_pred_miss)

@@ -1,0 +1,201 @@
+"""Unit + property tests: tag store, address separation, BDI, extended cache."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import address_separation as asep
+from repro.core import compression as bdi
+from repro.core import extended_cache as ec
+from repro.core import tag_store as ts
+
+
+# ---------------------------------------------------------------- tag store
+
+def test_tag_store_miss_then_hit():
+    s = ts.make_state(num_sets=4, ways=4)
+    r = ts.lookup(s, jnp.int32(1), jnp.uint32(42))
+    assert not bool(r.hit)
+    s, ins = ts.insert(s, jnp.int32(1), jnp.uint32(42))
+    assert not bool(ins.evicted_valid)
+    r = ts.lookup(s, jnp.int32(1), jnp.uint32(42))
+    assert bool(r.hit) and int(r.way) == int(ins.way)
+
+
+def test_tag_store_lru_eviction_order():
+    ways = 4
+    s = ts.make_state(num_sets=1, ways=ways)
+    for t in range(ways):
+        s, _ = ts.insert(s, jnp.int32(0), jnp.uint32(t))
+    # touch tag 0 so it becomes MRU; next insert must evict tag 1
+    r = ts.lookup(s, jnp.int32(0), jnp.uint32(0))
+    s = ts.touch(s, jnp.int32(0), r.way)
+    s, ins = ts.insert(s, jnp.int32(0), jnp.uint32(99))
+    assert bool(ins.evicted_valid)
+    assert int(ins.evicted_tag) == 1
+
+
+def test_tag_store_dirty_writeback_flag():
+    s = ts.make_state(num_sets=1, ways=1)
+    s, _ = ts.insert(s, jnp.int32(0), jnp.uint32(7), write=True)
+    s, ins = ts.insert(s, jnp.int32(0), jnp.uint32(8))
+    assert bool(ins.evicted_dirty)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 63), min_size=1, max_size=80),
+       st.integers(2, 8))
+def test_property_tag_store_matches_lru_model(seq, ways):
+    """The jax tag store must track a reference python LRU set exactly."""
+    s = ts.make_state(num_sets=1, ways=ways)
+    model: list[int] = []
+    for t in seq:
+        r = ts.lookup(s, jnp.int32(0), jnp.uint32(t))
+        assert bool(r.hit) == (t in model)
+        if t in model:
+            s = ts.touch(s, jnp.int32(0), r.way)
+            model.remove(t)
+            model.append(t)
+        else:
+            s, _ = ts.insert(s, jnp.int32(0), jnp.uint32(t))
+            model.append(t)
+            model = model[-ways:]
+
+
+# ------------------------------------------------------- address separation
+
+def test_route_partition_is_total_and_disjoint():
+    amap = asep.make_map(conv_sets=64, num_cache_chips=4, sets_per_chip=16)
+    addrs = jnp.arange(4096, dtype=jnp.uint32)
+    tier, local = asep.route(amap, addrs)
+    assert set(np.unique(np.asarray(tier))) <= {asep.CONVENTIONAL, asep.EXTENDED}
+    conv = np.asarray(local)[np.asarray(tier) == asep.CONVENTIONAL]
+    ext = np.asarray(local)[np.asarray(tier) == asep.EXTENDED]
+    assert conv.max() < 64 and conv.min() >= 0
+    assert ext.max() < 64 and ext.min() >= 0
+
+
+def test_route_proportional_split():
+    amap = asep.make_map(conv_sets=100, num_cache_chips=10, sets_per_chip=30)
+    addrs = jnp.arange(40_000, dtype=jnp.uint32)
+    tier, _ = asep.route(amap, addrs)
+    frac_ext = float(jnp.mean((tier == asep.EXTENDED).astype(jnp.float32)))
+    assert abs(frac_ext - 300 / 400) < 0.01  # proportional to capacity
+
+
+def test_owner_and_unit_mapping():
+    amap = asep.make_map(conv_sets=10, num_cache_chips=4, sets_per_chip=12,
+                         vmem_fraction=0.5)
+    ext_sets = jnp.arange(48, dtype=jnp.int32)
+    owners = np.asarray(asep.owner_of(amap, ext_sets))
+    assert (np.bincount(owners) == 12).all()       # even tiling
+    units = np.asarray(asep.unit_of(amap, ext_sets))
+    assert (np.bincount(units) == 24).all()        # 50/50 vmem/hbm
+
+
+def test_tag_set_roundtrip_unique():
+    amap = asep.make_map(conv_sets=16, num_cache_chips=2, sets_per_chip=8)
+    addrs = jnp.arange(10_000, dtype=jnp.uint32)
+    s = asep.set_index(amap, addrs)
+    t = asep.tag_of(amap, addrs)
+    recon = np.asarray(t, dtype=np.uint64) * amap.total_sets + np.asarray(s)
+    np.testing.assert_array_equal(recon, np.arange(10_000, dtype=np.uint64))
+
+
+# ----------------------------------------------------------------- BDI
+
+def test_bdi_levels():
+    base = np.uint32(1000)
+    high = jnp.asarray([base + i for i in range(32)], jnp.uint32)[None]
+    low = jnp.asarray([base + i * 300 for i in range(32)], jnp.uint32)[None]
+    unc = jnp.asarray(np.random.default_rng(0).integers(
+        0, 2**32, size=(1, 32), dtype=np.uint32))
+    assert int(bdi.classify(high)[0]) == bdi.HIGH
+    assert int(bdi.classify(low)[0]) == bdi.LOW
+    assert int(bdi.classify(unc)[0]) == bdi.UNCOMP
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(-127, 127))
+def test_property_bdi_roundtrip_high(base, delta):
+    block = (np.uint64(base) + np.uint64(delta % 97)
+             * np.arange(32, dtype=np.uint64)) % np.uint64(2**32)
+    blocks = jnp.asarray(block.astype(np.uint32))[None]
+    c = bdi.compress(blocks)
+    out = bdi.decompress(c)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(blocks))
+
+
+def test_bdi_roundtrip_random_blocks():
+    rng = np.random.default_rng(1)
+    blocks = jnp.asarray(rng.integers(0, 2**32, size=(64, 32), dtype=np.uint32))
+    c = bdi.compress(blocks)
+    np.testing.assert_array_equal(np.asarray(bdi.decompress(c)),
+                                  np.asarray(blocks))
+
+
+def test_bdi_allocator_adapts():
+    a = bdi.make_allocator(total_bytes=32 * 128, epoch_len=10)
+    assert int(bdi.effective_capacity_blocks(a)) == 32  # all UNCOMP initially
+    for _ in range(10):
+        a = bdi.allocator_observe(a, jnp.int32(bdi.HIGH))
+    # after one all-HIGH epoch most slots go to HIGH -> capacity grows ~4x
+    assert int(bdi.effective_capacity_blocks(a)) > 100
+
+
+# ----------------------------------------------------------- extended cache
+
+def test_ext_cache_compressed_holds_more_blocks():
+    ways = 4  # budget = 512 B
+    s = ec.make_state(num_sets=1, ways=ways, compression=True)
+    budget = ec.set_budget_bytes(ways)
+    # insert 16 HIGH-compressible (32 B) blocks: all fit, no eviction
+    for t in range(16):
+        s, r = ec.insert(s, jnp.int32(0), jnp.uint32(t), jnp.int32(32), budget)
+        assert int(r.evictions) == 0
+    for t in range(16):
+        hit, _ = ec.lookup(s, jnp.int32(0), jnp.uint32(t))
+        assert bool(hit)
+
+
+def test_ext_cache_uncompressed_evicts_at_ways():
+    ways = 4
+    s = ec.make_state(num_sets=1, ways=ways, compression=False)
+    budget = ec.set_budget_bytes(ways)
+    for t in range(ways):
+        s, r = ec.insert(s, jnp.int32(0), jnp.uint32(t), jnp.int32(128), budget)
+        assert int(r.evictions) == 0
+    s, r = ec.insert(s, jnp.int32(0), jnp.uint32(99), jnp.int32(128), budget)
+    assert int(r.evictions) == 1
+
+
+def test_ext_cache_big_insert_evicts_several_small():
+    ways = 1  # budget = 128 B
+    s = ec.make_state(num_sets=1, ways=ways, compression=True)
+    budget = ec.set_budget_bytes(ways)
+    for t in range(4):
+        s, _ = ec.insert(s, jnp.int32(0), jnp.uint32(t), jnp.int32(32), budget)
+    s, r = ec.insert(s, jnp.int32(0), jnp.uint32(50), jnp.int32(128), budget)
+    assert int(r.evictions) == 4  # one 128-B block displaces four 32-B blocks
+    assert int(jnp.sum(s.used)) == 128
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 31), st.sampled_from([32, 64, 128])),
+                min_size=1, max_size=60))
+def test_property_ext_cache_budget_never_exceeded(ops):
+    ways = 4
+    s = ec.make_state(num_sets=2, ways=ways, compression=True)
+    budget = ec.set_budget_bytes(ways)
+    for tag, size in ops:
+        hit, way = ec.lookup(s, jnp.int32(tag % 2), jnp.uint32(tag))
+        if bool(hit):
+            s = ec.touch(s, jnp.int32(tag % 2), way)
+        else:
+            s, _ = ec.insert(s, jnp.int32(tag % 2), jnp.uint32(tag),
+                             jnp.int32(size), budget)
+        assert int(jnp.max(s.used)) <= budget
+        # `used` accounting must equal the sum of live block sizes
+        np.testing.assert_array_equal(
+            np.asarray(jnp.sum(jnp.where(s.valid, s.size, 0), axis=1)),
+            np.asarray(s.used))

@@ -1,0 +1,184 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def rng(i=0):
+    return np.random.default_rng(i)
+
+
+# ------------------------------------------------------------ tag lookup
+
+@pytest.mark.parametrize("sets,ways", [(256, 32), (512, 16), (1024, 8),
+                                       (256, 64)])
+def test_tag_lookup_matches_ref(sets, ways):
+    r = rng(1)
+    tags = jnp.asarray(r.integers(0, 64, (sets, ways), dtype=np.uint32))
+    valid = jnp.asarray(r.random((sets, ways)) < 0.7)
+    lru = jnp.asarray(r.integers(0, 4096, (sets, ways), dtype=np.uint32))
+    req = jnp.asarray(r.integers(0, 64, (sets,), dtype=np.uint32))
+
+    hit_k, way_k, lru_k = ops.tag_lookup(tags, valid, lru, req)
+    hit_r, way_r, lru_r = ref.tag_lookup(tags, valid, lru, req)
+
+    np.testing.assert_array_equal(np.asarray(hit_k, bool), np.asarray(hit_r))
+    # way only defined on hit
+    h = np.asarray(hit_r)
+    np.testing.assert_array_equal(np.asarray(way_k)[h], np.asarray(way_r)[h])
+    np.testing.assert_array_equal(np.asarray(lru_k), np.asarray(lru_r))
+
+
+def test_tag_lookup_hit_way_correct():
+    tags = jnp.asarray([[5, 9, 7, 7]], dtype=jnp.uint32)
+    valid = jnp.asarray([[True, True, False, True]])
+    lru = jnp.zeros((1, 4), jnp.uint32)
+    hit, way, new_lru = ops.tag_lookup(tags, valid, lru,
+                                       jnp.asarray([7], jnp.uint32))
+    assert bool(hit[0]) and int(way[0]) == 3  # way 2 invalid -> way 3
+    assert int(new_lru[0, 3]) == 0xFFF
+
+
+# ------------------------------------------------------------------ BDI
+
+@pytest.mark.parametrize("n", [256, 1024])
+@pytest.mark.parametrize("kind", ["high", "low", "uncomp", "mixed"])
+def test_bdi_roundtrip_and_levels(n, kind):
+    r = rng(2)
+    base = r.integers(0, 2 ** 32, n, dtype=np.uint64)
+    if kind == "high":
+        deltas = r.integers(-128, 128, (n, 32))
+    elif kind == "low":
+        deltas = r.integers(-32768, 32768, (n, 32))
+    elif kind == "uncomp":
+        deltas = r.integers(-2 ** 31, 2 ** 31, (n, 32))
+    else:
+        deltas = r.integers(-128, 128, (n, 32)) * \
+            r.integers(1, 2 ** 18, (n, 1))
+    blocks = ((base[:, None] + deltas) % 2 ** 32).astype(np.uint32)
+    blocks[:, 0] = base.astype(np.uint32)  # delta-from-first-segment
+    blocks = jnp.asarray(blocks)
+
+    lvl_k, base_k, pay_k = ops.bdi_compress(blocks)
+    lvl_r, base_r, pay_r = ref.bdi_compress(blocks)
+    np.testing.assert_array_equal(np.asarray(lvl_k), np.asarray(lvl_r))
+    np.testing.assert_array_equal(np.asarray(base_k), np.asarray(base_r))
+    np.testing.assert_array_equal(np.asarray(pay_k), np.asarray(pay_r))
+
+    out = ops.bdi_decompress(lvl_k, base_k, pay_k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(blocks))
+
+    if kind == "high":
+        assert (np.asarray(lvl_k) == 0).all()
+    if kind == "uncomp":
+        assert (np.asarray(lvl_k) == 2).mean() > 0.95
+
+
+# --------------------------------------------------------- gather blocks
+
+@pytest.mark.parametrize("sets,ways,words", [(64, 32, 32), (128, 8, 32),
+                                             (64, 16, 16)])
+def test_gather_blocks_matches_ref(sets, ways, words):
+    r = rng(3)
+    data = jnp.asarray(r.integers(0, 2 ** 32, (sets, ways, words),
+                                  dtype=np.uint32))
+    way = jnp.asarray(r.integers(0, ways, (sets,), dtype=np.int32))
+    out_k = ops.gather_blocks(data, way)
+    out_r = ref.gather_blocks(data, way)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+# ----------------------------------------------------------- bloom query
+
+@pytest.mark.parametrize("q,words", [(512, 8), (1024, 16)])
+def test_bloom_query_matches_ref(q, words):
+    r = rng(4)
+    filters = jnp.asarray(r.integers(0, 2 ** 32, (q, words), dtype=np.uint32))
+    tags = jnp.asarray(r.integers(0, 2 ** 24, (q,), dtype=np.uint32))
+    pred_k, masks_k = ops.bloom_query(filters, tags)
+    pred_r = ref.bloom_query(filters, tags)
+    np.testing.assert_array_equal(np.asarray(pred_k, bool),
+                                  np.asarray(pred_r))
+    # inserting via the masks must make every tag predicted-present
+    pred2, _ = ops.bloom_query(filters | masks_k, tags)
+    assert np.asarray(pred2, bool).all()
+
+
+def test_bloom_insert_masks_match_ref_insert():
+    r = rng(5)
+    filters = jnp.zeros((512, 8), jnp.uint32)
+    tags = jnp.asarray(r.integers(0, 2 ** 24, (512,), dtype=np.uint32))
+    _, masks = ops.bloom_query(filters, tags)
+    np.testing.assert_array_equal(np.asarray(filters | masks),
+                                  np.asarray(ref.bloom_insert(filters, tags)))
+
+
+# ----------------------------------------------------------- decode attn
+
+@pytest.mark.parametrize("b,h,kvh,hd,t", [
+    (2, 8, 8, 64, 1024), (2, 8, 2, 64, 1024), (1, 16, 4, 128, 2048),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(b, h, kvh, hd, t, dtype):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, h, hd), dtype)
+    k = jax.random.normal(k2, (b, t, kvh, hd), dtype)
+    v = jax.random.normal(k3, (b, t, kvh, hd), dtype)
+    valid = jnp.asarray(rng(6).random((b, t)) < 0.9)
+
+    out_k = ops.decode_attention(q, k, v, valid)
+    out_r = ref.decode_attention(q, k, v, valid)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_respects_mask():
+    """Fully masking all but one position returns (approx) that value."""
+    b, h, kvh, hd, t = 1, 4, 4, 64, 512
+    q = jnp.ones((b, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, kvh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, kvh, hd))
+    valid = jnp.zeros((b, t), bool).at[:, 137].set(True)
+    out = ops.decode_attention(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(v[:, 137]).reshape(b, h, hd),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ flash attn
+
+@pytest.mark.parametrize("b,s,t,h,kv,hd,hdv,causal,window,cap", [
+    (2, 256, 256, 4, 2, 64, 64, True, 0, 0.0),      # GQA causal
+    (1, 200, 200, 4, 4, 32, 32, True, 0, 50.0),     # softcap + ragged seq
+    (2, 128, 384, 2, 1, 64, 32, False, 0, 0.0),     # cross-attn, MLA v-dim
+    (1, 256, 256, 8, 2, 64, 64, True, 96, 0.0),     # sliding window
+])
+def test_flash_attention_matches_ref(b, s, t, h, kv, hd, hdv, causal,
+                                     window, cap):
+    r = rng(7)
+    q = jnp.asarray(r.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, t, kv, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, t, kv, hdv)), jnp.float32)
+    o_k = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=cap)
+    o_r = ref.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=cap)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    r = rng(8)
+    q = jnp.asarray(r.normal(size=(1, 128, 4, 64)), jnp.bfloat16)
+    k = jnp.asarray(r.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+    v = jnp.asarray(r.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+    o_k = ops.flash_attention(q, k, v)
+    o_r = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               rtol=3e-2, atol=3e-2)

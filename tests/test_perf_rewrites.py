@@ -1,0 +1,140 @@
+"""Equivalence tests for the §Perf hillclimb rewrites.
+
+Every performance-motivated restructure must be a NO-OP numerically:
+  * chunk-parallel SSD == sequential-scan SSD == per-token recurrence,
+  * shard_map MoE (gather-dispatch/scatter-combine) == dense-dispatch MoE,
+    forward AND gradients,
+  * absorbed-MLA decode == full-forward logits at the same position.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.distributed import context as dist_ctx
+from repro.models import build_model
+from repro.models import moe as MoE
+from repro.models.mamba2 import ssd_chunked, ssd_chunked_seq, ssd_step
+
+
+# --------------------------------------------------------------------- SSD
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (2, 64, 4, 8, 2, 16, 8),
+    (1, 32, 6, 4, 3, 8, 16),
+    (2, 128, 4, 8, 1, 16, 32),
+    (1, 16, 2, 4, 1, 4, 16),    # single chunk
+])
+def test_ssd_chunk_parallel_matches_seq(b, s, h, p, g, n, chunk):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(b, s, h)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    init = jnp.asarray(rng.normal(size=(b, h, p, n)), jnp.float32)
+    y1, f1 = ssd_chunked(x, dt, A, B, C, chunk=chunk, init_state=init)
+    y2, f2 = ssd_chunked_seq(x, dt, A, B, C, chunk=chunk, init_state=init)
+    np.testing.assert_allclose(y1, y2, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(f1, f2, rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_matches_token_recurrence():
+    rng = np.random.default_rng(1)
+    b, s, h, p, g, n = 2, 24, 4, 8, 2, 16
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(b, s, h)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    st = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        yt, st = ssd_step(st, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(yt)
+    yr = jnp.stack(ys, axis=1)
+    y, f = ssd_chunked(x, dt, A, B, C, chunk=8)
+    np.testing.assert_allclose(y, yr, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(f, st, rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_gradients_match():
+    rng = np.random.default_rng(2)
+    b, s, h, p, g, n = 1, 32, 2, 4, 1, 8
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(b, s, h)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+
+    def loss(fn, x, B):
+        y, _ = fn(x, dt, A, B, C, chunk=8)
+        return jnp.sum(y ** 2)
+
+    g1 = jax.grad(lambda x, B: loss(ssd_chunked, x, B), argnums=(0, 1))(x, B)
+    g2 = jax.grad(lambda x, B: loss(ssd_chunked_seq, x, B), argnums=(0, 1))(x, B)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------------- MoE
+
+def _moe_fixture():
+    cfg = configs.get("deepseek-moe-16b").reduced()
+    p = MoE.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
+                          jnp.float32)
+    return cfg, p, x
+
+
+def test_moe_shardmap_matches_dense_1x1():
+    cfg, p, x = _moe_fixture()
+    y_dense = MoE._moe_mlp_dense(p, x, cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh, dist_ctx.use_mesh(mesh):
+        y_sm = jax.jit(lambda p, x: MoE.moe_mlp(p, x, cfg))(p, x)
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_sm),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_moe_shardmap_grad_matches_dense_1x1():
+    cfg, p, x = _moe_fixture()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    def loss_sm(p, x):
+        with dist_ctx.use_mesh(mesh):
+            return jnp.sum(MoE.moe_mlp(p, x, cfg) ** 2)
+
+    with mesh:
+        g1 = jax.jit(jax.grad(loss_sm))(p, x)
+    g2 = jax.grad(lambda p, x: jnp.sum(MoE._moe_mlp_dense(p, x, cfg) ** 2))(p, x)
+    for k in ("w_gate", "w_up", "w_down", "router"):
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_moe_no_mesh_uses_dense_path():
+    cfg, p, x = _moe_fixture()
+    assert dist_ctx.get_mesh() is None
+    y1 = MoE.moe_mlp(p, x, cfg)
+    y2 = MoE._moe_mlp_dense(p, x, cfg)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+# ----------------------------------------------------------- absorbed MLA
+
+def test_absorbed_mla_decode_matches_forward():
+    cfg = configs.get("deepseek-v2-lite-16b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 1,
+                              cfg.vocab_size)
+    full = model.forward(params, {"tokens": toks})
+    caches = model.init_caches(2, 16)
+    _, caches = model.prefill(params, {"tokens": toks[:, :8]}, caches)
+    dec, _ = model.decode_step(params, toks[:, 8], caches, jnp.int32(8))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, 8]),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,100 @@
+"""Validate the trip-count-aware HLO cost analyzer against known modules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_cost
+from repro.roofline.analysis import collective_bytes
+from repro.roofline.hw import roofline_terms
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    txt = _compiled_text(lambda a, b: a @ b, x, x)
+    cost = hlo_cost.analyze(txt)
+    assert cost.flops == 2 * 256 ** 3
+
+
+def test_scan_multiplies_by_trip_count():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 128, 128), jnp.float32)
+
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    txt = _compiled_text(scanned, x, ws)
+    cost = hlo_cost.analyze(txt)
+    expected = 7 * 2 * 128 ** 3
+    # XLA may add trivial flops; the dot count must match exactly-ish
+    assert abs(cost.flops - expected) / expected < 0.01, cost.flops
+
+
+def test_nested_scan():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 64, 64), jnp.float32)
+
+    def nested(x, ws):
+        def outer(c, w):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    txt = _compiled_text(nested, x, ws)
+    cost = hlo_cost.analyze(txt)
+    expected = 3 * 5 * 2 * 64 ** 3
+    assert abs(cost.flops - expected) / expected < 0.01, cost.flops
+
+
+def test_bytes_scale_with_trip_count():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+
+    def loop(x):
+        def body(c, _):
+            return c * 2.0 + 1.0, None
+        y, _ = jax.lax.scan(body, x, None, length=11)
+        return y
+
+    txt = _compiled_text(loop, x)
+    cost = hlo_cost.analyze(txt)
+    # each iteration touches >= in+out of the (1024,1024) f32 buffer
+    assert cost.bytes >= 11 * 2 * 4 * 1024 * 1024
+
+
+def test_collective_regex_on_synthetic_hlo():
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[1024,256]) -> f32[1024,256] {
+  %p0 = f32[1024,256]{1,0} parameter(0)
+  %ar = f32[1024,256]{1,0} all-reduce(f32[1024,256]{1,0} %p0), replica_groups={}
+  ROOT %copy = f32[1024,256]{1,0} copy(f32[1024,256]{1,0} %ar)
+}
+"""
+    total, by_kind = collective_bytes(hlo)
+    assert total == 1024 * 256 * 4
+    assert by_kind == {"all-reduce": 1024 * 256 * 4}
+    cost = hlo_cost.analyze(hlo)
+    assert cost.collective_bytes == 1024 * 256 * 4
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops=197e12 * 256, bytes_hbm=1.0,
+                       bytes_collective=1.0, chips=256)
+    assert t["dominant"] == "compute" and abs(t["t_compute_s"] - 1.0) < 1e-9
+    t = roofline_terms(flops=1.0, bytes_hbm=819e9 * 256,
+                       bytes_collective=1.0, chips=256)
+    assert t["dominant"] == "memory"
+    t = roofline_terms(flops=1.0, bytes_hbm=1.0,
+                       bytes_collective=50e9 * 4 * 256, chips=256)
+    assert t["dominant"] == "collective"

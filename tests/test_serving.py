@@ -1,0 +1,148 @@
+"""Serving-tier tests: Morpheus page pool + end-to-end engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serving import (Engine, MorpheusPagePool, PoolConfig, Request,
+                           page_key)
+
+
+def _pool(**kw):
+    base = dict(conv_sets=16, ext_sets_per_chip=8, num_cache_chips=2,
+                ways=4, page_words=32)
+    base.update(kw)
+    return MorpheusPagePool(PoolConfig(**base))
+
+
+def test_pool_miss_then_hit():
+    pool = _pool()
+    keys = np.asarray([12345], np.uint32)
+    plan = pool.lookup_batch(keys)
+    assert plan.tier[0] == 2                    # cold: backing fetch
+    plan = pool.lookup_batch(keys)
+    assert plan.tier[0] in (0, 1)               # now cached in some tier
+    assert pool.stats.backing_fetches == 1
+
+
+def test_pool_routes_both_tiers():
+    pool = _pool()
+    keys = np.arange(0, 64, dtype=np.uint32)
+    pool.lookup_batch(keys)
+    s = pool.stats
+    assert s.conv_misses > 0 and (s.ext_pred_miss + s.ext_false_pos) > 0
+
+
+def test_pool_payload_roundtrip():
+    pool = _pool(compression=True)
+    rng = np.random.default_rng(0)
+    for key in [7, 1003, 50021]:
+        pool.lookup_batch(np.asarray([key], np.uint32))   # install tags
+        payload = jnp.asarray(rng.integers(0, 2**16, 32, dtype=np.uint32))
+        pool.write_page(key, payload)
+        plan = pool.lookup_batch(np.asarray([key], np.uint32))
+        assert plan.tier[0] in (0, 1)
+        out = pool.read_pages(plan)
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      np.asarray(payload))
+
+
+def test_pool_predictor_avoids_remote_on_cold_miss():
+    pool = _pool(predictor="bloom")
+    # cold extended-tier keys: predictor must route them straight to
+    # backing (pred_miss), not across the interconnect (false_pos)
+    keys = []
+    k = 1
+    amap = pool.cfg.amap
+    from repro.core import address_separation as asep
+    while len(keys) < 20:
+        t, _ = asep.route(amap, jnp.uint32(k))
+        if int(t) == asep.EXTENDED:
+            keys.append(k)
+        k += 7919
+    pool.lookup_batch(np.asarray(keys, np.uint32))
+    assert pool.stats.ext_pred_miss == 20
+    assert pool.stats.ext_false_pos == 0
+
+
+def test_pool_no_prediction_pays_remote_penalty():
+    a = _pool(predictor="bloom")
+    b = _pool(predictor="none")
+    keys = np.arange(1000, 1200, dtype=np.uint32)
+    a.lookup_batch(keys)
+    b.lookup_batch(keys)
+    assert b.stats.time_ns > a.stats.time_ns    # Fig. 13 ordering
+    assert a.stats.ext_hits == b.stats.ext_hits  # same semantics
+
+
+@pytest.fixture(scope="module")
+def tiny_engine_model():
+    cfg = configs.get("qwen3-4b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_engine_serves_batch(tiny_engine_model):
+    cfg, model, params = tiny_engine_model
+    eng = Engine(model, params, max_len=64)
+    reqs = [Request(rid=i, prompt=list(range(1, 33)), max_new_tokens=4)
+            for i in range(2)]
+    rep = eng.run(reqs)
+    assert all(len(r.out_tokens) == 4 for r in reqs)
+    assert rep.generated == 8
+
+
+def test_engine_prefix_cache_reuse(tiny_engine_model):
+    """Second batch with identical prompts reuses cached prefix pages."""
+    cfg, model, params = tiny_engine_model
+    eng = Engine(model, params, max_len=64)
+    prompt = list(range(1, 33))
+    r1 = eng.run([Request(0, prompt, 2)])
+    assert r1.pages_reused == 0 and r1.pages_fetched == 2
+    r2 = eng.run([Request(1, prompt, 2)])
+    assert r2.pages_reused >= 2                 # prefix pages hit
+
+
+def test_engine_decode_matches_plain_decode(tiny_engine_model):
+    """The Morpheus tier must not change generated tokens (it only moves
+    where KV pages live)."""
+    cfg, model, params = tiny_engine_model
+    prompt = list(range(5, 25))
+    eng_on = Engine(model, params, max_len=64, morpheus=True)
+    eng_off = Engine(model, params, max_len=64, morpheus=False)
+    r_on = [Request(0, prompt, 6)]
+    r_off = [Request(0, prompt, 6)]
+    eng_on.run(r_on)
+    eng_off.run(r_off)
+    assert r_on[0].out_tokens == r_off[0].out_tokens
+
+
+def test_atomics_serialize_per_page():
+    """§4.2.3: atomicity holds because each extended-LLC block is owned by
+    exactly one warp (here: one pool entry) and each owner services one
+    request at a time.  Emulate global-memory atomicAdd as
+    read-modify-write through the pool and check the final values are
+    exact under interleaving across pages."""
+    pool = _pool(compression=False)
+    pages = [11, 87, 1003]
+    for key in pages:
+        pool.lookup_batch(np.asarray([key], np.uint32))      # install tag
+        pool.write_page(key, jnp.zeros((32,), jnp.uint32))
+
+    import itertools
+    counts = {k: 0 for k in pages}
+    for i, key in enumerate(itertools.chain(*[pages] * 40)):
+        plan = pool.lookup_batch(np.asarray([key], np.uint32))
+        assert int(plan.tier[0]) in (0, 1), "page must stay resident"
+        val = np.asarray(pool.read_pages(plan))[0]
+        val = val.copy()
+        val[0] += 1                                          # atomic add
+        pool.write_page(key, jnp.asarray(val))
+        counts[key] += 1
+    for key in pages:
+        plan = pool.lookup_batch(np.asarray([key], np.uint32))
+        val = np.asarray(pool.read_pages(plan))[0]
+        assert int(val[0]) == counts[key], (key, int(val[0]), counts[key])

@@ -1,0 +1,135 @@
+"""Hillclimb profiler: lower one (arch x shape) cell and rank the HLO ops
+by analyzer bytes / flops — the dry-run equivalent of a memory profile.
+
+  python tools/profile_cell.py <arch> <shape> [pod2] [top_n]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import json
+import re
+sys.path.insert(0, "/root/repo/src")
+
+from collections import defaultdict
+
+from repro.launch import dryrun as D
+from repro.roofline import hlo_cost as H
+
+
+def _root_kind(comps, fname):
+    comp = comps.get(fname)
+    if not comp or not comp.ops:
+        return "?"
+    return comp.ops[-1].opcode
+
+
+def rank_ops(hlo: str, top: int = 25):
+    """Per-op byte/flop totals, scaled by while-loop trip counts."""
+    comps, entry, table = H.parse_module(hlo)
+    agg_b = defaultdict(float)
+    agg_f = defaultdict(float)
+    agg_n = defaultdict(int)
+
+    def walk(name, mult):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            called = H._called(op)
+            if oc == "while" and "body" in called:
+                ktc = re.search(r'known_trip_count.*?"n"\s*:\s*"(\d+)"',
+                                op.attrs_text)
+                trips = (int(ktc.group(1)) if ktc
+                         else H._trip_count(comps, called.get("condition", "")))
+                walk(called["body"], mult * max(trips, 1))
+                continue
+            if oc in ("call", "conditional"):
+                for c in called.values():
+                    walk(c, mult)
+                continue
+            if oc == "fusion" and "calls" in called:
+                b = H._fusion_bytes(comps, op, called["calls"], table)
+                fc = H._comp_cost(comps, called["calls"], table, {},
+                                  in_fusion=True)
+                key = f"fusion[{_root_kind(comps, called['calls'])}]"
+                agg_b[key] += b * mult
+                agg_f[key] += fc.flops * mult
+                agg_n[key] += mult
+                continue
+            if oc in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast"):
+                continue
+            b = H._shape_bytes(op.out_text) + H._shape_bytes(
+                H._operand_text(op, table))
+            f = H._dot_flops(op, table) if oc in ("dot", "convolution") else 0
+            agg_b[oc] += b * mult
+            agg_f[oc] += f * mult
+            agg_n[oc] += mult
+
+    walk(entry, 1)
+    rows = sorted(agg_b.items(), key=lambda kv: -kv[1])[:top]
+    print(f"\n{'op kind':34s} {'GiB':>10s} {'GFLOP':>10s} {'count':>8s}")
+    for k, v in rows:
+        print(f"{k:34s} {v / 2**30:10.1f} {agg_f[k] / 1e9:10.1f} "
+              f"{agg_n[k]:8d}")
+
+
+def rank_instances(hlo: str, top: int = 30):
+    """Top individual op instances by bytes, with shapes (mult-scaled)."""
+    comps, entry, table = H.parse_module(hlo)
+    items = []
+
+    def walk(name, mult):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            called = H._called(op)
+            if oc == "while" and "body" in called:
+                ktc = re.search(r'known_trip_count.*?"n"\s*:\s*"(\d+)"',
+                                op.attrs_text)
+                trips = (int(ktc.group(1)) if ktc
+                         else H._trip_count(comps, called.get("condition", "")))
+                walk(called["body"], mult * max(trips, 1))
+                continue
+            if oc in ("call", "conditional"):
+                for c in called.values():
+                    walk(c, mult)
+                continue
+            if oc == "fusion" and "calls" in called:
+                b = H._fusion_bytes(comps, op, called["calls"], table)
+                items.append((b * mult, f"fusion[{_root_kind(comps, called['calls'])}]",
+                              op.name, op.out_text[:70], mult))
+                continue
+            if oc in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast"):
+                continue
+            b = H._shape_bytes(op.out_text) + H._shape_bytes(
+                H._operand_text(op, table))
+            items.append((b * mult, oc, op.name, op.out_text[:70], mult))
+
+    walk(entry, 1)
+    items.sort(key=lambda t: -t[0])
+    print(f"\n top {top} individual ops:")
+    for b, kind, name, shp, mult in items[:top]:
+        print(f"{b / 2**30:9.1f} GiB x{mult:<5d} {kind:26s} {name[:28]:28s} {shp}")
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    multi = "pod2" in sys.argv[3:]
+    top = int(sys.argv[-1]) if sys.argv[-1].isdigit() else 25
+    rep = D.lower_cell(arch, shape, multi_pod=multi)
+    keep = ("hlo_flops_per_chip", "hlo_bytes_per_chip",
+            "collective_bytes_per_chip", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "roofline_fraction",
+            "useful_flops_ratio", "compile_s")
+    print(json.dumps({k: rep.get(k) for k in keep}, indent=1))
+    rank_ops(D.LAST_HLO, top)
+    rank_instances(D.LAST_HLO, top)
+
+
+if __name__ == "__main__":
+    main()
