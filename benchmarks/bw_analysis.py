@@ -25,16 +25,17 @@ def run():
     mb = tr.MEMORY_BOUND
     splits = C.mode_splits(["IBL", "Morpheus-ALL"], mb)
 
-    rows, ratios = [], {"llc": [], "llc_larger": [], "dram": [], "mpki": [],
-                        "noc": []}
+    # one batched dispatch set: BL / IBL / Morpheus-ALL / larger-LLC per app
+    pts, meta = [], []
     for app in mb:
-        bl = cs.run(app, "BL", n_compute=cs.TOTAL_CORES, length=C.TRACE_LEN)
+        pts.append(cs.RunPoint(app, "BL", cs.TOTAL_CORES, 0, C.TRACE_LEN))
+        meta.append((app, "bl"))
         n_c, n_k = splits["IBL"][app]
-        ibl = cs.run(app, "IBL", n_compute=n_c, n_cache=n_k,
-                     length=C.TRACE_LEN)
+        pts.append(cs.RunPoint(app, "IBL", n_c, n_k, C.TRACE_LEN))
+        meta.append((app, "ibl"))
         n_c, n_k = splits["Morpheus-ALL"][app]
-        mall = cs.run(app, "Morpheus-ALL", n_compute=n_c, n_cache=n_k,
-                      length=C.TRACE_LEN)
+        pts.append(cs.RunPoint(app, "Morpheus-ALL", n_c, n_k, C.TRACE_LEN))
+        meta.append((app, "mall"))
         # larger-LLC: conventional LLC scaled to Morpheus-ALL's total
         # capacity, same bank count (isolates capacity from banking)
         total_cap = cs.CONV_LLC_BYTES + n_k * cs.EXT_BYTES_PER_CORE
@@ -43,7 +44,15 @@ def run():
         if name not in cs.SYSTEMS:
             cs.SYSTEMS[name] = replace(cs.SYSTEMS["IBL"], name=name,
                                        conv_scale=scale)
-        larger = cs.run(app, name, n_compute=n_c, length=C.TRACE_LEN)
+        pts.append(cs.RunPoint(app, name, n_c, 0, C.TRACE_LEN))
+        meta.append((app, "larger"))
+    res = {m: r for m, r in zip(meta, cs.run_batch(pts))}
+
+    rows, ratios = [], {"llc": [], "llc_larger": [], "dram": [], "mpki": [],
+                        "noc": []}
+    for app in mb:
+        bl, ibl = res[(app, "bl")], res[(app, "ibl")]
+        mall, larger = res[(app, "mall")], res[(app, "larger")]
 
         ratios["llc"].append(mall.llc_throughput_GBps /
                              max(bl.llc_throughput_GBps, 1e-9))

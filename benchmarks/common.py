@@ -82,8 +82,15 @@ _POLICY_CACHE = RESULTS_DIR / f"policy_cache_{PROFILE}.json"
 def mode_splits(systems: Sequence[str], apps: Sequence[str],
                 *, recompute: bool = False) -> Dict[str, Dict[str, Tuple[int, int]]]:
     """{(system) -> {app -> (n_compute, n_cache)}} via the offline policy
-    sweep (core/policy.py), cached on disk per profile."""
+    sweep (core/policy.py), cached on disk per profile.
+
+    All missing (system, app, grid) points are collected into ONE
+    ``policy.sweep`` / ``cache_sim.run_batch`` call: points that share a
+    config shape (same system flags and cache-chip count, across apps and
+    compute-core counts) run as vmapped engine dispatches instead of one
+    recompiled serial scan each."""
     from repro.core import cache_sim as cs
+    from repro.core import policy
     from repro.core import traces as tr
 
     cache: Dict[str, Dict[str, List[int]]] = {}
@@ -91,6 +98,7 @@ def mode_splits(systems: Sequence[str], apps: Sequence[str],
         cache = json.loads(_POLICY_CACHE.read_text())
 
     changed = False
+    pending: List[cs.RunPoint] = []
     for system in systems:
         sys_cache = cache.setdefault(system, {})
         spec = cs.SYSTEMS[system]
@@ -104,24 +112,14 @@ def mode_splits(systems: Sequence[str], apps: Sequence[str],
                 sys_cache[app] = [cs.TOTAL_CORES, 0]
                 changed = True
                 continue
-            best = None
-            grid = GRID
-            if spec.morpheus and w.memory_bound:
-                grid = MORPHEUS_GRID
-            for n_compute in grid:
-                n_cache = 0
-                if spec.morpheus and w.memory_bound:
-                    n_cache = min(cs.TOTAL_CORES - n_compute,
-                                  int(cs.TOTAL_CORES * cs.MAX_CACHE_FRAC))
-                    if n_cache <= 0:
-                        continue
-                r = cs.run(app, system, n_compute=n_compute, n_cache=n_cache,
-                           length=TRACE_LEN)
-                if best is None or r.exec_time_s < best[2]:
-                    best = (n_compute, n_cache, r.exec_time_s)
-            assert best is not None
-            sys_cache[app] = [best[0], best[1]]
-            changed = True
+            grid = MORPHEUS_GRID if (spec.morpheus and w.memory_bound) \
+                else GRID
+            pending.extend(policy.grid_points(app, system, grid=grid,
+                                              length=TRACE_LEN))
+    if pending:
+        for (app, system), split in policy.sweep(pending).items():
+            cache[system][app] = [split.n_compute, split.n_cache]
+        changed = True
     if changed:
         _POLICY_CACHE.parent.mkdir(parents=True, exist_ok=True)
         _POLICY_CACHE.write_text(json.dumps(cache, indent=1))

@@ -28,14 +28,18 @@ def run() -> Dict[str, Dict[str, cs.RunResult]]:
     apps = tr.MEMORY_BOUND + tr.COMPUTE_BOUND
     splits = C.mode_splits([s for s in SYSTEMS if s != "BL"], apps)
 
-    results: Dict[str, Dict[str, cs.RunResult]] = {s: {} for s in SYSTEMS}
+    # all 9 systems x 17 apps as one batched dispatch set; run_batch groups
+    # the points by config shape (system flags + cache-chip count)
+    pts = [cs.RunPoint(app, "BL", cs.TOTAL_CORES, 0, C.TRACE_LEN)
+           for app in apps]
     for app in apps:
-        results["BL"][app] = cs.run(app, "BL", n_compute=cs.TOTAL_CORES,
-                                    length=C.TRACE_LEN)
         for system in SYSTEMS[1:]:
             n_c, n_k = splits[system][app]
-            results[system][app] = cs.run(app, system, n_compute=n_c,
-                                          n_cache=n_k, length=C.TRACE_LEN)
+            pts.append(cs.RunPoint(app, system, n_c, n_k, C.TRACE_LEN))
+
+    results: Dict[str, Dict[str, cs.RunResult]] = {s: {} for s in SYSTEMS}
+    for p, r in zip(pts, cs.run_batch(pts)):
+        results[p.system][p.app] = r
 
     rows = []
     for app in apps:

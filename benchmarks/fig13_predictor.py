@@ -32,14 +32,23 @@ def run():
                                           name=sysname, predictor=pred)
     splits = C.mode_splits(["Morpheus-Basic"], tr.MEMORY_BOUND)
 
-    rows, norm = [], {v: {} for v in VARIANTS}
+    # one batched dispatch set: BL baselines + all 3 predictor variants
+    pts, meta = [], []
     for app in tr.MEMORY_BOUND:
-        base = cs.run(app, "BL", n_compute=cs.TOTAL_CORES, length=C.TRACE_LEN)
+        pts.append(cs.RunPoint(app, "BL", cs.TOTAL_CORES, 0, C.TRACE_LEN))
+        meta.append((app, "BL"))
         n_c, n_k = splits["Morpheus-Basic"][app]
         for name, pred in VARIANTS.items():
-            r = cs.run(app, f"_MB_{pred.value}", n_compute=n_c, n_cache=n_k,
-                       length=C.TRACE_LEN)
-            norm[name][app] = r.exec_time_s / base.exec_time_s
+            pts.append(cs.RunPoint(app, f"_MB_{pred.value}", n_c, n_k,
+                                   C.TRACE_LEN))
+            meta.append((app, name))
+    res = {m: r for m, r in zip(meta, cs.run_batch(pts))}
+
+    rows, norm = [], {v: {} for v in VARIANTS}
+    for app in tr.MEMORY_BOUND:
+        base = res[(app, "BL")]
+        for name in VARIANTS:
+            norm[name][app] = res[(app, name)].exec_time_s / base.exec_time_s
         rows.append([app] + [f"{norm[n][app]:.3f}" for n in VARIANTS])
     g = {n: C.geomean(list(norm[n].values())) for n in VARIANTS}
     rows.append(["geomean"] + [f"{g[n]:.3f}" for n in VARIANTS])

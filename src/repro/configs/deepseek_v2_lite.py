@@ -21,6 +21,8 @@ CONFIG = ArchConfig(
     top_k=6,
     num_shared_experts=2,
     moe_d_ff=1408,
+    capacity_factor=0.0,           # dropless: decode must equal full forward
+    #                                (capacity drops are batch-dependent)
     mla=True,
     kv_lora_rank=512,
     qk_rope_dim=64,

@@ -20,13 +20,14 @@ interleaved streams -> longer reuse distance -> more DRAM traffic).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from . import address_separation as asep
+from . import engine
 from . import traces as tr
-from .controller import MorpheusConfig, Predictor, Stats, simulate_jit
+from .controller import MorpheusConfig, Predictor, Stats
 from .energy import PaperGPU
 
 # --- baseline machine constants (RTX 3080-like, Table 1) -------------------
@@ -144,16 +145,32 @@ class RunResult:
         return int(s.conv_hits + s.conv_misses + s.ext_hits + s.ext_true_miss)
 
 
-def run(app: str, system: str, *, n_compute: int, n_cache: int = 0,
-        length: int = 120_000, seed: int = 0) -> RunResult:
-    spec = SYSTEMS[system]
-    w = tr.WORKLOADS[app]
+@dataclass(frozen=True)
+class RunPoint:
+    """One (app, system, mode-split, trace) grid point for ``run_batch``."""
+    app: str
+    system: str
+    n_compute: int
+    n_cache: int = 0
+    length: int = 120_000
+    seed: int = 0
+
+
+def _prepare(pt: RunPoint):
+    """Resolve a point: mode-split overrides, trace generation, config.
+
+    Returns (cfg, trace-tuple-for-engine, resolved n_compute/n_cache,
+    post-warmup access count)."""
+    spec = SYSTEMS[pt.system]
+    w = tr.WORKLOADS[pt.app]
+    n_compute, n_cache = pt.n_compute, pt.n_cache
     if not w.memory_bound and spec.morpheus:
         n_cache = 0   # §7.1 obs. 5: all cores stay in compute mode
         n_compute = TOTAL_CORES
 
-    addrs, writes, levels = tr.generate(app, n_cores=n_compute, length=length,
-                                        seed=seed, ws_scale=1.0 / SIM_SCALE)
+    addrs, writes, levels = tr.generate(pt.app, n_cores=n_compute,
+                                        length=pt.length, seed=pt.seed,
+                                        ws_scale=1.0 / SIM_SCALE)
     if spec.unified_extra_bytes:
         addrs, writes, levels = _unified_filter(addrs, writes, levels,
                                                 n_compute,
@@ -163,10 +180,15 @@ def run(app: str, system: str, *, n_compute: int, n_cache: int = 0,
     # capped at half the trace) so stats reflect steady state
     ws_blocks = w.working_set_bytes // SIM_SCALE // tr.BLOCK_BYTES
     warmup = int(min(len(addrs) // 2, ws_blocks))
-    stats: Stats = simulate_jit(cfg, addrs, writes, levels, warmup)
-    stats = Stats(*[np.asarray(x) for x in stats])
+    return (cfg, (addrs, writes, levels, warmup), n_compute, n_cache,
+            len(addrs) - warmup)
 
-    n_acc = len(addrs) - warmup
+
+def _finalize(pt: RunPoint, n_compute: int, n_cache: int, n_acc: int,
+              stats: Stats) -> RunResult:
+    """Analytical execution-time / power model on top of simulated Stats."""
+    app, spec = pt.app, SYSTEMS[pt.system]
+    w = tr.WORKLOADS[app]
     insts = tr.instructions_for(app, n_acc)
     gpu = PaperGPU()
 
@@ -201,7 +223,7 @@ def run(app: str, system: str, *, n_compute: int, n_cache: int = 0,
     total = float(hits + stats.conv_misses + stats.ext_true_miss)
     llc_bytes = float(stats.conv_bytes + stats.noc_bytes)
     return RunResult(
-        app=app, system=system, n_compute=n_compute, n_cache=n_cache,
+        app=app, system=pt.system, n_compute=n_compute, n_cache=n_cache,
         exec_time_s=t_exec, ipc=ipc, perf_per_watt=ppw, stats=stats,
         llc_hit_rate=hits / max(total, 1.0),
         mpki=1000.0 * float(stats.conv_misses + stats.ext_true_miss)
@@ -211,3 +233,61 @@ def run(app: str, system: str, *, n_compute: int, n_cache: int = 0,
         llc_throughput_GBps=llc_bytes / max(t_exec, 1e-12) / 1e9,
         energy_J=energy_J,
     )
+
+
+# ------------------------------------------------------------ batched sweep
+
+# Points per engine dispatch.  The last chunk of a config-group is padded
+# (by repeating its final trace) to a power of two so the whole sweep
+# touches at most a handful of compiled batch shapes per config.
+BATCH_CHUNK = 16
+
+
+def _chunk_lengths(n: int) -> List[int]:
+    out = [BATCH_CHUNK] * (n // BATCH_CHUNK)
+    rem = n % BATCH_CHUNK
+    if rem:
+        out.append(engine._bucket(rem, minimum=1))
+    return out
+
+
+def run_batch(points: Sequence[RunPoint]) -> List[RunResult]:
+    """Run many grid points through the set-parallel engine, batched.
+
+    Points are grouped by simulator config (a config is a static compile
+    parameter: set counts, flags, predictor); each group becomes vmapped
+    engine dispatches over its traces instead of one recompiled serial
+    scan per point.  Results come back in input order.
+
+    This is the sweep primitive everything else (``run``, the mode-split
+    policy, the benchmark figures) is built on: larger grids, multi-seed
+    error bars and online mode-split search are all one ``run_batch``.
+    """
+    prepped = [_prepare(pt) for pt in points]
+    groups: Dict[MorpheusConfig, List[int]] = {}
+    for i, (cfg, _, _, _, _) in enumerate(prepped):
+        groups.setdefault(cfg, []).append(i)
+
+    results: List[RunResult] = [None] * len(points)  # type: ignore
+    for cfg, idxs in groups.items():
+        done = 0
+        for blen in _chunk_lengths(len(idxs)):
+            chunk = idxs[done:done + blen]
+            done += len(chunk)
+            traces = [prepped[i][1] for i in chunk]
+            while len(traces) < blen:         # pad to the compiled shape
+                traces.append(traces[-1])
+            stats_b = engine.simulate_batch(cfg, traces)
+            for j, i in enumerate(chunk):
+                stats = Stats(*[np.asarray(x[j]) for x in stats_b])
+                _, _, n_compute, n_cache, n_acc = prepped[i]
+                results[i] = _finalize(points[i], n_compute, n_cache,
+                                       n_acc, stats)
+    return results
+
+
+def run(app: str, system: str, *, n_compute: int, n_cache: int = 0,
+        length: int = 120_000, seed: int = 0) -> RunResult:
+    """Single-point wrapper over ``run_batch`` (kept for compatibility)."""
+    return run_batch([RunPoint(app, system, n_compute, n_cache,
+                               length, seed)])[0]

@@ -135,10 +135,15 @@ class MorpheusState(NamedTuple):
     stats: Stats
 
 
+# 32-byte Bloom filters (paper §4.1.2 'Cost') — shared by the full-state
+# initializer and the engine's per-set rows so the two can never drift
+BLOOM_WORDS = 8
+
+
 def make_state(cfg: MorpheusConfig) -> MorpheusState:
     cs, cw = max(cfg.amap.conv_sets, 1), cfg.conv_ways
     es, ew = max(cfg.amap.ext_sets, 1), cfg.ext_max_ways
-    words = 8  # 32-byte Bloom filters (paper §4.1.2 'Cost')
+    words = BLOOM_WORDS
     return MorpheusState(
         conv_tags=jnp.zeros((cs, cw), jnp.uint32),
         conv_valid=jnp.zeros((cs, cw), jnp.bool_),
@@ -165,27 +170,76 @@ def _upd(a, row, i):
     return jax.lax.dynamic_update_index_in_dim(a, row, i, 0)
 
 
-def step(cfg: MorpheusConfig, st: MorpheusState,
-         addr: jnp.ndarray, is_write: jnp.ndarray, level: jnp.ndarray
-         ) -> MorpheusState:
-    """Process one LLC request.  ``level`` is the block's BDI level (from
-    data contents in the real system; from the trace generator in the sim)."""
-    c = cfg.costs
-    lat_ch, lat_cm, lat_eh, lat_em, lat_pm = cfg.latencies()
-    e_conv = BLOCK_BYTES * c.conv_llc.energy_pJ_per_B * 1e-3   # nJ
-    e_ext = BLOCK_BYTES * c.ext_llc.energy_pJ_per_B * 1e-3
-    e_dram = BLOCK_BYTES * c.dram.energy_pJ_per_B * 1e-3
+# ---------------------------------------------------------------------------
+# Pure per-set transition kernels.
+#
+# All mutable simulator state is keyed by (tier, set) and every request
+# touches exactly one set, so the whole simulation decomposes into
+# independent per-set state machines.  These kernels are that decomposition:
+# each maps (one set's state rows, one request) -> (new rows, outcome).
+# ``step`` (the serial oracle) applies them at a dynamically-indexed row;
+# ``core.engine`` vmaps them over all sets at once.
+# ---------------------------------------------------------------------------
 
-    tier, local_set = asep.route(cfg.amap, addr)
-    tag = asep.tag_of(cfg.amap, addr)
-    is_ext = jnp.bool_(cfg.ext_enabled) & (tier == asep.EXTENDED)
-    conv_set = jnp.where(is_ext, 0, local_set)
-    ext_set = jnp.where(is_ext, local_set, 0)
+class ConvRow(NamedTuple):
+    """One conventional-LLC set: (ways,) metadata vectors."""
+    tags: jnp.ndarray     # uint32
+    valid: jnp.ndarray    # bool
+    dirty: jnp.ndarray    # bool
+    lru: jnp.ndarray      # uint32
+
+
+class ExtRow(NamedTuple):
+    """One extended-LLC set: (ext_max_ways,) metadata + predictor filters."""
+    tags: jnp.ndarray
+    valid: jnp.ndarray
+    dirty: jnp.ndarray
+    lru: jnp.ndarray
+    size: jnp.ndarray     # int32 physical bytes per block
+    used: jnp.ndarray     # () int32
+    bf1: jnp.ndarray      # (words,) uint32
+    bf2: jnp.ndarray
+    n_mru: jnp.ndarray    # () int32
+
+
+class ConvOutcome(NamedTuple):
+    hit: jnp.ndarray       # bool
+    evict_wb: jnp.ndarray  # bool — miss evicted a dirty block
+
+
+class ExtOutcome(NamedTuple):
+    hit: jnp.ndarray       # bool
+    pred: jnp.ndarray      # bool — predictor said "forward"
+    wbs: jnp.ndarray       # int32 — dirty blocks written back on insert
+    swap: jnp.ndarray      # bool — Bloom filters swapped this access
+
+
+def conv_row_zero(cfg: MorpheusConfig) -> ConvRow:
+    w = cfg.conv_ways
+    return ConvRow(tags=jnp.zeros((w,), jnp.uint32),
+                   valid=jnp.zeros((w,), jnp.bool_),
+                   dirty=jnp.zeros((w,), jnp.bool_),
+                   lru=jnp.zeros((w,), jnp.uint32))
+
+
+def ext_row_zero(cfg: MorpheusConfig, words: int = BLOOM_WORDS) -> ExtRow:
+    w = cfg.ext_max_ways
+    return ExtRow(tags=jnp.zeros((w,), jnp.uint32),
+                  valid=jnp.zeros((w,), jnp.bool_),
+                  dirty=jnp.zeros((w,), jnp.bool_),
+                  lru=jnp.zeros((w,), jnp.uint32),
+                  size=jnp.zeros((w,), jnp.int32),
+                  used=jnp.zeros((), jnp.int32),
+                  bf1=jnp.zeros((words,), jnp.uint32),
+                  bf2=jnp.zeros((words,), jnp.uint32),
+                  n_mru=jnp.zeros((), jnp.int32))
+
+
+def conv_set_kernel(cfg: MorpheusConfig, row: ConvRow, tag: jnp.ndarray,
+                    is_write: jnp.ndarray) -> Tuple[ConvRow, ConvOutcome]:
+    """LRU lookup/insert on one conventional set (Algorithm-1 metadata)."""
+    ctags, cvalid, cdirty, clru = row
     is_write = jnp.bool_(is_write)
-
-    # ----- conventional LLC row update (identity when routed extended) -----
-    ctags, cvalid = _idx(st.conv_tags, conv_set), _idx(st.conv_valid, conv_set)
-    cdirty, clru = _idx(st.conv_dirty, conv_set), _idx(st.conv_lru, conv_set)
     cmatch = cvalid & (ctags == tag)
     c_hit = jnp.any(cmatch)
     way_hit = jnp.argmax(cmatch).astype(jnp.int32)
@@ -200,20 +254,18 @@ def step(cfg: MorpheusConfig, st: MorpheusState,
                          cdirty)
     n_clru = jnp.where(onehot, LRU_MAX,
                        jnp.maximum(clru, 1) - 1).astype(jnp.uint32)
-    sel_c = ~is_ext
-    st = st._replace(
-        conv_tags=_upd(st.conv_tags, jnp.where(sel_c, n_ctags, ctags), conv_set),
-        conv_valid=_upd(st.conv_valid, jnp.where(sel_c, n_cvalid, cvalid), conv_set),
-        conv_dirty=_upd(st.conv_dirty, jnp.where(sel_c, n_cdirty, cdirty), conv_set),
-        conv_lru=_upd(st.conv_lru, jnp.where(sel_c, n_clru, clru), conv_set),
-    )
+    return (ConvRow(n_ctags, n_cvalid, n_cdirty, n_clru),
+            ConvOutcome(c_hit, c_evict_wb))
 
-    # ----- extended tier: predict -> lookup -> touch/insert ----------------
-    etags, evalid = _idx(st.ext_tags, ext_set), _idx(st.ext_valid, ext_set)
-    edirty, elru = _idx(st.ext_dirty, ext_set), _idx(st.ext_lru, ext_set)
-    esize, eused = _idx(st.ext_size, ext_set), _idx(st.ext_used, ext_set)
-    bf1, bf2 = _idx(st.bf1, ext_set), _idx(st.bf2, ext_set)
-    n = _idx(st.n_mru, ext_set)
+
+def ext_set_kernel(cfg: MorpheusConfig, row: ExtRow, tag: jnp.ndarray,
+                   is_write: jnp.ndarray, level: jnp.ndarray
+                   ) -> Tuple[ExtRow, ExtOutcome]:
+    """Predict -> lookup -> touch/insert on one extended set (§4.1-§4.3)."""
+    etags, evalid, edirty, elru = row.tags, row.valid, row.dirty, row.lru
+    esize, eused = row.size, row.used
+    bf1, bf2, n = row.bf1, row.bf2, row.n_mru
+    is_write = jnp.bool_(is_write)
 
     ematch = evalid & (etags == tag)
     e_hit = jnp.any(ematch)
@@ -243,7 +295,6 @@ def step(cfg: MorpheusConfig, st: MorpheusState,
     # insert path (miss): LRU-evict until the block fits (≤4 evictions)
     i_tags, i_valid, i_dirty = etags, evalid, edirty
     i_lru, i_size, i_used = elru, esize, eused
-    evictions = jnp.int32(0)
     wbs = jnp.int32(0)
     budget = cfg.ext_budget_bytes
     for _ in range(BLOCK_BYTES // 32):
@@ -253,7 +304,6 @@ def step(cfg: MorpheusConfig, st: MorpheusState,
         v = jnp.argmin(key).astype(jnp.int32)
         can = need & jnp.any(i_valid)
         oh = eidx == v
-        evictions += can.astype(jnp.int32)
         wbs += (can & i_dirty[v]).astype(jnp.int32)
         i_used = jnp.where(can, i_used - i_size[v], i_used)
         i_valid = jnp.where(can & oh, False, i_valid)
@@ -268,49 +318,59 @@ def step(cfg: MorpheusConfig, st: MorpheusState,
     i_lru = jnp.where(oh, LRU_MAX, jnp.maximum(i_lru, 1) - 1).astype(jnp.uint32)
     i_used = i_used + phys
 
-    # merge: hit -> touch rows; miss -> insert rows; gate by is_ext
+    # merge: hit -> touch rows; miss -> insert rows
     n_etags = jnp.where(e_hit, etags, i_tags)
     n_evalid = jnp.where(e_hit, evalid, i_valid)
     n_edirty = jnp.where(e_hit, t_dirty, i_dirty)
     n_elru = jnp.where(e_hit, t_lru, i_lru)
     n_esize = jnp.where(e_hit, esize, i_size)
     n_eused = jnp.where(e_hit, eused, i_used)
-    st = st._replace(
-        ext_tags=_upd(st.ext_tags, jnp.where(is_ext, n_etags, etags), ext_set),
-        ext_valid=_upd(st.ext_valid, jnp.where(is_ext, n_evalid, evalid), ext_set),
-        ext_dirty=_upd(st.ext_dirty, jnp.where(is_ext, n_edirty, edirty), ext_set),
-        ext_lru=_upd(st.ext_lru, jnp.where(is_ext, n_elru, elru), ext_set),
-        ext_size=_upd(st.ext_size, jnp.where(is_ext, n_esize, esize), ext_set),
-        ext_used=_upd(st.ext_used, jnp.where(is_ext, n_eused, eused), ext_set),
-    )
 
     # Bloom maintenance (Fig. 6(b)): every ext access inserts into both
     # filters; n += (tag not already in BF2); swap at n >= associativity.
-    mask = bloomlib._bit_mask(bits, words)
-    was_in_bf2 = bloomlib._test(bf2, bits)
-    u_bf1, u_bf2 = bf1 | mask, bf2 | mask
-    u_n = n + jnp.where(was_in_bf2, 0, 1).astype(jnp.int32)
-    do_swap = u_n >= cfg.ext_ways    # logical associativity
-    n_bf1 = jnp.where(do_swap, u_bf2, u_bf1)
-    n_bf2 = jnp.where(do_swap, jnp.zeros_like(u_bf2), u_bf2)
-    u_n = jnp.where(do_swap, 0, u_n)
-    use_bloom = is_ext & jnp.bool_(cfg.predictor is Predictor.BLOOM)
-    st = st._replace(
-        bf1=_upd(st.bf1, jnp.where(use_bloom, n_bf1, bf1), ext_set),
-        bf2=_upd(st.bf2, jnp.where(use_bloom, n_bf2, bf2), ext_set),
-        n_mru=_upd(st.n_mru, jnp.where(use_bloom, u_n, n), ext_set),
-    )
+    if cfg.predictor is Predictor.BLOOM:
+        mask = bloomlib._bit_mask(bits, words)
+        was_in_bf2 = bloomlib._test(bf2, bits)
+        u_bf1, u_bf2 = bf1 | mask, bf2 | mask
+        u_n = n + jnp.where(was_in_bf2, 0, 1).astype(jnp.int32)
+        do_swap = u_n >= cfg.ext_ways    # logical associativity
+        n_bf1 = jnp.where(do_swap, u_bf2, u_bf1)
+        n_bf2 = jnp.where(do_swap, jnp.zeros_like(u_bf2), u_bf2)
+        u_n = jnp.where(do_swap, 0, u_n)
+    else:
+        n_bf1, n_bf2, u_n = bf1, bf2, n
+        do_swap = jnp.bool_(False)
 
-    # ----- statistics -------------------------------------------------------
+    return (ExtRow(n_etags, n_evalid, n_edirty, n_elru, n_esize, n_eused,
+                   n_bf1, n_bf2, u_n),
+            ExtOutcome(e_hit, pred, wbs, do_swap))
+
+
+def request_stats(cfg: MorpheusConfig, sel_c: jnp.ndarray,
+                  conv: ConvOutcome, is_ext: jnp.ndarray, ext: ExtOutcome
+                  ) -> Stats:
+    """Per-request Stats delta (the §7 metrics of one request).
+
+    ``sel_c``/``is_ext`` gate the conventional/extended contributions; the
+    serial ``step`` passes complementary masks, the set-parallel engine
+    passes each kernel's activity mask with the other side held False.
+    """
+    c = cfg.costs
+    lat_ch, lat_cm, lat_eh, lat_em, lat_pm = cfg.latencies()
+    e_conv = BLOCK_BYTES * c.conv_llc.energy_pJ_per_B * 1e-3   # nJ
+    e_ext = BLOCK_BYTES * c.ext_llc.energy_pJ_per_B * 1e-3
+    e_dram = BLOCK_BYTES * c.dram.energy_pJ_per_B * 1e-3
+
     i1 = lambda b: b.astype(jnp.int32)
     f1 = lambda b: b.astype(jnp.float32)
+    e_hit, pred, wbs = ext.hit, ext.pred, ext.wbs
     ext_hit_e = is_ext & e_hit                       # served by ext tier
     ext_fp = is_ext & ~e_hit & pred                  # forwarded, missed
     ext_pm = is_ext & ~pred                          # straight to DRAM
-    conv_hit_e = sel_c & c_hit
-    conv_miss_e = sel_c & ~c_hit
+    conv_hit_e = sel_c & conv.hit
+    conv_miss_e = sel_c & ~conv.hit
     dram = conv_miss_e | (is_ext & ~e_hit)
-    wb = i1(conv_miss_e & c_evict_wb) + jnp.where(is_ext & ~e_hit, wbs, 0)
+    wb = i1(conv_miss_e & conv.evict_wb) + jnp.where(is_ext & ~e_hit, wbs, 0)
 
     lat = (f1(conv_hit_e) * lat_ch + f1(conv_miss_e) * lat_cm
            + f1(ext_hit_e) * lat_eh + f1(ext_fp) * lat_em + f1(ext_pm) * lat_pm)
@@ -327,25 +387,89 @@ def step(cfg: MorpheusConfig, st: MorpheusState,
     noc = (i1(ext_hit_e | ext_fp) + i1(is_ext & ~e_hit)
            + jnp.where(is_ext & ~e_hit, wbs, 0)) * BLOCK_BYTES
 
-    s = st.stats
-    st = st._replace(stats=Stats(
-        conv_hits=s.conv_hits + i1(conv_hit_e),
-        conv_misses=s.conv_misses + i1(conv_miss_e),
-        ext_hits=s.ext_hits + i1(ext_hit_e),
-        ext_false_pos=s.ext_false_pos + i1(ext_fp),
-        ext_pred_miss=s.ext_pred_miss + i1(ext_pm),
-        ext_true_miss=s.ext_true_miss + i1(is_ext & ~e_hit),
-        dram_accesses=s.dram_accesses + i1(dram),
-        writebacks=s.writebacks + wb,
-        latency_ns=s.latency_ns + lat,
-        energy_nJ=s.energy_nJ + energy,
-        noc_bytes=s.noc_bytes + f1(noc),
-        conv_bytes=s.conv_bytes + f1(sel_c) * BLOCK_BYTES,
-        dram_bytes=s.dram_bytes + f1(dram) * BLOCK_BYTES
-        + f1(wb > 0) * wb * BLOCK_BYTES,
-        bloom_swaps=s.bloom_swaps + i1(use_bloom & do_swap),
-    ))
-    return st
+    use_bloom = is_ext & jnp.bool_(cfg.predictor is Predictor.BLOOM)
+    return Stats(
+        conv_hits=i1(conv_hit_e),
+        conv_misses=i1(conv_miss_e),
+        ext_hits=i1(ext_hit_e),
+        ext_false_pos=i1(ext_fp),
+        ext_pred_miss=i1(ext_pm),
+        ext_true_miss=i1(is_ext & ~e_hit),
+        dram_accesses=i1(dram),
+        writebacks=wb,
+        latency_ns=lat,
+        energy_nJ=energy,
+        noc_bytes=f1(noc),
+        conv_bytes=f1(sel_c) * BLOCK_BYTES,
+        dram_bytes=f1(dram) * BLOCK_BYTES + f1(wb > 0) * wb * BLOCK_BYTES,
+        bloom_swaps=i1(use_bloom & ext.swap),
+    )
+
+
+_NO_CONV = ConvOutcome(hit=jnp.bool_(False), evict_wb=jnp.bool_(False))
+_NO_EXT = ExtOutcome(hit=jnp.bool_(False), pred=jnp.bool_(False),
+                     wbs=jnp.int32(0), swap=jnp.bool_(False))
+
+
+def step(cfg: MorpheusConfig, st: MorpheusState,
+         addr: jnp.ndarray, is_write: jnp.ndarray, level: jnp.ndarray
+         ) -> MorpheusState:
+    """Process one LLC request.  ``level`` is the block's BDI level (from
+    data contents in the real system; from the trace generator in the sim).
+
+    Thin wrapper over the per-set kernels: route the request, apply the
+    kernel to the routed set's rows, write the rows back (masked so the
+    untouched tier's state is bit-identical)."""
+    tier, local_set = asep.route(cfg.amap, addr)
+    tag = asep.tag_of(cfg.amap, addr)
+    is_ext = jnp.bool_(cfg.ext_enabled) & (tier == asep.EXTENDED)
+    conv_set = jnp.where(is_ext, 0, local_set)
+    ext_set = jnp.where(is_ext, local_set, 0)
+    sel_c = ~is_ext
+
+    # ----- conventional LLC row update (identity when routed extended) -----
+    crow = ConvRow(_idx(st.conv_tags, conv_set), _idx(st.conv_valid, conv_set),
+                   _idx(st.conv_dirty, conv_set), _idx(st.conv_lru, conv_set))
+    n_crow, c_out = conv_set_kernel(cfg, crow, tag, is_write)
+    st = st._replace(
+        conv_tags=_upd(st.conv_tags, jnp.where(sel_c, n_crow.tags, crow.tags),
+                       conv_set),
+        conv_valid=_upd(st.conv_valid,
+                        jnp.where(sel_c, n_crow.valid, crow.valid), conv_set),
+        conv_dirty=_upd(st.conv_dirty,
+                        jnp.where(sel_c, n_crow.dirty, crow.dirty), conv_set),
+        conv_lru=_upd(st.conv_lru, jnp.where(sel_c, n_crow.lru, crow.lru),
+                      conv_set),
+    )
+
+    # ----- extended tier: predict -> lookup -> touch/insert ----------------
+    erow = ExtRow(_idx(st.ext_tags, ext_set), _idx(st.ext_valid, ext_set),
+                  _idx(st.ext_dirty, ext_set), _idx(st.ext_lru, ext_set),
+                  _idx(st.ext_size, ext_set), _idx(st.ext_used, ext_set),
+                  _idx(st.bf1, ext_set), _idx(st.bf2, ext_set),
+                  _idx(st.n_mru, ext_set))
+    n_erow, e_out = ext_set_kernel(cfg, erow, tag, is_write, level)
+    st = st._replace(
+        ext_tags=_upd(st.ext_tags, jnp.where(is_ext, n_erow.tags, erow.tags),
+                      ext_set),
+        ext_valid=_upd(st.ext_valid,
+                       jnp.where(is_ext, n_erow.valid, erow.valid), ext_set),
+        ext_dirty=_upd(st.ext_dirty,
+                       jnp.where(is_ext, n_erow.dirty, erow.dirty), ext_set),
+        ext_lru=_upd(st.ext_lru, jnp.where(is_ext, n_erow.lru, erow.lru),
+                     ext_set),
+        ext_size=_upd(st.ext_size, jnp.where(is_ext, n_erow.size, erow.size),
+                      ext_set),
+        ext_used=_upd(st.ext_used, jnp.where(is_ext, n_erow.used, erow.used),
+                      ext_set),
+        bf1=_upd(st.bf1, jnp.where(is_ext, n_erow.bf1, erow.bf1), ext_set),
+        bf2=_upd(st.bf2, jnp.where(is_ext, n_erow.bf2, erow.bf2), ext_set),
+        n_mru=_upd(st.n_mru, jnp.where(is_ext, n_erow.n_mru, erow.n_mru),
+                   ext_set),
+    )
+
+    delta = request_stats(cfg, sel_c, c_out, is_ext, e_out)
+    return st._replace(stats=jax.tree.map(jnp.add, st.stats, delta))
 
 
 def simulate(cfg: MorpheusConfig, addrs: jnp.ndarray, writes: jnp.ndarray,

@@ -9,7 +9,7 @@ to decide how many chips of a pod to dedicate to the extended cache tier.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Sequence
+from typing import Dict, List, Sequence
 
 from . import cache_sim as cs
 from . import traces as tr
@@ -27,13 +27,15 @@ class ModeSplit:
 DEFAULT_GRID: Sequence[int] = (10, 14, 18, 24, 32, 40, 48, 56, 62, 68)
 
 
-def best_split(app: str, system: str, *, grid: Sequence[int] = DEFAULT_GRID,
-               length: int = 60_000, seed: int = 0) -> ModeSplit:
-    """Sweep compute-core counts; cache mode gets the rest (Morpheus) or
-    power-gating (IBL).  Returns the fastest split."""
+def grid_points(app: str, system: str, *, grid: Sequence[int],
+                length: int, seed: int = 0) -> List[cs.RunPoint]:
+    """The sweep points of one (app, system): each compute-core count in
+    the grid, cache mode getting the rest (Morpheus) or power-gating
+    (IBL).  Grid entries whose Morpheus cache side would be empty are
+    dropped."""
     spec = cs.SYSTEMS[system]
     w = tr.WORKLOADS[app]
-    best = None
+    pts = []
     for n_compute in grid:
         n_cache = 0
         if spec.morpheus and w.memory_bound:
@@ -41,21 +43,44 @@ def best_split(app: str, system: str, *, grid: Sequence[int] = DEFAULT_GRID,
                           int(cs.TOTAL_CORES * cs.MAX_CACHE_FRAC))
             if n_cache <= 0:
                 continue
-        r = cs.run(app, system, n_compute=n_compute, n_cache=n_cache,
-                   length=length, seed=seed)
-        if best is None or r.exec_time_s < best.exec_time_s:
-            best = ModeSplit(app, system, n_compute, n_cache, r.exec_time_s)
-    assert best is not None
+        pts.append(cs.RunPoint(app, system, n_compute, n_cache, length, seed))
+    return pts
+
+
+def sweep(points: Sequence[cs.RunPoint]) -> Dict[tuple, ModeSplit]:
+    """Run an arbitrary set of sweep points through ``cs.run_batch`` and
+    reduce to the fastest split per (app, system)."""
+    best: Dict[tuple, ModeSplit] = {}
+    for pt, r in zip(points, cs.run_batch(points)):
+        key = (pt.app, pt.system)
+        if key not in best or r.exec_time_s < best[key].exec_time_s:
+            best[key] = ModeSplit(pt.app, pt.system, r.n_compute, r.n_cache,
+                                  r.exec_time_s)
     return best
+
+
+def best_split(app: str, system: str, *, grid: Sequence[int] = DEFAULT_GRID,
+               length: int = 60_000, seed: int = 0) -> ModeSplit:
+    """Sweep compute-core counts for one (app, system); one batched
+    dispatch per config shape instead of a recompiled run per point."""
+    pts = grid_points(app, system, grid=grid, length=length, seed=seed)
+    assert pts, f"empty sweep grid for {app}/{system}"
+    return sweep(pts)[(app, system)]
 
 
 def table3(systems: Sequence[str] = ("IBL", "Morpheus-Basic", "Morpheus-ALL"),
            apps: Sequence[str] | None = None, *, length: int = 60_000,
            ) -> Dict[str, Dict[str, ModeSplit]]:
-    """Paper Table 3: per-app compute-core counts for each system."""
+    """Paper Table 3: per-app compute-core counts for each system.
+
+    All (system, app, grid) points go through ONE ``run_batch`` so points
+    sharing a config shape share compiled executables and dispatches."""
     apps = list(apps or (tr.MEMORY_BOUND + tr.COMPUTE_BOUND))
-    out: Dict[str, Dict[str, ModeSplit]] = {}
+    pts: List[cs.RunPoint] = []
     for system in systems:
-        out[system] = {app: best_split(app, system, length=length)
-                       for app in apps}
-    return out
+        for app in apps:
+            pts.extend(grid_points(app, system, grid=DEFAULT_GRID,
+                                   length=length))
+    best = sweep(pts)
+    return {system: {app: best[(app, system)] for app in apps}
+            for system in systems}

@@ -38,7 +38,17 @@ def init_moe(key, cfg: ArchConfig, dtype) -> dict:
 
 
 def _capacity(tokens: int, cfg: ArchConfig) -> int:
-    c = int(tokens * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    if cfg.capacity_factor <= 0:
+        # Dropless dispatch: every (token, expert) slot fits.  Capacity
+        # dropping makes a token's output depend on which OTHER tokens are
+        # in the batch, so cached decode (T=1 per sequence) can't reproduce
+        # the full forward (T=S) — archs whose serving path must be exactly
+        # prefill/decode-consistent (deepseek-v2 MLA) opt into this.
+        # top_k expert indices are distinct per token, so one expert can
+        # receive at most ``tokens`` assignments.
+        c = tokens
+    else:
+        c = int(tokens * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
     return max(8, -(-c // 8) * 8)  # pad to 8 for layout friendliness
 
 
@@ -187,7 +197,7 @@ def _moe_mlp_shardmap(p: dict, x: Array, cfg: ArchConfig, mesh) -> Array:
                                       m * e_local, e_local)
         return jax.lax.psum(y_partial, "model")
 
-    y = jax.shard_map(
+    y = dist_ctx.shard_map(
         per_chip, mesh=mesh,
         in_specs=(P(), P("model", None, None), P("model", None, None),
                   P("model", None, None), tok_spec),

@@ -80,7 +80,13 @@ class Op:
     args_text: str         # inside parens
     attrs_text: str        # after parens
     line: str
+    # operand names that appear WITHOUT an inline type ("%op") — the ones
+    # whose bytes must be resolved through the symbol table
     arg_names: List[str] = field(default_factory=list)
+    # ALL operand names in positional order, including inline-typed ones
+    # ("f32[8,8]{1,0} %op") — some HLO dumps annotate every operand, and
+    # positional param->operand mapping (fusions, dus updates) needs them
+    arg_names_all: List[str] = field(default_factory=list)
 
 
 @dataclass
@@ -91,6 +97,7 @@ class Computation:
 
 _PARAM_DECL = re.compile(r"([\w\.\-]+)\s*:\s*([a-z][a-z0-9]*\[[0-9,]*\])")
 _ARG_NAME = re.compile(r"%?([\w\.\-]+)")
+_TRAILING_NAME = re.compile(r"%([\w\.\-]+)\s*$")
 
 
 def _split_args(args: str) -> List[str]:
@@ -186,12 +193,18 @@ def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str],
         args = rest2[paren + 1:i]
         attrs = rest2[i + 1:]
         arg_names = []
+        arg_names_all = []
         for tok in _split_args(args):
             if "[" not in tok:  # bare reference: resolve via symbol table
                 am = _ARG_NAME.match(tok)
                 if am:
                     arg_names.append(am.group(1))
-        op = Op(name, opcode, out_text, args, attrs, line, arg_names)
+                    arg_names_all.append(am.group(1))
+            else:               # inline-typed operand: "f32[8,8]{1,0} %op"
+                tm = _TRAILING_NAME.search(tok)
+                arg_names_all.append(tm.group(1) if tm else "")
+        op = Op(name, opcode, out_text, args, attrs, line, arg_names,
+                arg_names_all)
         cur.ops.append(op)
         table[name] = out_text
         # parameter ops: "%p = f32[..] parameter(0)" -> already in table
@@ -327,14 +340,14 @@ def _comp_cost(comps: Dict[str, Computation], name: str, table: SymbolTable,
             if oc == "dynamic-slice":
                 total += Cost(bytes=2 * _shape_bytes(op.out_text))
             elif oc == "dynamic-update-slice":
-                upd = (table.get(op.arg_names[1], "")
-                       if len(op.arg_names) > 1 else op.out_text)
+                upd = (table.get(op.arg_names_all[1], "")
+                       if len(op.arg_names_all) > 1 else "") or op.out_text
                 total += Cost(bytes=2 * _shape_bytes(upd))
             elif oc in ("gather",):
                 total += Cost(bytes=2 * _shape_bytes(op.out_text))
             elif oc in ("scatter",):
-                upd = (table.get(op.arg_names[-1], "")
-                       if op.arg_names else op.out_text)
+                upd = (table.get(op.arg_names_all[-1], "")
+                       if op.arg_names_all else "") or op.out_text
                 total += Cost(bytes=2 * _shape_bytes(upd))
             else:
                 total += Cost(bytes=_shape_bytes(op.out_text)
@@ -378,11 +391,11 @@ def _fusion_bytes(comps: Dict[str, Computation], op: Op, fused_name: str,
     for f_op in fused.ops:
         if f_op.opcode == "parameter":
             continue
-        if (f_op.opcode in _ALIAS_OPS and len(f_op.arg_names) == 1
-                and f_op.arg_names[0] in alias):
-            alias[f_op.name] = alias[f_op.arg_names[0]]
+        if (f_op.opcode in _ALIAS_OPS and len(f_op.arg_names_all) == 1
+                and f_op.arg_names_all[0] in alias):
+            alias[f_op.name] = alias[f_op.arg_names_all[0]]
             continue
-        for a in f_op.arg_names:
+        for a in f_op.arg_names_all:
             if a in alias:
                 pname = alias[a]
                 usage[pname].append(f_op.opcode)
@@ -396,12 +409,13 @@ def _fusion_bytes(comps: Dict[str, Computation], op: Op, fused_name: str,
     _by_name = {f.name: f for f in fused.ops}
     seen = set()
     while (root is not None and root.opcode in ("convert", "bitcast", "copy")
-           and root.arg_names and root.arg_names[0] in _by_name
+           and root.arg_names_all and root.arg_names_all[0] in _by_name
            and root.name not in seen):
         seen.add(root.name)
-        root = _by_name[root.arg_names[0]]
+        root = _by_name[root.arg_names_all[0]]
     if root is not None and root.opcode == "dynamic-update-slice":
-        upd_name = root.arg_names[1] if len(root.arg_names) > 1 else None
+        upd_name = (root.arg_names_all[1]
+                    if len(root.arg_names_all) > 1 else None)
         # the update operand usually names an op INSIDE the fusion —
         # resolve against the fused computation first, falling back to the
         # whole-tensor shape only as a last resort
@@ -409,15 +423,15 @@ def _fusion_bytes(comps: Dict[str, Computation], op: Op, fused_name: str,
         upd_text = (inner.get(upd_name or "", "")
                     or table.get(upd_name or "", "") or root.out_text)
         total += 2 * _shape_bytes(upd_text)
-        dus_target = root.arg_names[0] if root.arg_names else None
+        dus_target = root.arg_names_all[0] if root.arg_names_all else None
     else:
         total += _shape_bytes(op.out_text)
         dus_target = None
     # input side
     for pname, idx in param_idx.items():
-        if idx >= len(op.arg_names):
+        if idx >= len(op.arg_names_all):
             continue
-        operand = op.arg_names[idx]
+        operand = op.arg_names_all[idx]
         uses = usage.get(pname, [])
         if pname == dus_target:
             continue  # aliased in-place update target

@@ -2,6 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package "
+    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import address_separation as asep

@@ -1,0 +1,124 @@
+"""Equivalence tests: set-parallel engine vs. the serial lax.scan oracle.
+
+The engine's contract (core/engine.py): requests to different (tier, set)
+commute, so per-set scans in original in-set order must reproduce the
+serial simulation EXACTLY on every integer counter, and up to accumulation
+order (<= 1e-3 relative) on the float sums.
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import address_separation as asep
+from repro.core import cache_sim as cs
+from repro.core import controller as ctl
+from repro.core import engine
+
+
+def _cfg(conv_sets=8, chips=2, sets_per_chip=4, **kw):
+    amap = asep.make_map(conv_sets=conv_sets, num_cache_chips=chips,
+                         sets_per_chip=sets_per_chip)
+    return ctl.MorpheusConfig(amap=amap, conv_ways=4, ext_ways=4, **kw)
+
+
+def _trace(n=2500, span=2048, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, span, size=n).astype(np.uint32),
+            rng.random(n) < 0.3,
+            rng.integers(0, 3, size=n).astype(np.int32))
+
+
+def _assert_stats_equal(s_ser: ctl.Stats, s_par: ctl.Stats, ctx=""):
+    for f in ctl.Stats._fields:
+        a = np.asarray(getattr(s_ser, f))
+        b = np.asarray(getattr(s_par, f))
+        if f in ctl._INT_FIELDS:
+            assert a == b, f"{ctx} {f}: serial={a} parallel={b}"
+        else:
+            tol = 1e-3 * max(abs(float(a)), 1.0)
+            assert abs(float(a) - float(b)) <= tol, \
+                f"{ctx} {f}: serial={a} parallel={b}"
+
+
+@pytest.mark.parametrize("pred,comp", list(itertools.product(
+    list(ctl.Predictor), [False, True])))
+def test_engine_matches_serial_oracle(pred, comp):
+    """Exact Stats equivalence across predictor x compression, warmup>0."""
+    cfg = _cfg(predictor=pred, compression=comp)
+    addrs, writes, levels = _trace(seed=hash((pred.value, comp)) % 1000)
+    warmup = 311
+    s_ser = ctl.simulate(cfg, jnp.asarray(addrs), jnp.asarray(writes),
+                         jnp.asarray(levels), warmup)
+    s_par = engine.simulate_parallel(cfg, addrs, writes, levels, warmup)
+    _assert_stats_equal(s_ser, s_par, f"{pred.value}/comp={comp}")
+
+
+def test_engine_conv_only_config():
+    """Extended tier disabled: the engine must skip the ext kernels and
+    still reproduce the serial stats."""
+    amap = asep.make_map(conv_sets=8, num_cache_chips=0, sets_per_chip=0)
+    cfg = ctl.MorpheusConfig(amap=amap, conv_ways=4, ext_ways=4)
+    addrs, writes, levels = _trace(span=512, seed=7)
+    s_ser = ctl.simulate(cfg, jnp.asarray(addrs), jnp.asarray(writes),
+                         jnp.asarray(levels), 0)
+    s_par = engine.simulate_parallel(cfg, addrs, writes, levels, 0)
+    _assert_stats_equal(s_ser, s_par, "conv-only")
+
+
+def test_engine_warmup_exceeds_trace():
+    """warmup >= trace length zeroes every counter, like the oracle."""
+    cfg = _cfg()
+    addrs, writes, levels = _trace(n=500, seed=3)
+    s_par = engine.simulate_parallel(cfg, addrs, writes, levels, 500)
+    for f in ctl._INT_FIELDS:
+        assert int(getattr(s_par, f)) == 0, f
+
+
+def test_simulate_batch_matches_individual():
+    """Batching traces must not change any per-trace result."""
+    cfg = _cfg(predictor=ctl.Predictor.BLOOM)
+    traces = [(_trace(seed=s)[0], _trace(seed=s)[1], _trace(seed=s)[2], 100)
+              for s in (1, 2, 3)]
+    batched = engine.simulate_batch(cfg, traces)
+    for i, (a, w, l, warm) in enumerate(traces):
+        single = engine.simulate_parallel(cfg, a, w, l, warm)
+        for f in ctl.Stats._fields:
+            got = np.asarray(getattr(batched, f))[i]
+            want = np.asarray(getattr(single, f))
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
+                                       err_msg=f"trace {i} field {f}")
+
+
+def test_run_batch_matches_per_point_run():
+    """Sweep-layer regression: run_batch == per-point run, and both equal
+    the serial-oracle pipeline on the Stats."""
+    pts = [
+        cs.RunPoint("kmeans", "BL", 18, 0, 6000),
+        cs.RunPoint("kmeans", "BL", 48, 0, 6000),
+        cs.RunPoint("cfd", "Morpheus-ALL", 32, 24, 6000),
+        cs.RunPoint("histo", "Unified-SM-Mem", 32, 0, 6000),
+    ]
+    batched = cs.run_batch(pts)
+    for pt, rb in zip(pts, batched):
+        r1 = cs.run(pt.app, pt.system, n_compute=pt.n_compute,
+                    n_cache=pt.n_cache, length=pt.length, seed=pt.seed)
+        assert r1.exec_time_s == rb.exec_time_s, pt
+        assert r1.ipc == rb.ipc, pt
+        # against the serial oracle
+        cfg, (a, w, l, warm), n_c, n_k, n_acc = cs._prepare(pt)
+        s_ser = ctl.simulate_jit(cfg, jnp.asarray(a), jnp.asarray(w),
+                                 jnp.asarray(l), warm)
+        _assert_stats_equal(ctl.Stats(*[np.asarray(x) for x in s_ser]),
+                            rb.stats, f"{pt.app}/{pt.system}")
+
+
+def test_run_batch_padding_chunk():
+    """A group size that is not a power of two exercises the padded final
+    chunk; padded duplicates must not leak into the results."""
+    pts = [cs.RunPoint("cfd", "BL", n, 0, 4000) for n in
+           (10, 14, 18, 24, 32)]  # 5 points -> chunks of 16? no: [8] pad 3
+    res = cs.run_batch(pts)
+    assert [r.n_compute for r in res] == [10, 14, 18, 24, 32]
+    assert len({r.exec_time_s for r in res}) > 1  # distinct grid points

@@ -1,0 +1,102 @@
+"""Serial-vs-set-parallel timing for the mode-split sweep.
+
+Times the Table-3 style offline policy sweep (IBL / Morpheus-Basic /
+Morpheus-ALL over all 17 workloads) two ways:
+
+  * serial   — the seed implementation: one ``controller.simulate_jit``
+               (per-request ``lax.scan``) per grid point;
+  * batched  — ``cache_sim.run_batch``: points grouped by config shape and
+               dispatched through the vmapped set-parallel engine.
+
+  PYTHONPATH=src python tools/bench_engine.py [quick|std|full]
+
+Prints a table (sweep size, wall-clock, speedup); the std row is the
+acceptance measurement recorded in CHANGES.md.
+"""
+import os
+import sys
+import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT))
+
+PROFILE = sys.argv[1] if len(sys.argv) > 1 else "std"
+os.environ["REPRO_BENCH_PROFILE"] = PROFILE
+
+from repro.core import cache_sim as cs           # noqa: E402
+from repro.core import controller as ctl         # noqa: E402
+from repro.core import policy                    # noqa: E402
+from repro.core import traces as tr              # noqa: E402
+
+from benchmarks import common as C               # noqa: E402
+
+SYSTEMS = ("IBL", "Morpheus-Basic", "Morpheus-ALL")
+
+
+def sweep_points():
+    pts = []
+    for system in SYSTEMS:
+        spec = cs.SYSTEMS[system]
+        for app in tr.MEMORY_BOUND + tr.COMPUTE_BOUND:
+            w = tr.WORKLOADS[app]
+            if spec.morpheus and not w.memory_bound:
+                continue  # recorded directly by mode_splits, no sweep
+            grid = C.MORPHEUS_GRID if (spec.morpheus and w.memory_bound) \
+                else C.GRID
+            pts.extend(policy.grid_points(app, system, grid=grid,
+                                          length=C.TRACE_LEN))
+    return pts
+
+
+def run_serial(pts):
+    import jax.numpy as jnp
+    out = []
+    for pt in pts:
+        cfg, (addrs, writes, levels, warmup), n_c, n_k, n_acc = \
+            cs._prepare(pt)
+        stats = ctl.simulate_jit(cfg, jnp.asarray(addrs),
+                                 jnp.asarray(writes), jnp.asarray(levels),
+                                 warmup)
+        stats = ctl.Stats(*[x.block_until_ready() for x in stats])
+        out.append(cs._finalize(pt, n_c, n_k, n_acc, stats))
+    return out
+
+
+def main():
+    pts = sweep_points()
+    print(f"profile={PROFILE}  trace_len={C.TRACE_LEN}  points={len(pts)}")
+
+    t0 = time.time()
+    rb = cs.run_batch(pts)
+    t_batch_cold = time.time() - t0
+    t0 = time.time()
+    rb = cs.run_batch(pts)
+    t_batch_warm = time.time() - t0
+
+    t0 = time.time()
+    rs = run_serial(pts)
+    t_serial = time.time() - t0
+
+    # sanity: both sweeps must agree on every best split
+    best_b, best_s = {}, {}
+    for pt, b, s in zip(pts, rb, rs):
+        key = (pt.app, pt.system)
+        if key not in best_b or b.exec_time_s < best_b[key][1]:
+            best_b[key] = (b.n_compute, b.exec_time_s)
+        if key not in best_s or s.exec_time_s < best_s[key][1]:
+            best_s[key] = (s.n_compute, s.exec_time_s)
+    agree = sum(best_b[k][0] == best_s[k][0] for k in best_b)
+    print(f"best-split agreement: {agree}/{len(best_b)}")
+
+    print(f"{'path':24s} {'wall-clock':>12s} {'speedup':>9s}")
+    print(f"{'serial lax.scan':24s} {t_serial:11.1f}s {1.0:8.1f}x")
+    print(f"{'run_batch (cold+jit)':24s} {t_batch_cold:11.1f}s "
+          f"{t_serial / t_batch_cold:8.1f}x")
+    print(f"{'run_batch (warm)':24s} {t_batch_warm:11.1f}s "
+          f"{t_serial / t_batch_warm:8.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,11 @@
 by analyzer bytes / flops — the dry-run equivalent of a memory profile.
 
   python tools/profile_cell.py <arch> <shape> [pod2] [top_n]
+
+Also profiles the set-parallel cache-sim engine (the batched executable
+``cache_sim.run_batch`` dispatches):
+
+  python tools/profile_cell.py engine <app>[:<system>[:n_compute[:n_cache]]] [top_n]
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -117,10 +122,40 @@ def rank_instances(hlo: str, top: int = 30):
         print(f"{b / 2**30:9.1f} GiB x{mult:<5d} {kind:26s} {name[:28]:28s} {shp}")
 
 
+def profile_engine(cell: str, top: int):
+    """Lower the batched set-parallel engine for one sweep cell and rank
+    its HLO ops — how to see where the simulator's compiled time goes."""
+    from repro.core import cache_sim as cs
+    from repro.core import engine as E
+
+    parts = cell.split(":")
+    app = parts[0]
+    system = parts[1] if len(parts) > 1 else "Morpheus-ALL"
+    n_compute = int(parts[2]) if len(parts) > 2 else 32
+    n_cache = int(parts[3]) if len(parts) > 3 else 36
+    pt = cs.RunPoint(app, system, n_compute, n_cache, 40_000)
+    cfg, trace, n_compute, n_cache, _ = cs._prepare(pt)
+    packed = E.pack(cfg, [trace])
+    compiled = E._run_packed.lower(cfg, packed).compile()
+    hlo = compiled.as_text()
+    cost = H.analyze(hlo)
+    print(json.dumps({
+        "cell": f"{app}:{system}:{n_compute}:{n_cache}",
+        "conv_layout": list(packed.conv_tag.shape),
+        "ext_layout": list(packed.ext_tag.shape),
+        "hlo_flops": cost.flops, "hlo_bytes": cost.bytes,
+    }, indent=1))
+    rank_ops(hlo, top)
+    rank_instances(hlo, top)
+
+
 def main():
     arch, shape = sys.argv[1], sys.argv[2]
-    multi = "pod2" in sys.argv[3:]
     top = int(sys.argv[-1]) if sys.argv[-1].isdigit() else 25
+    if arch == "engine":
+        profile_engine(shape, top)
+        return
+    multi = "pod2" in sys.argv[3:]
     rep = D.lower_cell(arch, shape, multi_pod=multi)
     keep = ("hlo_flops_per_chip", "hlo_bytes_per_chip",
             "collective_bytes_per_chip", "t_compute_s", "t_memory_s",
