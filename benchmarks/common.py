@@ -80,7 +80,8 @@ _POLICY_CACHE = RESULTS_DIR / f"policy_cache_{PROFILE}.json"
 
 
 def mode_splits(systems: Sequence[str], apps: Sequence[str],
-                *, recompute: bool = False) -> Dict[str, Dict[str, Tuple[int, int]]]:
+                *, recompute: bool = False,
+                backend: str = "") -> Dict[str, Dict[str, Tuple[int, int]]]:
     """{(system) -> {app -> (n_compute, n_cache)}} via the offline policy
     sweep (core/policy.py), cached on disk per profile.
 
@@ -88,7 +89,14 @@ def mode_splits(systems: Sequence[str], apps: Sequence[str],
     ``policy.sweep`` / ``cache_sim.run_batch`` call: points that share a
     config shape (same system flags and cache-chip count, across apps and
     compute-core counts) run as vmapped engine dispatches instead of one
-    recompiled serial scan each."""
+    recompiled serial scan each.  ``backend`` selects the engine's
+    inner-scan implementation ("" = session default).  Note the on-disk
+    cache is shared across backends: a warm cache returns whichever
+    backend computed it first.  Splits come from an argmin over
+    float-derived exec times, which can differ between backends by
+    accumulation order on near-tie grid cells — measured agreement is
+    45/45 on the Table-3 sweep (tools/bench_engine.py), so we accept
+    that tie-break caveat rather than fragment the cache per backend."""
     from repro.core import cache_sim as cs
     from repro.core import policy
     from repro.core import traces as tr
@@ -115,11 +123,14 @@ def mode_splits(systems: Sequence[str], apps: Sequence[str],
             grid = MORPHEUS_GRID if (spec.morpheus and w.memory_bound) \
                 else GRID
             pending.extend(policy.grid_points(app, system, grid=grid,
-                                              length=TRACE_LEN))
+                                              length=TRACE_LEN,
+                                              backend=backend))
     if pending:
         for (app, system), split in policy.sweep(pending).items():
             cache[system][app] = [split.n_compute, split.n_cache]
         changed = True
+    missing = [(s, a) for s in systems for a in apps if a not in cache[s]]
+    assert not missing, f"mode_splits produced no split for {missing}"
     if changed:
         _POLICY_CACHE.parent.mkdir(parents=True, exist_ok=True)
         _POLICY_CACHE.write_text(json.dumps(cache, indent=1))

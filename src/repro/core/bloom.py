@@ -65,11 +65,19 @@ def make_state(num_sets: int, associativity: int, *, filter_bytes: int = 32) -> 
 
 
 def _hash_bits(tag: jnp.ndarray, num_bits: int) -> jnp.ndarray:
-    """Return the NUM_HASHES bit positions (int32, < num_bits) for ``tag``."""
+    """Return the NUM_HASHES bit positions (int32, < num_bits) for ``tag``.
+
+    Unrolled over the (static, tiny) multiplier list with scalar constants
+    only — no captured constant vectors — so the same code is traceable
+    both under jit/vmap and inside the engine's Pallas kernel bodies.
+    """
     tag = tag.astype(jnp.uint32)
-    muls = jnp.asarray(_HASH_MULTIPLIERS[:NUM_HASHES], dtype=jnp.uint32)
-    # multiply-shift: high bits of tag * odd constant are well mixed
-    h = (tag[..., None] * muls) ^ ((tag[..., None] * muls) >> jnp.uint32(15))
+    hs = []
+    for m in _HASH_MULTIPLIERS[:NUM_HASHES]:
+        # multiply-shift: high bits of tag * odd constant are well mixed
+        hm = tag * jnp.uint32(m)
+        hs.append(hm ^ (hm >> jnp.uint32(15)))
+    h = jnp.stack(hs, axis=-1)
     return (h % jnp.uint32(num_bits)).astype(jnp.int32)
 
 

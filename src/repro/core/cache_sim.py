@@ -147,13 +147,20 @@ class RunResult:
 
 @dataclass(frozen=True)
 class RunPoint:
-    """One (app, system, mode-split, trace) grid point for ``run_batch``."""
+    """One (app, system, mode-split, trace) grid point for ``run_batch``.
+
+    ``backend`` picks the engine's inner-scan implementation ("jnp" or
+    "pallas"; "" = session default, see ``engine.default_backend``) and is
+    part of the batching key: points on different backends dispatch
+    separately even under the same simulator config.
+    """
     app: str
     system: str
     n_compute: int
     n_cache: int = 0
     length: int = 120_000
     seed: int = 0
+    backend: str = ""
 
 
 def _prepare(pt: RunPoint):
@@ -264,12 +271,13 @@ def run_batch(points: Sequence[RunPoint]) -> List[RunResult]:
     error bars and online mode-split search are all one ``run_batch``.
     """
     prepped = [_prepare(pt) for pt in points]
-    groups: Dict[MorpheusConfig, List[int]] = {}
+    groups: Dict[tuple, List[int]] = {}
     for i, (cfg, _, _, _, _) in enumerate(prepped):
-        groups.setdefault(cfg, []).append(i)
+        backend = engine.resolve_backend(points[i].backend or None)
+        groups.setdefault((cfg, backend), []).append(i)
 
     results: List[RunResult] = [None] * len(points)  # type: ignore
-    for cfg, idxs in groups.items():
+    for (cfg, backend), idxs in groups.items():
         done = 0
         for blen in _chunk_lengths(len(idxs)):
             chunk = idxs[done:done + blen]
@@ -277,7 +285,7 @@ def run_batch(points: Sequence[RunPoint]) -> List[RunResult]:
             traces = [prepped[i][1] for i in chunk]
             while len(traces) < blen:         # pad to the compiled shape
                 traces.append(traces[-1])
-            stats_b = engine.simulate_batch(cfg, traces)
+            stats_b = engine.simulate_batch(cfg, traces, backend)
             for j, i in enumerate(chunk):
                 stats = Stats(*[np.asarray(x[j]) for x in stats_b])
                 _, _, n_compute, n_cache, n_acc = prepped[i]
@@ -287,7 +295,8 @@ def run_batch(points: Sequence[RunPoint]) -> List[RunResult]:
 
 
 def run(app: str, system: str, *, n_compute: int, n_cache: int = 0,
-        length: int = 120_000, seed: int = 0) -> RunResult:
+        length: int = 120_000, seed: int = 0,
+        backend: str = "") -> RunResult:
     """Single-point wrapper over ``run_batch`` (kept for compatibility)."""
     return run_batch([RunPoint(app, system, n_compute, n_cache,
-                               length, seed)])[0]
+                               length, seed, backend)])[0]

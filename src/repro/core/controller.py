@@ -32,6 +32,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import address_separation as asep
 from . import bloom as bloomlib
@@ -406,9 +407,11 @@ def request_stats(cfg: MorpheusConfig, sel_c: jnp.ndarray,
     )
 
 
-_NO_CONV = ConvOutcome(hit=jnp.bool_(False), evict_wb=jnp.bool_(False))
-_NO_EXT = ExtOutcome(hit=jnp.bool_(False), pred=jnp.bool_(False),
-                     wbs=jnp.int32(0), swap=jnp.bool_(False))
+# numpy scalars (jaxpr literals) rather than jnp arrays so the engine's
+# Pallas backend can close over these no-op outcomes inside kernel bodies
+_NO_CONV = ConvOutcome(hit=np.bool_(False), evict_wb=np.bool_(False))
+_NO_EXT = ExtOutcome(hit=np.bool_(False), pred=np.bool_(False),
+                     wbs=np.int32(0), swap=np.bool_(False))
 
 
 def step(cfg: MorpheusConfig, st: MorpheusState,

@@ -29,9 +29,24 @@ overhead, so the speedup is roughly the scan-length ratio.
 
 Shapes are bucketed (pow2 padding of L) so repeated calls with the same
 config reuse one compiled executable across apps, seeds and grid points.
+
+Backends: the inner per-set scan has two interchangeable implementations,
+selected by ``backend`` on every public entry point (and threaded through
+``cache_sim.RunPoint``/``run_batch``, ``policy`` and the benchmarks):
+
+  * ``"jnp"``    — the pure-jnp vmap-over-sets scan below (CPU default);
+  * ``"pallas"`` — the fused per-set Pallas kernel in
+    ``kernels/engine_scan.py`` (default on TPU hosts; runs in interpret
+    mode elsewhere).  Integer Stats are bit-identical across backends —
+    both apply the same ``controller`` transition kernels in the same
+    in-set order (tests/test_engine.py).
+
+``REPRO_ENGINE_BACKEND`` overrides the default; ``resolve_backend`` turns
+an unsupported selection into a clear error instead of a Pallas traceback.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import List, NamedTuple, Sequence, Tuple
 
@@ -41,6 +56,45 @@ import numpy as np
 
 from . import controller as ctl
 from .controller import MorpheusConfig, Stats
+
+BACKENDS = ("jnp", "pallas")
+
+
+class BackendError(RuntimeError):
+    """Requested engine backend cannot run on this host."""
+
+
+def backend_status(backend: str) -> Tuple[bool, str]:
+    """(supported, human-readable detail) for an engine backend name."""
+    if backend == "jnp":
+        return True, "pure-jnp vmap-over-sets scan"
+    if backend == "pallas":
+        try:
+            from ..kernels import engine_scan
+        except ImportError as e:  # pragma: no cover - host-dependent
+            return False, f"kernels.engine_scan import failed: {e}"
+        return engine_scan.supported()
+    return False, f"unknown backend {backend!r}; choose from {BACKENDS}"
+
+
+def default_backend() -> str:
+    """Session default: env override, else pallas on TPU hosts, else jnp."""
+    env = os.environ.get("REPRO_ENGINE_BACKEND", "").strip()
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Validate a backend choice (None -> session default) or raise a
+    ``BackendError`` whose message says what to do about it."""
+    b = backend or default_backend()
+    ok, detail = backend_status(b)
+    if not ok:
+        raise BackendError(
+            f"engine backend {b!r} is unavailable on this host: {detail}. "
+            f"Use backend='jnp' (or unset REPRO_ENGINE_BACKEND).")
+    return b
 
 
 class PackedTraces(NamedTuple):
@@ -194,9 +248,13 @@ def _ext_trace_stats(cfg: MorpheusConfig, tags, writes, levels, pos, active,
     return jax.tree.map(lambda x: jnp.sum(x, axis=0), per_set)
 
 
-@partial(jax.jit, static_argnums=(0,))
-def _run_packed(cfg: MorpheusConfig, pt: PackedTraces) -> Stats:
+@partial(jax.jit, static_argnums=(0, 2))
+def _run_packed(cfg: MorpheusConfig, pt: PackedTraces,
+                backend: str = "jnp") -> Stats:
     """Batched engine: PackedTraces -> Stats with (B,) leaves."""
+    if backend == "pallas":
+        from ..kernels import engine_scan
+        return engine_scan.run_packed(cfg, pt)
     b = pt.warmup.shape[0]
     total = jax.tree.map(
         lambda z: jnp.zeros((b,) + z.shape, z.dtype), ctl._zero_stats())
@@ -215,22 +273,24 @@ def _run_packed(cfg: MorpheusConfig, pt: PackedTraces) -> Stats:
 
 def simulate_batch(cfg: MorpheusConfig,
                    traces: Sequence[Tuple[np.ndarray, np.ndarray,
-                                          np.ndarray, int]]) -> Stats:
+                                          np.ndarray, int]],
+                   backend: str | None = None) -> Stats:
     """Simulate a batch of traces under ONE config in one compiled dispatch.
 
     Returns a Stats whose leaves have a leading (B,) batch dimension, in
     trace order.  All traces share the compiled executable; distinct
-    configs (different set counts / flags) compile separately.
+    configs (different set counts / flags) compile separately.  ``backend``
+    picks the inner-scan implementation (None -> ``default_backend()``).
     """
-    return _run_packed(cfg, pack(cfg, traces))
+    return _run_packed(cfg, pack(cfg, traces), resolve_backend(backend))
 
 
 def simulate_parallel(cfg: MorpheusConfig, addrs, writes, levels,
-                      warmup: int = 0) -> Stats:
+                      warmup: int = 0, backend: str | None = None) -> Stats:
     """Drop-in set-parallel replacement for ``controller.simulate``.
 
     Stats equivalence vs. the serial scan: integer counters exact, float
     sums equal up to accumulation order (tested in tests/test_engine.py).
     """
-    out = simulate_batch(cfg, [(addrs, writes, levels, warmup)])
+    out = simulate_batch(cfg, [(addrs, writes, levels, warmup)], backend)
     return jax.tree.map(lambda x: x[0], out)

@@ -28,11 +28,13 @@ DEFAULT_GRID: Sequence[int] = (10, 14, 18, 24, 32, 40, 48, 56, 62, 68)
 
 
 def grid_points(app: str, system: str, *, grid: Sequence[int],
-                length: int, seed: int = 0) -> List[cs.RunPoint]:
+                length: int, seed: int = 0,
+                backend: str = "") -> List[cs.RunPoint]:
     """The sweep points of one (app, system): each compute-core count in
     the grid, cache mode getting the rest (Morpheus) or power-gating
     (IBL).  Grid entries whose Morpheus cache side would be empty are
-    dropped."""
+    dropped.  ``backend`` (engine inner-scan implementation) is carried on
+    every point."""
     spec = cs.SYSTEMS[system]
     w = tr.WORKLOADS[app]
     pts = []
@@ -43,7 +45,8 @@ def grid_points(app: str, system: str, *, grid: Sequence[int],
                           int(cs.TOTAL_CORES * cs.MAX_CACHE_FRAC))
             if n_cache <= 0:
                 continue
-        pts.append(cs.RunPoint(app, system, n_compute, n_cache, length, seed))
+        pts.append(cs.RunPoint(app, system, n_compute, n_cache, length,
+                               seed, backend))
     return pts
 
 
@@ -60,17 +63,19 @@ def sweep(points: Sequence[cs.RunPoint]) -> Dict[tuple, ModeSplit]:
 
 
 def best_split(app: str, system: str, *, grid: Sequence[int] = DEFAULT_GRID,
-               length: int = 60_000, seed: int = 0) -> ModeSplit:
+               length: int = 60_000, seed: int = 0,
+               backend: str = "") -> ModeSplit:
     """Sweep compute-core counts for one (app, system); one batched
     dispatch per config shape instead of a recompiled run per point."""
-    pts = grid_points(app, system, grid=grid, length=length, seed=seed)
+    pts = grid_points(app, system, grid=grid, length=length, seed=seed,
+                      backend=backend)
     assert pts, f"empty sweep grid for {app}/{system}"
     return sweep(pts)[(app, system)]
 
 
 def table3(systems: Sequence[str] = ("IBL", "Morpheus-Basic", "Morpheus-ALL"),
            apps: Sequence[str] | None = None, *, length: int = 60_000,
-           ) -> Dict[str, Dict[str, ModeSplit]]:
+           backend: str = "") -> Dict[str, Dict[str, ModeSplit]]:
     """Paper Table 3: per-app compute-core counts for each system.
 
     All (system, app, grid) points go through ONE ``run_batch`` so points
@@ -80,7 +85,7 @@ def table3(systems: Sequence[str] = ("IBL", "Morpheus-Basic", "Morpheus-ALL"),
     for system in systems:
         for app in apps:
             pts.extend(grid_points(app, system, grid=DEFAULT_GRID,
-                                   length=length))
+                                   length=length, backend=backend))
     best = sweep(pts)
     return {system: {app: best[(app, system)] for app in apps}
             for system in systems}

@@ -22,9 +22,12 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 LRU_MAX_INT = 0xFFF  # paper Algorithm 1 line 9
-LRU_MAX = jnp.uint32(LRU_MAX_INT)
+# numpy (not jnp) scalar: inlines as a jaxpr literal, so kernels that use
+# it can be traced by Pallas (closed-over jax.Arrays are rejected there)
+LRU_MAX = np.uint32(LRU_MAX_INT)
 
 
 class TagStoreState(NamedTuple):

@@ -2,9 +2,15 @@
 
 <name>.py holds the pl.pallas_call + BlockSpec kernel, ops.py the jit'd
 public wrappers, ref.py the pure-jnp oracles used by the allclose tests.
-Kernels run in interpret mode on CPU (this container) and compiled on TPU.
+``engine_scan.py`` is special: it is the ``backend="pallas"``
+implementation of the cache-sim engine's inner per-set scan
+(core/engine.py) rather than an ops.py-wrapped primitive — its oracle is
+the serial controller scan itself.  Kernels run in interpret mode on CPU
+(this container) and compiled on TPU.  Catalogue with grid/block layouts,
+interpret-mode caveats and test coverage: docs/kernels.md.
 """
-from . import bdi, bloom_query, decode_attn, gather_blocks, ops, ref, tag_lookup
+from . import (bdi, bloom_query, decode_attn, engine_scan, gather_blocks,
+               ops, ref, tag_lookup)
 
-__all__ = ["bdi", "bloom_query", "decode_attn", "gather_blocks", "ops",
-           "ref", "tag_lookup"]
+__all__ = ["bdi", "bloom_query", "decode_attn", "engine_scan",
+           "gather_blocks", "ops", "ref", "tag_lookup"]

@@ -1,0 +1,265 @@
+"""Pallas kernel: fused per-set cache-engine transition scan.
+
+This is the engine's hot path — the per-set state machine of
+``core/engine._run_packed`` — as a purpose-built kernel, in the spirit of
+the Morpheus helper kernel itself (and of assist-warp designs like
+CALDERA, arXiv:1602.01348): move the bottleneck state machine into a
+kernel that lives next to the memory it manages.
+
+Layout (mirrors ``core/engine.pack``):
+
+  * grid = (B, S): one program instance owns ONE set's padded request
+    subsequence of one trace — the Pallas analogue of the jnp engine's
+    ``vmap`` over sets, and of "one warp owns one cache set" in the paper.
+  * in_specs: the packed (B, S, L) trace columns, block (1, 1, L) — each
+    instance sees only its own subsequence (tag / write / level plus the
+    ``active`` padding mask and the warmup ``stats mask``).
+  * scratch (VMEM): the set's mutable state rows — tags / valid / dirty /
+    LRU (+ size, byte budget ``used``, and the two Bloom filters on the
+    extended tier).  Scratch persists across sequential grid steps on TPU,
+    so every instance re-zeroes it first (a fresh cache set).
+  * body: ``lax.fori_loop`` over the L slots, applying the SAME pure
+    per-set transition kernels the serial oracle runs
+    (``controller.conv_set_kernel`` / ``ext_set_kernel``) and accumulating
+    the per-request ``controller.request_stats`` deltas in the loop carry
+    (int32 counters exact, float32 sums in in-set order).
+  * out_specs: per-set Stats vectors (B, S, n_int) int32 and (B, S,
+    n_float) float32, reduced over sets by the caller.
+
+Because the transition functions are literally shared with the serial
+``lax.scan`` oracle and the jnp engine, the integer Stats are bit-identical
+across all three paths (property-tested in tests/test_engine.py).
+
+Interpret-mode caveats: on CPU (this container) the kernel runs with
+``interpret=True`` — functionally identical, but the grid is emulated
+sequentially, so it is a correctness/portability path, not a fast path
+(``backend="jnp"`` stays the CPU default).  The controller kernels use 1-D
+``jnp.arange``/``argmax`` idioms that Mosaic only accepts in 2-D form, so
+compiled-TPU lowering may need the iota reshapes noted in docs/kernels.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; absent on some non-TPU jax builds
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover - exercised via backend_status
+    pltpu = None
+
+from ..core import controller as ctl
+from ..core.controller import MorpheusConfig, Stats
+
+# Stats layout inside the kernel: one int32 vector + one float32 vector,
+# field order inherited from the Stats NamedTuple.
+INT_FIELDS: Tuple[str, ...] = tuple(
+    f for f in Stats._fields if f in ctl._INT_FIELDS)
+FLOAT_FIELDS: Tuple[str, ...] = tuple(
+    f for f in Stats._fields if f not in ctl._INT_FIELDS)
+_NI, _NF = len(INT_FIELDS), len(FLOAT_FIELDS)
+
+
+def _delta_vecs(delta: Stats) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stats delta (scalar leaves) -> (int32 (NI,), float32 (NF,))."""
+    ints = jnp.stack([jnp.asarray(getattr(delta, f), jnp.int32)
+                      for f in INT_FIELDS])
+    flts = jnp.stack([jnp.asarray(getattr(delta, f), jnp.float32)
+                      for f in FLOAT_FIELDS])
+    return ints, flts
+
+
+def _vecs_to_stats(ints: jnp.ndarray, flts: jnp.ndarray) -> Stats:
+    """(..., NI) int32 + (..., NF) float32 -> Stats with (...,) leaves."""
+    vals = {f: ints[..., i] for i, f in enumerate(INT_FIELDS)}
+    vals.update({f: flts[..., i] for i, f in enumerate(FLOAT_FIELDS)})
+    return Stats(**vals)
+
+
+def supported() -> Tuple[bool, str]:
+    """Whether this kernel can run on the current host, and how."""
+    if pltpu is None:
+        return False, "jax.experimental.pallas.tpu is not importable"
+    plat = jax.default_backend()
+    if plat == "tpu":
+        return True, "compiled Mosaic kernel"
+    if plat == "cpu":
+        return True, "interpret mode (CPU host)"
+    return False, f"no Pallas lowering for '{plat}' hosts"
+
+
+# ------------------------------------------------------------------ kernels
+
+def _conv_scan_kernel(cfg: MorpheusConfig, tag_ref, write_ref, active_ref,
+                      mask_ref, ints_ref, flts_ref,
+                      tags_s, valid_s, dirty_s, lru_s):
+    """One conventional set's full subsequence: scan slots, carry state in
+    scratch, accumulate the Stats delta vectors in the loop carry."""
+    tags_s[...] = jnp.zeros_like(tags_s)
+    valid_s[...] = jnp.zeros_like(valid_s)
+    dirty_s[...] = jnp.zeros_like(dirty_s)
+    lru_s[...] = jnp.zeros_like(lru_s)
+    tag = tag_ref[0, 0, :]
+    write = write_ref[0, 0, :]
+    active = active_ref[0, 0, :]
+    mask = mask_ref[0, 0, :]
+
+    def body(t, acc):
+        ints, flts = acc
+        row = ctl.ConvRow(tags_s[0], valid_s[0] != 0, dirty_s[0] != 0,
+                          lru_s[0])
+        tg = jax.lax.dynamic_index_in_dim(tag, t, keepdims=False)
+        wr = jax.lax.dynamic_index_in_dim(write, t, keepdims=False) != 0
+        a = jax.lax.dynamic_index_in_dim(active, t, keepdims=False) != 0
+        m = jax.lax.dynamic_index_in_dim(mask, t, keepdims=False) != 0
+        new_row, out = ctl.conv_set_kernel(cfg, row, tg, wr)
+        tags_s[0] = jnp.where(a, new_row.tags, row.tags)
+        valid_s[0] = jnp.where(a, new_row.valid, row.valid).astype(jnp.int32)
+        dirty_s[0] = jnp.where(a, new_row.dirty, row.dirty).astype(jnp.int32)
+        lru_s[0] = jnp.where(a, new_row.lru, row.lru)
+        delta = ctl.request_stats(cfg, m, out, np.bool_(False), ctl._NO_EXT)
+        iv, fv = _delta_vecs(delta)
+        return ints + iv, flts + fv
+
+    ints, flts = jax.lax.fori_loop(
+        0, tag.shape[0], body,
+        (jnp.zeros((_NI,), jnp.int32), jnp.zeros((_NF,), jnp.float32)))
+    ints_ref[0, 0, :] = ints
+    flts_ref[0, 0, :] = flts
+
+
+def _ext_scan_kernel(cfg: MorpheusConfig, tag_ref, write_ref, level_ref,
+                     active_ref, mask_ref, ints_ref, flts_ref,
+                     tags_s, valid_s, dirty_s, lru_s, size_s, bf1_s, bf2_s):
+    """One extended set's subsequence: predict -> lookup -> touch/insert per
+    slot.  Vector state (ways / Bloom words) lives in scratch; the scalar
+    byte budget and MRU count ride in the loop carry."""
+    tags_s[...] = jnp.zeros_like(tags_s)
+    valid_s[...] = jnp.zeros_like(valid_s)
+    dirty_s[...] = jnp.zeros_like(dirty_s)
+    lru_s[...] = jnp.zeros_like(lru_s)
+    size_s[...] = jnp.zeros_like(size_s)
+    bf1_s[...] = jnp.zeros_like(bf1_s)
+    bf2_s[...] = jnp.zeros_like(bf2_s)
+    tag = tag_ref[0, 0, :]
+    write = write_ref[0, 0, :]
+    level = level_ref[0, 0, :]
+    active = active_ref[0, 0, :]
+    mask = mask_ref[0, 0, :]
+
+    def body(t, acc):
+        used, n_mru, ints, flts = acc
+        row = ctl.ExtRow(tags_s[0], valid_s[0] != 0, dirty_s[0] != 0,
+                         lru_s[0], size_s[0], used, bf1_s[0], bf2_s[0],
+                         n_mru)
+        tg = jax.lax.dynamic_index_in_dim(tag, t, keepdims=False)
+        wr = jax.lax.dynamic_index_in_dim(write, t, keepdims=False) != 0
+        lv = jax.lax.dynamic_index_in_dim(level, t, keepdims=False)
+        a = jax.lax.dynamic_index_in_dim(active, t, keepdims=False) != 0
+        m = jax.lax.dynamic_index_in_dim(mask, t, keepdims=False) != 0
+        new_row, out = ctl.ext_set_kernel(cfg, row, tg, wr, lv)
+        tags_s[0] = jnp.where(a, new_row.tags, row.tags)
+        valid_s[0] = jnp.where(a, new_row.valid, row.valid).astype(jnp.int32)
+        dirty_s[0] = jnp.where(a, new_row.dirty, row.dirty).astype(jnp.int32)
+        lru_s[0] = jnp.where(a, new_row.lru, row.lru)
+        size_s[0] = jnp.where(a, new_row.size, row.size)
+        bf1_s[0] = jnp.where(a, new_row.bf1, row.bf1)
+        bf2_s[0] = jnp.where(a, new_row.bf2, row.bf2)
+        used = jnp.where(a, new_row.used, used)
+        n_mru = jnp.where(a, new_row.n_mru, n_mru)
+        delta = ctl.request_stats(cfg, np.bool_(False), ctl._NO_CONV, m, out)
+        iv, fv = _delta_vecs(delta)
+        return used, n_mru, ints + iv, flts + fv
+
+    _, _, ints, flts = jax.lax.fori_loop(
+        0, tag.shape[0], body,
+        (jnp.int32(0), jnp.int32(0),
+         jnp.zeros((_NI,), jnp.int32), jnp.zeros((_NF,), jnp.float32)))
+    ints_ref[0, 0, :] = ints
+    flts_ref[0, 0, :] = flts
+
+
+# ------------------------------------------------------------------ drivers
+
+def _per_set_call(kernel, n_inputs: int, b: int, s: int, length: int,
+                  scratch, interpret: bool):
+    """pallas_call plumbing shared by the two tiers: grid (B, S), one
+    (1, 1, L) block per input column, per-set Stats vector outputs."""
+    col = pl.BlockSpec((1, 1, length), lambda i, j: (i, j, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, s),
+        in_specs=[col] * n_inputs,
+        out_specs=[pl.BlockSpec((1, 1, _NI), lambda i, j: (i, j, 0)),
+                   pl.BlockSpec((1, 1, _NF), lambda i, j: (i, j, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, s, _NI), jnp.int32),
+                   jax.ShapeDtypeStruct((b, s, _NF), jnp.float32)],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )
+
+
+def conv_scan(cfg: MorpheusConfig, tag, write, active, mask,
+              *, interpret: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All conventional sets of a packed batch -> per-set Stats vectors.
+
+    tag (B, S, L) uint32; write/active/mask (B, S, L) int32 masks.
+    Returns ((B, S, NI) int32, (B, S, NF) float32).
+    """
+    b, s, length = tag.shape
+    w = cfg.conv_ways
+    scratch = [pltpu.VMEM((1, w), jnp.uint32), pltpu.VMEM((1, w), jnp.int32),
+               pltpu.VMEM((1, w), jnp.int32), pltpu.VMEM((1, w), jnp.uint32)]
+    call = _per_set_call(functools.partial(_conv_scan_kernel, cfg), 4,
+                         b, s, length, scratch, interpret)
+    return call(tag, write, active, mask)
+
+
+def ext_scan(cfg: MorpheusConfig, tag, write, level, active, mask,
+             *, interpret: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All extended sets of a packed batch -> per-set Stats vectors."""
+    b, s, length = tag.shape
+    w = cfg.ext_max_ways
+    words = ctl.BLOOM_WORDS
+    scratch = [pltpu.VMEM((1, w), jnp.uint32), pltpu.VMEM((1, w), jnp.int32),
+               pltpu.VMEM((1, w), jnp.int32), pltpu.VMEM((1, w), jnp.uint32),
+               pltpu.VMEM((1, w), jnp.int32),
+               pltpu.VMEM((1, words), jnp.uint32),
+               pltpu.VMEM((1, words), jnp.uint32)]
+    call = _per_set_call(functools.partial(_ext_scan_kernel, cfg), 5,
+                         b, s, length, scratch, interpret)
+    return call(tag, write, level, active, mask)
+
+
+def run_packed(cfg: MorpheusConfig, pt, *, interpret: bool | None = None
+               ) -> Stats:
+    """Pallas twin of ``core.engine._run_packed``: PackedTraces -> Stats
+    with (B,) leaves.  Jit-safe; ``interpret`` defaults to True off-TPU."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = pt.warmup.shape[0]
+    ints = jnp.zeros((b, _NI), jnp.int32)
+    flts = jnp.zeros((b, _NF), jnp.float32)
+    warm = pt.warmup[:, None, None]
+    if pt.conv_tag.shape[1] and pt.conv_tag.shape[2]:
+        mask = (pt.conv_active & (pt.conv_pos >= warm)).astype(jnp.int32)
+        iv, fv = conv_scan(cfg, pt.conv_tag.astype(jnp.uint32),
+                           pt.conv_write.astype(jnp.int32),
+                           pt.conv_active.astype(jnp.int32), mask,
+                           interpret=interpret)
+        ints = ints + iv.sum(axis=1)
+        flts = flts + fv.sum(axis=1)
+    if pt.ext_tag.shape[1] and pt.ext_tag.shape[2]:
+        mask = (pt.ext_active & (pt.ext_pos >= warm)).astype(jnp.int32)
+        iv, fv = ext_scan(cfg, pt.ext_tag.astype(jnp.uint32),
+                          pt.ext_write.astype(jnp.int32),
+                          pt.ext_level.astype(jnp.int32),
+                          pt.ext_active.astype(jnp.int32), mask,
+                          interpret=interpret)
+        ints = ints + iv.sum(axis=1)
+        flts = flts + fv.sum(axis=1)
+    return _vecs_to_stats(ints, flts)

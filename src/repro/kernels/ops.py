@@ -1,7 +1,12 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; TPU is
-the *target*) and False on real TPU backends.
+One thin function per kernel (tag_lookup, bdi_compress/decompress,
+gather_blocks, bloom_query, decode_attention, flash_attention, plus the
+fused ``cached_block_read`` composition).  ``interpret`` defaults to True
+off-TPU (this container is CPU-only; TPU is the *target*) and False on
+real TPU backends — callers can force either.  The engine's Pallas
+backend (engine_scan.py) is not wrapped here: it is selected through
+``core.engine``'s ``backend`` switch instead.
 """
 from __future__ import annotations
 

@@ -1,4 +1,11 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each function mirrors one kernel's contract exactly — same shapes, same
+dtypes, same tie-breaking — written as straight-line vectorized jnp so a
+reviewer can audit it at a glance.  tests/test_kernels.py asserts
+kernel == oracle (exact on integer outputs); ``engine_scan`` has no entry
+here because its oracle is ``controller.simulate`` (tests/test_engine.py).
+"""
 from __future__ import annotations
 
 from typing import Tuple

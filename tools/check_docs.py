@@ -1,0 +1,118 @@
+"""Docs path checker: every repo path referenced from README.md and
+docs/*.md must exist.
+
+  python tools/check_docs.py
+
+Scans inline code spans and fenced code blocks for path-like tokens
+(anything under a known top-level directory, or containing a slash /
+ending in a known source suffix), strips trailing ``:line`` suffixes and
+punctuation, and verifies each against the working tree.  Generated
+artifacts (``benchmarks/out/``, ``results/``) only need their parent
+machinery, not the files, so they are existence-exempt.  Exit 0 iff
+clean; CI runs this in the docs job.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# Directories whose contents are generated at runtime — referencing them
+# in docs is fine even when the files are absent from a fresh checkout.
+GENERATED_PREFIXES = ("benchmarks/out/", "results/")
+TOP_DIRS = ("src/", "docs/", "tools/", "tests/", "benchmarks/",
+            "examples/")
+PATH_SUFFIXES = (".py", ".md", ".toml", ".txt", ".yml", ".json", ".csv")
+
+# A path-like token: a known top dir, or any slash/suffix form.
+_TOKEN = re.compile(r"^[A-Za-z0-9_][A-Za-z0-9_./-]*$")
+_IN_TEXT = re.compile(
+    r"(?:src|docs|tools|tests|benchmarks|examples)/[A-Za-z0-9_./-]+")
+
+
+def _looks_like_path(tok: str) -> bool:
+    if not _TOKEN.match(tok) or "//" in tok:
+        return False
+    if tok.startswith(TOP_DIRS):
+        return True
+    return tok.endswith(PATH_SUFFIXES) and "/" not in tok
+
+
+def _candidates(text: str):
+    """Path-like tokens from inline code spans + anywhere in the text
+    (the latter catches fenced code blocks and tables)."""
+    for span in re.findall(r"`([^`\n]+)`", text):
+        tok = span.strip()
+        # `path::symbol` / `path:line` references -> the path part
+        tok = tok.split("::")[0].split(":")[0].strip()
+        # calls / wildcard globs are API references, not paths
+        if any(c in tok for c in "()<>*{}$ \t'\","):
+            continue
+        if _looks_like_path(tok):
+            yield tok
+    for tok in _IN_TEXT.findall(text):
+        tok = tok.rstrip(".,;:)")
+        if "*" not in tok and _TOKEN.match(tok):
+            yield tok
+
+
+def _tree_filenames() -> set:
+    names = set()
+    for top in ("src", "docs", "tools", "tests", "benchmarks", "examples"):
+        for p in (ROOT / top).rglob("*"):
+            names.add(p.name)
+    names.update(p.name for p in ROOT.iterdir())
+    return names
+
+
+def _resolves(tok: str, filenames: set) -> bool:
+    if "/" not in tok:
+        # bare filename (`controller.py`): exists anywhere in the tree
+        return tok in filenames
+    # try the literal path, module-ref forms (`pkg/mod.attr`), and
+    # extensionless module paths (`benchmarks/fig1_core_scaling`)
+    trials = [tok, tok + ".py"]
+    stem = tok.rsplit(".", 1)[0]
+    trials += [stem, stem + ".py"]
+    return any((ROOT / t).exists() for t in trials)
+
+
+def check_file(md: Path, filenames: set) -> list[str]:
+    errors = []
+    text = md.read_text()
+    seen = set()
+    for tok in _candidates(text):
+        if tok in seen:
+            continue
+        seen.add(tok)
+        if tok.startswith(GENERATED_PREFIXES):
+            continue
+        if not _resolves(tok, filenames):
+            errors.append(f"{md.relative_to(ROOT)}: missing path `{tok}`")
+    return errors
+
+
+def main() -> int:
+    docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    missing_docs = [d for d in docs if not d.exists()]
+    errors = [f"required doc missing: {d.relative_to(ROOT)}"
+              for d in missing_docs]
+    filenames = _tree_filenames()
+    checked = 0
+    for md in docs:
+        if md.exists():
+            errors.extend(check_file(md, filenames))
+            checked += 1
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s) in {checked} file(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"check_docs: OK ({checked} files, all referenced paths exist)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

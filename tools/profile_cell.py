@@ -6,7 +6,12 @@ by analyzer bytes / flops — the dry-run equivalent of a memory profile.
 Also profiles the set-parallel cache-sim engine (the batched executable
 ``cache_sim.run_batch`` dispatches):
 
-  python tools/profile_cell.py engine <app>[:<system>[:n_compute[:n_cache]]] [top_n]
+  python tools/profile_cell.py engine <app>[:<system>[:n_compute[:n_cache]]] [jnp|pallas] [top_n]
+
+The engine mode prints which inner-scan backend it lowered (jnp is the
+session default off-TPU; pass ``pallas`` to profile the fused
+kernels/engine_scan path).  An unsupported backend exits with a one-line
+message instead of a Pallas traceback.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -122,11 +127,19 @@ def rank_instances(hlo: str, top: int = 30):
         print(f"{b / 2**30:9.1f} GiB x{mult:<5d} {kind:26s} {name[:28]:28s} {shp}")
 
 
-def profile_engine(cell: str, top: int):
+def profile_engine(cell: str, top: int, backend: str | None):
     """Lower the batched set-parallel engine for one sweep cell and rank
     its HLO ops — how to see where the simulator's compiled time goes."""
     from repro.core import cache_sim as cs
     from repro.core import engine as E
+
+    try:
+        backend = E.resolve_backend(backend)
+    except E.BackendError as e:
+        print(f"error: {e}", file=sys.stderr)
+        sys.exit(2)
+    _, detail = E.backend_status(backend)
+    print(f"engine backend: {backend} — {detail}")
 
     parts = cell.split(":")
     app = parts[0]
@@ -136,11 +149,12 @@ def profile_engine(cell: str, top: int):
     pt = cs.RunPoint(app, system, n_compute, n_cache, 40_000)
     cfg, trace, n_compute, n_cache, _ = cs._prepare(pt)
     packed = E.pack(cfg, [trace])
-    compiled = E._run_packed.lower(cfg, packed).compile()
+    compiled = E._run_packed.lower(cfg, packed, backend).compile()
     hlo = compiled.as_text()
     cost = H.analyze(hlo)
     print(json.dumps({
         "cell": f"{app}:{system}:{n_compute}:{n_cache}",
+        "backend": backend,
         "conv_layout": list(packed.conv_tag.shape),
         "ext_layout": list(packed.ext_tag.shape),
         "hlo_flops": cost.flops, "hlo_bytes": cost.bytes,
@@ -153,7 +167,9 @@ def main():
     arch, shape = sys.argv[1], sys.argv[2]
     top = int(sys.argv[-1]) if sys.argv[-1].isdigit() else 25
     if arch == "engine":
-        profile_engine(shape, top)
+        backend = next((a for a in sys.argv[3:] if a in ("jnp", "pallas")),
+                       None)
+        profile_engine(shape, top, backend)
         return
     multi = "pod2" in sys.argv[3:]
     rep = D.lower_cell(arch, shape, multi_pod=multi)
