@@ -20,6 +20,30 @@ RESULTS_DIR = Path(__file__).resolve().parents[1] / "results"
 # Benchmark profile: quick (CI smoke), std (default), full (paper-grade)
 PROFILE = os.environ.get("REPRO_BENCH_PROFILE", "std")
 TRACE_LEN = {"quick": 12_000, "std": 40_000, "full": 120_000}[PROFILE]
+
+# Trace seeds per grid cell (env REPRO_BENCH_SEEDS or --seeds N on
+# benchmarks.run / fig1 / fig2).  >1 turns fig1/fig2 cells into
+# mean±std over seeds — each extra seed is just more RunPoints through
+# one run_batch call (the PR-1 engine makes this nearly free).
+SEEDS = max(int(os.environ.get("REPRO_BENCH_SEEDS", "1")), 1)
+
+
+def set_seeds(n: int) -> None:
+    """Override the per-cell seed count (used by figure __main__ blocks,
+    which parse --seeds after this module was imported)."""
+    global SEEDS
+    SEEDS = max(int(n), 1)
+
+
+def seed_list() -> List[int]:
+    return list(range(SEEDS))
+
+
+def mean_std(xs: Sequence[float]) -> Tuple[float, float]:
+    """(mean, population std) of a per-seed value list."""
+    import numpy as np
+    a = np.asarray(list(xs), float)
+    return float(a.mean()), float(a.std())
 GRID = {
     "quick": (18, 32, 48, 68),
     "std": (10, 18, 24, 32, 40, 48, 56, 68),

@@ -21,21 +21,35 @@ THRASHERS = ("kmeans", "histo", "mri-gri", "spmv", "lbm")
 def run() -> Dict[str, List[float]]:
     apps = tr.MEMORY_BOUND + tr.COMPUTE_BOUND
     grid = list(C.GRID)
-    # the whole figure is one batched sweep: every (app, n_compute) point
-    # shares the BL config, so the engine compiles once and vmaps over all
-    pts = [cs.RunPoint(app, "BL", n, 0, C.TRACE_LEN)
-           for app in apps for n in grid]
-    res = {(p.app, p.n_compute): r for p, r in zip(pts, cs.run_batch(pts))}
+    seeds = C.seed_list()
+    # the whole figure is one batched sweep: every (app, n_compute, seed)
+    # point shares the BL config, so the engine compiles once and vmaps
+    # over all; extra seeds (--seeds N) are just more RunPoints
+    pts = [cs.RunPoint(app, "BL", n, 0, C.TRACE_LEN, seed)
+           for app in apps for n in grid for seed in seeds]
+    res = {(p.app, p.n_compute, p.seed): r
+           for p, r in zip(pts, cs.run_batch(pts))}
     curves: Dict[str, List[float]] = {}
+    stds: Dict[str, List[float]] = {}
     rows = []
     for app in apps:
-        ipcs = [res[(app, n)].ipc for n in grid]
-        base = ipcs[0]
-        norm = [x / base for x in ipcs]
-        curves[app] = norm
-        rows.append([app, tr.WORKLOADS[app].memory_bound] + [f"{x:.3f}" for x in norm])
-    C.write_csv("fig1_core_scaling",
-                ["app", "memory_bound"] + [f"sm{n}" for n in grid], rows)
+        per_seed = []
+        for s in seeds:
+            ipcs = [res[(app, n, s)].ipc for n in grid]
+            per_seed.append([x / ipcs[0] for x in ipcs])  # each seed's base
+        agg = [C.mean_std([ps[i] for ps in per_seed])
+               for i in range(len(grid))]
+        curves[app] = [m for m, _ in agg]
+        stds[app] = [sd for _, sd in agg]
+        row = [app, tr.WORKLOADS[app].memory_bound] + \
+            [f"{m:.3f}" for m in curves[app]]
+        if len(seeds) > 1:
+            row += [f"{sd:.3f}" for sd in stds[app]]
+        rows.append(row)
+    header = ["app", "memory_bound"] + [f"sm{n}" for n in grid]
+    if len(seeds) > 1:
+        header += [f"sm{n}_std" for n in grid]
+    C.write_csv("fig1_core_scaling", header, rows)
 
     # --- validation against the paper's observations
     sat_frac = []           # memory-bound: perf(68)/max(perf) ~ saturation
@@ -68,5 +82,12 @@ def run() -> Dict[str, List[float]]:
 
 
 if __name__ == "__main__":
-    with C.Timer("fig1 core scaling"):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="trace seeds per cell; >1 adds mean±std columns")
+    args = ap.parse_args()
+    if args.seeds:
+        C.set_seeds(args.seeds)
+    with C.Timer(f"fig1 core scaling ({C.SEEDS} seed(s))"):
         run()

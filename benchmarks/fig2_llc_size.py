@@ -26,25 +26,42 @@ def _scaled_system(conv_scale: float) -> str:
 
 
 def run() -> Dict[str, Dict[float, float]]:
-    # one batched sweep over (scale, app, n_compute); points group by scale
-    # (each LLC scale is one config shape) inside run_batch
-    pts = [cs.RunPoint(app, _scaled_system(s), n, 0, C.TRACE_LEN)
-           for s in SCALES for app in tr.MEMORY_BOUND for n in C.GRID]
-    res = {}
+    # one batched sweep over (scale, app, n_compute, seed); points group
+    # by scale (each LLC scale is one config shape) inside run_batch
+    seeds = C.seed_list()
+    pts = [cs.RunPoint(app, _scaled_system(s), n, 0, C.TRACE_LEN, seed)
+           for s in SCALES for app in tr.MEMORY_BOUND for n in C.GRID
+           for seed in seeds]
+    res = {}           # (app, system, seed) -> best-over-grid IPC
     for p, r in zip(pts, cs.run_batch(pts)):
-        key = (p.app, p.system)
+        key = (p.app, p.system, p.seed)
         res[key] = max(res.get(key, 0.0), r.ipc)
 
     out: Dict[str, Dict[float, float]] = {}
+    std: Dict[str, Dict[float, float]] = {}
     rows = []
     for app in tr.MEMORY_BOUND:
-        ipc = {s: res[(app, _scaled_system(s))] for s in SCALES}
-        out[app] = {s: ipc[s] / ipc[1.0] for s in SCALES}
-        rows.append([app] + [f"{out[app][s]:.3f}" for s in SCALES])
+        per_seed = []
+        for sd in seeds:
+            ipc = {s: res[(app, _scaled_system(s), sd)] for s in SCALES}
+            per_seed.append({s: ipc[s] / ipc[1.0] for s in SCALES})
+        out[app] = {s: C.mean_std([ps[s] for ps in per_seed])[0]
+                    for s in SCALES}
+        std[app] = {s: C.mean_std([ps[s] for ps in per_seed])[1]
+                    for s in SCALES}
+        row = [app] + [f"{out[app][s]:.3f}" for s in SCALES]
+        if len(seeds) > 1:
+            row += [f"{std[app][s]:.3f}" for s in SCALES]
+        rows.append(row)
     g2 = C.geomean([out[a][2.0] for a in tr.MEMORY_BOUND])
     g4 = C.geomean([out[a][4.0] for a in tr.MEMORY_BOUND])
-    rows.append(["geomean", "1.000", f"{g2:.3f}", f"{g4:.3f}"])
-    C.write_csv("fig2_llc_size", ["app", "x1", "x2", "x4"], rows)
+    tail = ["geomean", "1.000", f"{g2:.3f}", f"{g4:.3f}"]
+    header = ["app", "x1", "x2", "x4"]
+    if len(seeds) > 1:
+        tail += [""] * len(SCALES)
+        header += ["x1_std", "x2_std", "x4_std"]
+    rows.append(tail)
+    C.write_csv("fig2_llc_size", header, rows)
 
     C.verdict("fig2.all-apps-gain-4x",
               all(out[a][4.0] >= 1.0 for a in tr.MEMORY_BOUND),
@@ -59,5 +76,12 @@ def run() -> Dict[str, Dict[float, float]]:
 
 
 if __name__ == "__main__":
-    with C.Timer("fig2 LLC size"):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="trace seeds per cell; >1 adds mean±std columns")
+    args = ap.parse_args()
+    if args.seeds:
+        C.set_seeds(args.seeds)
+    with C.Timer(f"fig2 LLC size ({C.SEEDS} seed(s))"):
         run()

@@ -1,0 +1,130 @@
+"""Online governor vs. static mode splits (runtime subsystem figure).
+
+Two claims, mirroring the paper's run-time mode-split decision (§4.1.3)
+made *online* by ``repro.runtime.governor``:
+
+  1. **Stationary traces** — the governor's converged split reaches the
+     offline ``policy.best_split`` IPC (within 5%), without ever running
+     the offline sweep.
+  2. **Phase-shifting traces** (``core/traces.py`` ``phases=`` knob) —
+     the governor adapts across working-set changes and beats every
+     single static split on at least one mix (a static split must
+     compromise across phases; the governor pays switch flushes instead).
+
+Outputs ``benchmarks/out/fig_online.csv`` (one row per run) and
+``benchmarks/out/fig_online_epochs.csv`` (the per-epoch telemetry of the
+phased governor runs, exported through ``runtime.telemetry``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import cache_sim as cs
+from repro.core import policy
+from repro.core import traces as tr
+from repro.runtime import GovernorConfig, TelemetryLog, simulate_online
+from repro.runtime.governor import candidates_for
+
+from . import common as C
+
+SYSTEM = "Morpheus-ALL"
+_STATIONARY = {"quick": ("cfd", "stencil"),
+               "std": ("cfd", "stencil", "p-bfs"),
+               "full": ("cfd", "stencil", "p-bfs")}
+_PHASED = {"quick": (("kmeans", "lib"),),
+           "std": (("kmeans", "lib"), ("cfd", "kmeans")),
+           "full": (("kmeans", "lib"), ("cfd", "kmeans"))}
+
+# The governor walks a fixed COARSE transition ladder in every profile —
+# mode transitions flush state, so a real runtime spaces its rungs wide
+# (4 rungs, not the offline sweep's 10).  The static baselines sweep the
+# *denser* profile grid: the governor has to beat splits it cannot even
+# pin itself to.
+LADDER_GRID = (18, 32, 48, 68)
+
+# Epoch/length choices are dynamics-driven, not throughput-driven: the
+# governor needs epochs long enough that a post-switch cache refills
+# within its warm window, and phases long enough (in epochs) that
+# adaptation cost amortizes — the phased stream length is therefore NOT
+# scaled down in the quick profile.
+_LEN = {"quick": 90_000, "std": 150_000, "full": 240_000}
+_PHASED_LEN = {"quick": 200_000, "std": 200_000, "full": 320_000}
+_EPOCH = {"quick": 3_000, "std": 3_000, "full": 3_000}
+
+
+def run() -> Dict[str, float]:
+    length = _LEN[C.PROFILE]
+    phased_len = _PHASED_LEN[C.PROFILE]
+    epoch = _EPOCH[C.PROFILE]
+    static_grid = LADDER_GRID if C.PROFILE == "quick" else \
+        tuple(sorted(set(C.MORPHEUS_GRID) | set(LADDER_GRID)))
+    rows: List[List] = []
+    out: Dict[str, float] = {}
+
+    # ---- stationary: governor vs. offline best_split
+    ratios = []
+    for app in _STATIONARY[C.PROFILE]:
+        cands = candidates_for(app, SYSTEM, grid=LADDER_GRID, length=length)
+        r = simulate_online(app, SYSTEM, length=length, epoch_len=epoch,
+                            candidates=cands)
+        off = policy.best_split(app, SYSTEM, length=min(length, 120_000))
+        off_ipc = cs.run(app, SYSTEM, n_compute=off.n_compute,
+                         n_cache=off.n_cache,
+                         length=min(length, 120_000)).ipc
+        ratio = r.converged_ipc / off_ipc
+        ratios.append(ratio)
+        out[f"stationary/{app}"] = ratio
+        rows.append(["stationary", app, f"({r.converged_split[0]}"
+                     f"|{r.converged_split[1]})",
+                     f"({off.n_compute}|{off.n_cache})",
+                     f"{r.converged_ipc:.3f}", f"{off_ipc:.3f}",
+                     f"{ratio:.3f}", r.switches])
+    C.verdict("fig_online.stationary-converges",
+              all(x >= 0.95 for x in ratios),
+              f"governor converged IPC / offline best_split IPC = "
+              f"{['%.3f' % x for x in ratios]} (>=0.95 expected) "
+              f"on {list(_STATIONARY[C.PROFILE])}")
+
+    # ---- phase-shifting: governor vs. every static split
+    epoch_log = TelemetryLog()
+    wins = []
+    for phases in _PHASED[C.PROFILE]:
+        primary = next(a for a in phases if tr.WORKLOADS[a].memory_bound)
+        ladder = candidates_for(primary, SYSTEM, grid=LADDER_GRID,
+                                length=phased_len)
+        statics = candidates_for(primary, SYSTEM, grid=static_grid,
+                                 length=phased_len)
+        gov = simulate_online(phases, SYSTEM, length=phased_len,
+                              epoch_len=epoch, candidates=ladder,
+                              log=epoch_log)
+        best_split_, best_ipc = None, 0.0
+        for s in statics:
+            st = simulate_online(phases, SYSTEM, length=phased_len,
+                                 epoch_len=epoch, fixed_split=s)
+            rows.append(["static", "+".join(phases), f"({s[0]}|{s[1]})",
+                         "", f"{st.ipc:.3f}", "", "", 0])
+            if st.ipc > best_ipc:
+                best_split_, best_ipc = s, st.ipc
+        gain = gov.ipc / best_ipc
+        wins.append(gain)
+        out[f"phased/{'+'.join(phases)}"] = gain
+        rows.append(["governor", "+".join(phases), "adaptive",
+                     f"best static ({best_split_[0]}|{best_split_[1]})",
+                     f"{gov.ipc:.3f}", f"{best_ipc:.3f}", f"{gain:.3f}",
+                     gov.switches])
+    C.verdict("fig_online.phased-beats-static", max(wins) > 1.0,
+              f"governor IPC / best static IPC = "
+              f"{['%.3f' % x for x in wins]} on "
+              f"{['+'.join(p) for p in _PHASED[C.PROFILE]]} (>1.0 on at "
+              f"least one expected)")
+
+    C.write_csv("fig_online",
+                ["mode", "trace", "split", "reference", "ipc",
+                 "reference_ipc", "ratio", "switches"], rows)
+    epoch_log.to_csv(C.OUT_DIR / "fig_online_epochs.csv")
+    return out
+
+
+if __name__ == "__main__":
+    with C.Timer("fig_online governor vs static"):
+        run()

@@ -1,13 +1,19 @@
 """End-to-end serving driver — batched requests through the two-tier
 Morpheus page pool (the paper's technique as a serving feature).
 
-Serves two batches of prompts on a reduced assigned-arch model:
-batch 1 cold (every prefix page is a backing fetch), batch 2 warm
-(prefix pages hit the Morpheus tiers).  Verifies the Morpheus tier is
-*transparent*: generated tokens match a pool-less engine exactly.
+Serves batches of prompts on a reduced assigned-arch model: batch 1 cold
+(every prefix page is a backing fetch), later batches warm (prefix pages
+hit the Morpheus tiers).  Verifies the Morpheus tier is *transparent*:
+generated tokens match a pool-less engine exactly.
+
+``--split`` picks the mode split of the page pool: an integer pins the
+cache-chip count statically; ``auto`` hands it to the adaptive runtime
+governor (``repro.runtime.ServingGovernor``), which watches the pool's
+observed request mix between batches and prints its per-epoch decisions.
 
   PYTHONPATH=src python examples/serve_morpheus.py
   PYTHONPATH=src python examples/serve_morpheus.py --arch gemma2-9b --batch 4
+  PYTHONPATH=src python examples/serve_morpheus.py --split auto --rounds 6
 """
 from __future__ import annotations
 
@@ -18,6 +24,7 @@ import jax
 
 from repro import configs
 from repro.models import build_model
+from repro.runtime import ServingGovernor, demo_pool, describe_tick
 from repro.serving import Engine, Request
 
 
@@ -35,6 +42,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--split", default="static",
+                    help="'auto' = adaptive governor; an integer pins the "
+                         "cache-chip count; default keeps the engine's "
+                         "static pool")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="number of serving rounds (default 2, or 6 with "
+                         "--split auto)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).reduced()
@@ -43,10 +57,19 @@ def main():
     print(f"serving {cfg.name} | batch {args.batch} | "
           f"prompt {args.prompt_len} | +{args.max_new} tokens\n")
 
+    pool = governor = None
+    if args.split not in ("static", "auto"):
+        pool = demo_pool(int(args.split))
     eng = Engine(model, params, max_len=args.prompt_len + args.max_new + 8,
-                 morpheus=True)
+                 morpheus=True, pool=pool)
+    if args.split == "auto":
+        governor = ServingGovernor(eng.pool)
+        print(f"governor: candidates {governor.gov.candidates}, starting "
+              f"at {eng.pool.cfg.num_cache_chips} cache chips")
 
-    for tag in ("cold", "warm"):
+    rounds = args.rounds or (6 if governor else 2)
+    for rnd in range(rounds):
+        tag = "cold" if rnd == 0 else f"warm{rnd}"
         reqs = make_requests(args.batch, args.prompt_len, args.max_new)
         t0 = time.time()
         rep = eng.run(reqs)
@@ -56,6 +79,8 @@ def main():
               f"({tput:.1f} tok/s)")
         print(f"       prefix pages reused {rep.pages_reused}, "
               f"fetched from backing {rep.pages_fetched}")
+        if governor is not None:
+            print("       " + describe_tick(governor.tick()))
     s = eng.pool.stats
     print(f"\npool stats: conv hits {s.conv_hits} | ext hits {s.ext_hits} | "
           f"pred-miss {s.ext_pred_miss} | false-pos {s.ext_false_pos} | "

@@ -43,6 +43,14 @@ selected by ``backend`` on every public entry point (and threaded through
 
 ``REPRO_ENGINE_BACKEND`` overrides the default; ``resolve_backend`` turns
 an unsupported selection into a clear error instead of a Pallas traceback.
+
+Resumable state: the per-set scan's full carry — tags, valid/dirty bits,
+LRU counters, byte budgets, Bloom filters, accumulated Stats and stream
+position — is also exposed as an explicit ``EngineState`` pytree
+(``init_state`` / ``advance_packed``), so a trace can be replayed in
+fixed-length epochs with integer Stats bit-identical to one monolithic
+run on either backend.  ``runtime/stream.py`` builds the epoch-streaming
+runtime on top of this.
 """
 from __future__ import annotations
 
@@ -143,25 +151,31 @@ def _dense_layout(set_idx: np.ndarray, n_sets: int, length: int,
 
 
 def pack(cfg: MorpheusConfig,
-         traces: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray, int]]
-         ) -> PackedTraces:
+         traces: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray, int]],
+         pos0: Sequence[int] | None = None) -> PackedTraces:
     """Partition a batch of (addrs, writes, levels, warmup) traces.
 
     Traces may have different lengths and warmups; shorter traces simply
     carry more padding.  The config's address map decides the partition.
+
+    ``pos0`` (per-trace, default all-zero) offsets the recorded request
+    positions: an epoch stream packs each slice with ``pos0 = epoch
+    start`` so the *global* positions — and therefore the ``pos >=
+    warmup`` stats mask — are identical to a monolithic pack.
     """
     amap = cfg.amap
     total = max(amap.total_sets, 1)
     sc, se = amap.conv_sets, amap.ext_sets
     prepped = []
     max_c = max_e = 0
-    for addrs, writes, levels, warmup in traces:
+    for i, (addrs, writes, levels, warmup) in enumerate(traces):
         addrs = np.asarray(addrs, np.uint32)
         writes = np.asarray(writes, bool)
         levels = np.asarray(levels, np.int32)
         gset = (addrs % np.uint32(total)).astype(np.int64)
         tag = (addrs // np.uint32(total)).astype(np.uint32)
-        pos = np.arange(len(addrs), dtype=np.int32)
+        off = int(pos0[i]) if pos0 is not None else 0
+        pos = off + np.arange(len(addrs), dtype=np.int32)
         is_ext = gset >= sc if cfg.ext_enabled else np.zeros(len(addrs), bool)
         if sc:
             cnt = np.bincount(gset[~is_ext], minlength=sc)
@@ -198,13 +212,70 @@ def pack(cfg: MorpheusConfig,
                         ext[0], ext[1], ext[2], ext[3], ext[4], warmups)
 
 
+# ------------------------------------------------------------------ state
+
+class EngineState(NamedTuple):
+    """The packed engine's full carry, as an explicit pytree.
+
+    Everything the per-set scan threads between requests, for a batch of B
+    traces: the conventional tier's tag-store rows, the extended tier's
+    rows + byte budgets + double Bloom filters, the accumulated Stats and
+    the stream position.  ``advance_packed`` consumes and returns this, so
+    a trace can be replayed epoch by epoch (``runtime/stream.py``) with
+    integer Stats bit-identical to one monolithic run.
+    """
+    conv_tags: jnp.ndarray    # (B, Sc, Wc) uint32
+    conv_valid: jnp.ndarray   # (B, Sc, Wc) bool
+    conv_dirty: jnp.ndarray   # (B, Sc, Wc) bool
+    conv_lru: jnp.ndarray     # (B, Sc, Wc) uint32
+    ext_tags: jnp.ndarray     # (B, Se, We) uint32
+    ext_valid: jnp.ndarray    # (B, Se, We) bool
+    ext_dirty: jnp.ndarray    # (B, Se, We) bool
+    ext_lru: jnp.ndarray      # (B, Se, We) uint32
+    ext_size: jnp.ndarray     # (B, Se, We) int32 physical bytes per block
+    ext_used: jnp.ndarray     # (B, Se) int32 bytes in use
+    bf1: jnp.ndarray          # (B, Se, words) uint32
+    bf2: jnp.ndarray          # (B, Se, words) uint32
+    n_mru: jnp.ndarray        # (B, Se) int32
+    stats: Stats              # accumulated, (B,) leaves
+    pos: jnp.ndarray          # (B,) int32 — requests consumed so far
+
+
+def init_state(cfg: MorpheusConfig, batch: int = 1) -> EngineState:
+    """Cold engine state (empty caches, zero stats) for ``batch`` traces."""
+    sc, wc = cfg.amap.conv_sets, cfg.conv_ways
+    se, we = cfg.amap.ext_sets, cfg.ext_max_ways
+    words = ctl.BLOOM_WORDS
+    b = batch
+    stats = jax.tree.map(
+        lambda z: jnp.zeros((b,) + z.shape, z.dtype), ctl._zero_stats())
+    return EngineState(
+        conv_tags=jnp.zeros((b, sc, wc), jnp.uint32),
+        conv_valid=jnp.zeros((b, sc, wc), jnp.bool_),
+        conv_dirty=jnp.zeros((b, sc, wc), jnp.bool_),
+        conv_lru=jnp.zeros((b, sc, wc), jnp.uint32),
+        ext_tags=jnp.zeros((b, se, we), jnp.uint32),
+        ext_valid=jnp.zeros((b, se, we), jnp.bool_),
+        ext_dirty=jnp.zeros((b, se, we), jnp.bool_),
+        ext_lru=jnp.zeros((b, se, we), jnp.uint32),
+        ext_size=jnp.zeros((b, se, we), jnp.int32),
+        ext_used=jnp.zeros((b, se), jnp.int32),
+        bf1=jnp.zeros((b, se, words), jnp.uint32),
+        bf2=jnp.zeros((b, se, words), jnp.uint32),
+        n_mru=jnp.zeros((b, se), jnp.int32),
+        stats=stats,
+        pos=jnp.zeros((b,), jnp.int32),
+    )
+
+
 # ------------------------------------------------------------------ engine
 
-def _conv_trace_stats(cfg: MorpheusConfig, tags, writes, pos, active,
-                      warmup) -> Stats:
-    """All conventional sets of one trace -> summed Stats."""
+def _conv_trace_state(cfg: MorpheusConfig, rows0: ctl.ConvRow, tags, writes,
+                      pos, active, warmup) -> Tuple[ctl.ConvRow, Stats]:
+    """All conventional sets of one trace: initial rows -> (final rows,
+    summed Stats).  ``rows0`` leaves are (Sc, ways)."""
 
-    def one_set(tag_l, w_l, p_l, a_l):
+    def one_set(r0, tag_l, w_l, p_l, a_l):
         def body(carry, x):
             row, acc = carry
             t, w, p, a = x
@@ -216,19 +287,20 @@ def _conv_trace_stats(cfg: MorpheusConfig, tags, writes, pos, active,
                                       ctl._NO_EXT)
             return (row, jax.tree.map(jnp.add, acc, delta)), None
 
-        init = (ctl.conv_row_zero(cfg), ctl._zero_stats())
-        (_, acc), _ = jax.lax.scan(body, init, (tag_l, w_l, p_l, a_l))
-        return acc
+        init = (r0, ctl._zero_stats())
+        (row, acc), _ = jax.lax.scan(body, init, (tag_l, w_l, p_l, a_l))
+        return row, acc
 
-    per_set = jax.vmap(one_set)(tags, writes, pos, active)
-    return jax.tree.map(lambda x: jnp.sum(x, axis=0), per_set)
+    rows, per_set = jax.vmap(one_set)(rows0, tags, writes, pos, active)
+    return rows, jax.tree.map(lambda x: jnp.sum(x, axis=0), per_set)
 
 
-def _ext_trace_stats(cfg: MorpheusConfig, tags, writes, levels, pos, active,
-                     warmup) -> Stats:
-    """All extended sets of one trace -> summed Stats."""
+def _ext_trace_state(cfg: MorpheusConfig, rows0: ctl.ExtRow, tags, writes,
+                     levels, pos, active, warmup) -> Tuple[ctl.ExtRow, Stats]:
+    """All extended sets of one trace: initial rows -> (final rows, summed
+    Stats).  ``rows0`` leaves are (Se, ...)."""
 
-    def one_set(tag_l, w_l, l_l, p_l, a_l):
+    def one_set(r0, tag_l, w_l, l_l, p_l, a_l):
         def body(carry, x):
             row, acc = carry
             t, w, l, p, a = x
@@ -240,12 +312,20 @@ def _ext_trace_stats(cfg: MorpheusConfig, tags, writes, levels, pos, active,
                                       m, out)
             return (row, jax.tree.map(jnp.add, acc, delta)), None
 
-        init = (ctl.ext_row_zero(cfg), ctl._zero_stats())
-        (_, acc), _ = jax.lax.scan(body, init, (tag_l, w_l, l_l, p_l, a_l))
-        return acc
+        init = (r0, ctl._zero_stats())
+        (row, acc), _ = jax.lax.scan(body, init, (tag_l, w_l, l_l, p_l, a_l))
+        return row, acc
 
-    per_set = jax.vmap(one_set)(tags, writes, levels, pos, active)
-    return jax.tree.map(lambda x: jnp.sum(x, axis=0), per_set)
+    rows, per_set = jax.vmap(one_set)(rows0, tags, writes, levels, pos,
+                                      active)
+    return rows, jax.tree.map(lambda x: jnp.sum(x, axis=0), per_set)
+
+
+def _rows_zero(cfg: MorpheusConfig, zero_fn, n_sets: int):
+    """Stack a per-set zero row into (n_sets, ...) leaves."""
+    row = zero_fn(cfg)
+    return jax.tree.map(
+        lambda x: jnp.zeros((n_sets,) + x.shape, x.dtype), row)
 
 
 @partial(jax.jit, static_argnums=(0, 2))
@@ -259,16 +339,84 @@ def _run_packed(cfg: MorpheusConfig, pt: PackedTraces,
     total = jax.tree.map(
         lambda z: jnp.zeros((b,) + z.shape, z.dtype), ctl._zero_stats())
     if pt.conv_tag.shape[1] and pt.conv_tag.shape[2]:
-        conv = jax.vmap(partial(_conv_trace_stats, cfg))(
-            pt.conv_tag, pt.conv_write, pt.conv_pos, pt.conv_active,
+        rows0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (b,) + x.shape),
+            _rows_zero(cfg, ctl.conv_row_zero, pt.conv_tag.shape[1]))
+        _, conv = jax.vmap(partial(_conv_trace_state, cfg))(
+            rows0, pt.conv_tag, pt.conv_write, pt.conv_pos, pt.conv_active,
             pt.warmup)
         total = jax.tree.map(jnp.add, total, conv)
     if pt.ext_tag.shape[1] and pt.ext_tag.shape[2]:
-        ext = jax.vmap(partial(_ext_trace_stats, cfg))(
-            pt.ext_tag, pt.ext_write, pt.ext_level, pt.ext_pos,
+        rows0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (b,) + x.shape),
+            _rows_zero(cfg, ctl.ext_row_zero, pt.ext_tag.shape[1]))
+        _, ext = jax.vmap(partial(_ext_trace_state, cfg))(
+            rows0, pt.ext_tag, pt.ext_write, pt.ext_level, pt.ext_pos,
             pt.ext_active, pt.warmup)
         total = jax.tree.map(jnp.add, total, ext)
     return total
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def _run_packed_state(cfg: MorpheusConfig, pt: PackedTraces,
+                      state: EngineState, backend: str = "jnp"
+                      ) -> Tuple[EngineState, Stats]:
+    """Stateful batched engine: one epoch of packed requests applied to an
+    explicit carry.  Returns (new state, this epoch's Stats delta)."""
+    b = pt.warmup.shape[0]
+    delta = jax.tree.map(
+        lambda z: jnp.zeros((b,) + z.shape, z.dtype), ctl._zero_stats())
+    if backend == "pallas":
+        from ..kernels import engine_scan
+        state, delta = engine_scan.run_packed_state(cfg, pt, state)
+    else:
+        if pt.conv_tag.shape[1] and pt.conv_tag.shape[2]:
+            rows0 = ctl.ConvRow(state.conv_tags, state.conv_valid,
+                                state.conv_dirty, state.conv_lru)
+            rows, conv = jax.vmap(partial(_conv_trace_state, cfg))(
+                rows0, pt.conv_tag, pt.conv_write, pt.conv_pos,
+                pt.conv_active, pt.warmup)
+            delta = jax.tree.map(jnp.add, delta, conv)
+            state = state._replace(conv_tags=rows.tags,
+                                   conv_valid=rows.valid,
+                                   conv_dirty=rows.dirty,
+                                   conv_lru=rows.lru)
+        if pt.ext_tag.shape[1] and pt.ext_tag.shape[2]:
+            rows0 = ctl.ExtRow(state.ext_tags, state.ext_valid,
+                               state.ext_dirty, state.ext_lru,
+                               state.ext_size, state.ext_used,
+                               state.bf1, state.bf2, state.n_mru)
+            rows, ext = jax.vmap(partial(_ext_trace_state, cfg))(
+                rows0, pt.ext_tag, pt.ext_write, pt.ext_level, pt.ext_pos,
+                pt.ext_active, pt.warmup)
+            delta = jax.tree.map(jnp.add, delta, ext)
+            state = state._replace(ext_tags=rows.tags, ext_valid=rows.valid,
+                                   ext_dirty=rows.dirty, ext_lru=rows.lru,
+                                   ext_size=rows.size, ext_used=rows.used,
+                                   bf1=rows.bf1, bf2=rows.bf2,
+                                   n_mru=rows.n_mru)
+    n_req = jnp.zeros((b,), jnp.int32)
+    if pt.conv_active.shape[1] and pt.conv_active.shape[2]:
+        n_req = n_req + pt.conv_active.sum(axis=(1, 2)).astype(jnp.int32)
+    if pt.ext_active.shape[1] and pt.ext_active.shape[2]:
+        n_req = n_req + pt.ext_active.sum(axis=(1, 2)).astype(jnp.int32)
+    state = state._replace(
+        stats=jax.tree.map(jnp.add, state.stats, delta),
+        pos=state.pos + n_req)
+    return state, delta
+
+
+def advance_packed(cfg: MorpheusConfig, pt: PackedTraces, state: EngineState,
+                   backend: str | None = None
+                   ) -> Tuple[EngineState, Stats]:
+    """Apply one packed epoch to an ``EngineState``.
+
+    The packed slice must continue exactly where ``state`` left off (pack
+    with ``pos0 = state.pos``): requests are replayed in in-set order, so
+    integer Stats accumulated over any epoch partition are bit-identical
+    to a single monolithic ``simulate_batch`` of the concatenated trace.
+    """
+    return _run_packed_state(cfg, pt, state, resolve_backend(backend))
 
 
 def simulate_batch(cfg: MorpheusConfig,

@@ -132,13 +132,23 @@ def _core_stream(w: Workload, n: int, core: int, n_cores: int,
 
 
 def generate(app: str, *, n_cores: int, length: int = 200_000,
-             seed: int = 0, ws_scale: float = 1.0
+             seed: int = 0, ws_scale: float = 1.0,
+             phases: Tuple[str, ...] | None = None
              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Return (addrs u32, writes bool, levels i32) — round-robin interleave
     of ``n_cores`` per-core streams, ``length`` total accesses.
 
     ``ws_scale`` scales the working set (used with the simulator's scaled
-    memory system so cache behaviour is preserved at lower cost)."""
+    memory system so cache behaviour is preserved at lower cost).
+
+    ``phases`` composes a *phase-shifting* trace: the named workloads are
+    concatenated back to back in equal shares of ``length`` (``app`` is
+    ignored), each phase keeping its own working set, write mix and
+    compressibility — the input the online mode-split governor is built
+    for (``runtime/governor.py``)."""
+    if phases:
+        return generate_phased(phases, n_cores=n_cores, length=length,
+                               seed=seed, ws_scale=ws_scale)
     w = WORKLOADS[app]
     if ws_scale != 1.0:
         w = Workload(**{**w.__dict__,
@@ -158,6 +168,45 @@ def generate(app: str, *, n_cores: int, length: int = 200_000,
                       np.where(u < w.p_high + w.p_low, LOW, UNCOMP)
                       ).astype(np.int32)
     return addrs, writes, levels
+
+
+def phase_bounds(n_phases: int, length: int) -> np.ndarray:
+    """End positions (exclusive) of each of ``n_phases`` equal shares of a
+    ``length``-request phased trace; the last phase absorbs the remainder.
+    ``searchsorted(bounds, pos, 'right')`` maps a position to its phase."""
+    edges = (np.arange(1, n_phases + 1) * length) // max(n_phases, 1)
+    edges[-1] = length
+    return edges
+
+
+def generate_phased(apps: Tuple[str, ...], *, n_cores: int,
+                    length: int = 200_000, seed: int = 0,
+                    ws_scale: float = 1.0
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Concatenate per-app segments into one phase-shifting trace.
+
+    Each phase is generated independently (its own working set and
+    pattern; phase ``i`` uses ``seed + i`` so repeated apps don't replay
+    byte-identical segments) and the segments are concatenated in order —
+    the LLC sees an abrupt working-set change at every boundary, which is
+    what the online governor must detect and adapt to."""
+    apps = tuple(apps)
+    assert apps, "phased trace needs at least one app"
+    bounds = phase_bounds(len(apps), length)
+    a_parts, w_parts, l_parts = [], [], []
+    lo = 0
+    for i, app in enumerate(apps):
+        n = int(bounds[i]) - lo
+        lo = int(bounds[i])
+        if n <= 0:
+            continue
+        a, w, l = generate(app, n_cores=n_cores, length=n, seed=seed + i,
+                           ws_scale=ws_scale)
+        a_parts.append(a)
+        w_parts.append(w)
+        l_parts.append(l)
+    return (np.concatenate(a_parts), np.concatenate(w_parts),
+            np.concatenate(l_parts))
 
 
 def instructions_for(app: str, n_accesses: int) -> float:

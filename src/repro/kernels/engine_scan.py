@@ -235,6 +235,182 @@ def ext_scan(cfg: MorpheusConfig, tag, write, level, active, mask,
     return call(tag, write, level, active, mask)
 
 
+# ------------------------------------------------------- stateful kernels
+#
+# The epoch-streaming runtime (core/engine.advance_packed, runtime/stream)
+# needs the same scan with an explicit carry: initial state rows arrive as
+# kernel inputs, final rows leave as outputs.  The rows are small (ways /
+# Bloom words), so they ride in the fori_loop carry directly — no scratch.
+# The transition kernels are still controller.conv_set_kernel /
+# ext_set_kernel, so integer Stats remain bit-identical to the monolithic
+# kernels above and to the serial oracle.
+
+def _conv_state_kernel(cfg: MorpheusConfig, tag_ref, write_ref, active_ref,
+                       mask_ref, tags0_ref, valid0_ref, dirty0_ref, lru0_ref,
+                       ints_ref, flts_ref, tags1_ref, valid1_ref, dirty1_ref,
+                       lru1_ref):
+    """One conventional set's epoch slice: carry state in -> state out."""
+    tag = tag_ref[0, 0, :]
+    write = write_ref[0, 0, :]
+    active = active_ref[0, 0, :]
+    mask = mask_ref[0, 0, :]
+    row0 = ctl.ConvRow(tags0_ref[0, 0, :], valid0_ref[0, 0, :] != 0,
+                       dirty0_ref[0, 0, :] != 0, lru0_ref[0, 0, :])
+
+    def body(t, carry):
+        row, ints, flts = carry
+        tg = jax.lax.dynamic_index_in_dim(tag, t, keepdims=False)
+        wr = jax.lax.dynamic_index_in_dim(write, t, keepdims=False) != 0
+        a = jax.lax.dynamic_index_in_dim(active, t, keepdims=False) != 0
+        m = jax.lax.dynamic_index_in_dim(mask, t, keepdims=False) != 0
+        new_row, out = ctl.conv_set_kernel(cfg, row, tg, wr)
+        row = jax.tree.map(lambda nn, oo: jnp.where(a, nn, oo), new_row, row)
+        delta = ctl.request_stats(cfg, m, out, np.bool_(False), ctl._NO_EXT)
+        iv, fv = _delta_vecs(delta)
+        return row, ints + iv, flts + fv
+
+    row, ints, flts = jax.lax.fori_loop(
+        0, tag.shape[0], body,
+        (row0, jnp.zeros((_NI,), jnp.int32), jnp.zeros((_NF,), jnp.float32)))
+    ints_ref[0, 0, :] = ints
+    flts_ref[0, 0, :] = flts
+    tags1_ref[0, 0, :] = row.tags
+    valid1_ref[0, 0, :] = row.valid.astype(jnp.int32)
+    dirty1_ref[0, 0, :] = row.dirty.astype(jnp.int32)
+    lru1_ref[0, 0, :] = row.lru
+
+
+def _ext_state_kernel(cfg: MorpheusConfig, tag_ref, write_ref, level_ref,
+                      active_ref, mask_ref, tags0_ref, valid0_ref, dirty0_ref,
+                      lru0_ref, size0_ref, bf1_0_ref, bf2_0_ref, sca0_ref,
+                      ints_ref, flts_ref, tags1_ref, valid1_ref, dirty1_ref,
+                      lru1_ref, size1_ref, bf1_1_ref, bf2_1_ref, sca1_ref):
+    """One extended set's epoch slice with explicit carry.  The two scalar
+    state words (byte budget ``used``, Bloom MRU count ``n_mru``) travel as
+    a (1, 1, 2) int32 vector."""
+    tag = tag_ref[0, 0, :]
+    write = write_ref[0, 0, :]
+    level = level_ref[0, 0, :]
+    active = active_ref[0, 0, :]
+    mask = mask_ref[0, 0, :]
+    row0 = ctl.ExtRow(tags0_ref[0, 0, :], valid0_ref[0, 0, :] != 0,
+                      dirty0_ref[0, 0, :] != 0, lru0_ref[0, 0, :],
+                      size0_ref[0, 0, :], sca0_ref[0, 0, 0],
+                      bf1_0_ref[0, 0, :], bf2_0_ref[0, 0, :],
+                      sca0_ref[0, 0, 1])
+
+    def body(t, carry):
+        row, ints, flts = carry
+        tg = jax.lax.dynamic_index_in_dim(tag, t, keepdims=False)
+        wr = jax.lax.dynamic_index_in_dim(write, t, keepdims=False) != 0
+        lv = jax.lax.dynamic_index_in_dim(level, t, keepdims=False)
+        a = jax.lax.dynamic_index_in_dim(active, t, keepdims=False) != 0
+        m = jax.lax.dynamic_index_in_dim(mask, t, keepdims=False) != 0
+        new_row, out = ctl.ext_set_kernel(cfg, row, tg, wr, lv)
+        row = jax.tree.map(lambda nn, oo: jnp.where(a, nn, oo), new_row, row)
+        delta = ctl.request_stats(cfg, np.bool_(False), ctl._NO_CONV, m, out)
+        iv, fv = _delta_vecs(delta)
+        return row, ints + iv, flts + fv
+
+    row, ints, flts = jax.lax.fori_loop(
+        0, tag.shape[0], body,
+        (row0, jnp.zeros((_NI,), jnp.int32), jnp.zeros((_NF,), jnp.float32)))
+    ints_ref[0, 0, :] = ints
+    flts_ref[0, 0, :] = flts
+    tags1_ref[0, 0, :] = row.tags
+    valid1_ref[0, 0, :] = row.valid.astype(jnp.int32)
+    dirty1_ref[0, 0, :] = row.dirty.astype(jnp.int32)
+    lru1_ref[0, 0, :] = row.lru
+    size1_ref[0, 0, :] = row.size
+    bf1_1_ref[0, 0, :] = row.bf1
+    bf2_1_ref[0, 0, :] = row.bf2
+    sca1_ref[0, 0, :] = jnp.stack([row.used, row.n_mru])
+
+
+def _state_call(kernel, b: int, s: int, length: int,
+                in_widths, out_widths, interpret: bool):
+    """pallas_call plumbing for the stateful kernels: grid (B, S); every
+    input/output is one (1, 1, w) block per instance."""
+    def spec(w):
+        return pl.BlockSpec((1, 1, w), lambda i, j: (i, j, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, s),
+        in_specs=[spec(w) for w in in_widths],
+        out_specs=[spec(w) for w, _ in out_widths],
+        out_shape=[jax.ShapeDtypeStruct((b, s, w), dt)
+                   for w, dt in out_widths],
+        interpret=interpret,
+    )
+
+
+def run_packed_state(cfg: MorpheusConfig, pt, state, *,
+                     interpret: bool | None = None):
+    """Stateful Pallas twin of ``core.engine._run_packed_state``'s jnp
+    path: (PackedTraces, EngineState) -> (EngineState', Stats delta).
+
+    Stats accumulation into ``state.stats`` and the ``pos`` advance are
+    left to the caller (``core.engine._run_packed_state``), which shares
+    that logic across backends."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = pt.warmup.shape[0]
+    ints = jnp.zeros((b, _NI), jnp.int32)
+    flts = jnp.zeros((b, _NF), jnp.float32)
+    warm = pt.warmup[:, None, None]
+    if pt.conv_tag.shape[1] and pt.conv_tag.shape[2]:
+        _, s, length = pt.conv_tag.shape
+        w = cfg.conv_ways
+        mask = (pt.conv_active & (pt.conv_pos >= warm)).astype(jnp.int32)
+        call = _state_call(
+            functools.partial(_conv_state_kernel, cfg), b, s, length,
+            in_widths=[length] * 4 + [w] * 4,
+            out_widths=[(_NI, jnp.int32), (_NF, jnp.float32),
+                        (w, jnp.uint32), (w, jnp.int32), (w, jnp.int32),
+                        (w, jnp.uint32)],
+            interpret=interpret)
+        iv, fv, t1, v1, d1, l1 = call(
+            jnp.asarray(pt.conv_tag, jnp.uint32),
+            jnp.asarray(pt.conv_write, jnp.int32),
+            jnp.asarray(pt.conv_active, jnp.int32), mask,
+            state.conv_tags, state.conv_valid.astype(jnp.int32),
+            state.conv_dirty.astype(jnp.int32), state.conv_lru)
+        ints = ints + iv.sum(axis=1)
+        flts = flts + fv.sum(axis=1)
+        state = state._replace(conv_tags=t1, conv_valid=v1 != 0,
+                               conv_dirty=d1 != 0, conv_lru=l1)
+    if pt.ext_tag.shape[1] and pt.ext_tag.shape[2]:
+        _, s, length = pt.ext_tag.shape
+        w = cfg.ext_max_ways
+        words = ctl.BLOOM_WORDS
+        mask = (pt.ext_active & (pt.ext_pos >= warm)).astype(jnp.int32)
+        sca0 = jnp.stack([state.ext_used, state.n_mru], axis=-1)
+        call = _state_call(
+            functools.partial(_ext_state_kernel, cfg), b, s, length,
+            in_widths=[length] * 5 + [w] * 5 + [words] * 2 + [2],
+            out_widths=[(_NI, jnp.int32), (_NF, jnp.float32),
+                        (w, jnp.uint32), (w, jnp.int32), (w, jnp.int32),
+                        (w, jnp.uint32), (w, jnp.int32),
+                        (words, jnp.uint32), (words, jnp.uint32),
+                        (2, jnp.int32)],
+            interpret=interpret)
+        (iv, fv, t1, v1, d1, l1, s1, b1, b2, sca1) = call(
+            jnp.asarray(pt.ext_tag, jnp.uint32),
+            jnp.asarray(pt.ext_write, jnp.int32),
+            jnp.asarray(pt.ext_level, jnp.int32),
+            jnp.asarray(pt.ext_active, jnp.int32), mask,
+            state.ext_tags, state.ext_valid.astype(jnp.int32),
+            state.ext_dirty.astype(jnp.int32), state.ext_lru,
+            state.ext_size, state.bf1, state.bf2, sca0)
+        ints = ints + iv.sum(axis=1)
+        flts = flts + fv.sum(axis=1)
+        state = state._replace(ext_tags=t1, ext_valid=v1 != 0,
+                               ext_dirty=d1 != 0, ext_lru=l1, ext_size=s1,
+                               bf1=b1, bf2=b2, ext_used=sca1[..., 0],
+                               n_mru=sca1[..., 1])
+    return state, _vecs_to_stats(ints, flts)
+
+
 def run_packed(cfg: MorpheusConfig, pt, *, interpret: bool | None = None
                ) -> Stats:
     """Pallas twin of ``core.engine._run_packed``: PackedTraces -> Stats

@@ -5,7 +5,13 @@ page pool on a reduced config (CPU-friendly); pod mode lowers the sharded
 one-token `serve_step` for the production mesh (decode shapes), which is
 the same artifact the multi-pod dry-run validates.
 
+``--split`` chooses the page pool's mode split: an integer pins the
+cache-chip count; ``auto`` attaches the adaptive runtime governor
+(``repro.runtime.ServingGovernor``), which adjusts the split between
+rounds from the pool's observed request mix and reports each decision.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --batch 4
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --split auto
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v2-lite-16b \
       --mesh multipod --shape decode_32k --dry-run
 """
@@ -23,6 +29,12 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--no-morpheus", action="store_true",
                     help="disable the extended cache tier")
+    ap.add_argument("--split", default="static",
+                    help="'auto' = adaptive mode-split governor; an "
+                         "integer pins the cache-chip count")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="serving rounds (default 2, or 6 with "
+                         "--split auto)")
     ap.add_argument("--mesh", choices=("host", "pod", "multipod"),
                     default="host")
     ap.add_argument("--shape", default="decode_32k")
@@ -53,14 +65,29 @@ def main() -> None:
     from repro.models import build_model
     from repro.serving import Engine, Request
 
+    if args.no_morpheus and args.split != "static":
+        ap.error("--split pins/adapts the extended tier; it conflicts "
+                 "with --no-morpheus")
+
     cfg = configs.get(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    pool = governor = None
+    if args.split not in ("static", "auto"):
+        from repro.runtime import demo_pool
+        pool = demo_pool(int(args.split))
     eng = Engine(model, params,
                  max_len=args.prompt_len + args.max_new + 8,
-                 morpheus=not args.no_morpheus)
+                 morpheus=not args.no_morpheus, pool=pool)
+    if args.split == "auto":
+        from repro.runtime import ServingGovernor
+        governor = ServingGovernor(eng.pool)
+        print(f"governor: candidates {governor.gov.candidates}, starting "
+              f"at {eng.pool.cfg.num_cache_chips} cache chips")
     prompt = [(5 * j + 11) % 89 + 1 for j in range(args.prompt_len)]
-    for round_ in ("cold", "warm"):
+    rounds = args.rounds or (6 if governor else 2)
+    for rnd in range(rounds):
+        round_ = "cold" if rnd == 0 else f"warm{rnd}"
         reqs = [Request(rid=i, prompt=prompt, max_new_tokens=args.max_new)
                 for i in range(args.batch)]
         t0 = time.time()
@@ -69,6 +96,9 @@ def main() -> None:
         print(f"[{round_}] {rep.generated} tokens in {dt:.2f}s "
               f"({rep.generated / dt:.1f} tok/s) | prefix pages reused "
               f"{rep.pages_reused}, backing fetches {rep.pages_fetched}")
+        if governor is not None:
+            from repro.runtime import describe_tick
+            print("  " + describe_tick(governor.tick()))
     s = eng.pool.stats
     print(f"pool: conv {s.conv_hits} hits | ext {s.ext_hits} hits | "
           f"pred-miss {s.ext_pred_miss} | false-pos {s.ext_false_pos}")

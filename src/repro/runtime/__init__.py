@@ -1,0 +1,22 @@
+"""Online Morpheus runtime — the layer between the batch simulator and the
+serving stack.
+
+The batch engine (``core/engine.py``) answers "what would this whole trace
+do under this fixed mode split?".  This package answers the *runtime*
+question the paper's Morpheus software stack faces: how many cores should
+be in cache mode for the work arriving *right now*?
+
+  * ``stream``    — epoch-by-epoch resumable replay over an explicit
+    ``EngineState`` carry, plus the warm-state handoff used when the mode
+    split changes (mode transitions flush departing slices, §4.1.3).
+  * ``governor``  — the adaptive mode-split governor: hill-climb /
+    epsilon-greedy search over the offline policy's candidate splits,
+    with hysteresis and phase-shift detection.
+  * ``telemetry`` — per-epoch ring-buffer log with JSON/CSV export,
+    consumed by ``tools/bench_runtime.py`` and ``benchmarks/fig_online``.
+"""
+from .governor import (Governor, GovernorConfig, OnlineResult,  # noqa: F401
+                       ServingGovernor, candidates_for, demo_pool,
+                       describe_tick, simulate_online)
+from .stream import EpochStream, HandoffReport, handoff  # noqa: F401
+from .telemetry import EpochRecord, TelemetryLog  # noqa: F401

@@ -1,0 +1,539 @@
+"""Adaptive mode-split governor (the paper's run-time decision, online).
+
+The paper's Morpheus software stack decides per kernel launch how many
+cores enter cache mode; the offline analogue in this repo is
+``policy.best_split`` (a full sweep per app).  The governor makes that
+decision *online*: it observes per-epoch telemetry from the epoch-
+streaming engine (``runtime.stream``) or the serving page pool and walks
+the same candidate list the offline policy sweeps
+(``policy.grid_points``), using
+
+  * **hill-climbing** — it only ever moves to a neighbouring split in the
+    candidate list (mode transitions are expensive: departing slices are
+    flushed);
+  * **epsilon-greedy exploration** — with decaying probability it visits
+    a neighbour it knows least about, so a stationary workload converges
+    while estimates keep refreshing;
+  * **hysteresis** — a minimum dwell (epochs) at a split before moving
+    again, plus a minimum relative gain to accept a move;
+  * **phase-shift detection** — if the observed reward of the *current*
+    split suddenly deviates from its estimate (CABA-style phase
+    behaviour), all estimates are stale: they are cleared and the
+    exploration rate resets.
+
+``simulate_online`` drives the whole loop against the trace simulator:
+epoch replay via ``EngineState`` carries, warm-state handoff on split
+changes, per-epoch ``EpochRecord`` telemetry, and an aggregate modeled
+IPC comparable with the offline policy's.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..core import cache_sim as cs
+from ..core import engine
+from ..core import policy
+from ..core import traces as tr
+from ..core.compression import BLOCK_BYTES
+from ..core.controller import Stats
+from . import stream as rt_stream
+from .telemetry import EpochRecord, TelemetryLog
+
+Split = Tuple[int, int]      # (n_compute, n_cache)
+
+
+@dataclass(frozen=True)
+class GovernorConfig:
+    hysteresis: int = 2          # min epochs at a split before moving again
+    min_gain: float = 0.03       # relative reward gain required to move
+    epsilon: float = 0.25        # initial exploration probability
+    epsilon_decay: float = 0.95  # per-decision decay
+    epsilon_min: float = 0.08
+    # When the bottleneck hint points at a neighbour whose estimate is
+    # stale (not visited for hint_stale_after epochs) or unknown, explore
+    # it with probability epsilon_hint instead: headroom is likely and the
+    # cost of checking is one short visit.  Once measured, greedy logic
+    # decides.  A hinted visit that measures NO better than where it came
+    # from is a *strike* against that direction; after hint_max_strikes
+    # the boost is suppressed until a phase reset — the hint is a
+    # heuristic and the measurements outrank it.
+    epsilon_hint: float = 0.9
+    hint_stale_after: int = 12
+    hint_max_strikes: int = 2
+    # Reward estimates update asymmetrically: a higher reward is adopted
+    # immediately (cache warm-up approaches steady state from below, so
+    # the recent maximum is the best steady-state predictor), a lower one
+    # only blends in slowly (transient dips should not demote a split —
+    # genuine regime changes are caught by the phase detector instead).
+    ema_up: float = 1.0
+    ema_down: float = 0.25
+    warm_epochs: int = 2         # post-switch epochs excluded from estimates
+    phase_threshold: float = 0.3   # relative surprise that flags a phase shift
+    # A phase can be invisible in the reward (fully-cached epochs all
+    # saturate at the compute ceiling) but not in the telemetry: a jump in
+    # the observable signature (hit rate) at the SAME split flags a phase
+    # shift even when the reward doesn't move.
+    signature_threshold: float = 0.15
+    seed: int = 0
+
+
+class Governor:
+    """Epsilon-greedy hill-climber over an ordered candidate list.
+
+    Candidates can be anything hashable and *ordered by aggressiveness*
+    (here: mode splits sorted by compute-core count); neighbourhood is
+    adjacency in the list.  Drive it with ``observe(reward)`` after each
+    epoch run at ``current``, then ``decide()`` for the next epoch's
+    candidate.
+    """
+
+    def __init__(self, candidates: Sequence, cfg: GovernorConfig
+                 = GovernorConfig(), *, initial: Optional[int] = None):
+        assert candidates, "governor needs at least one candidate"
+        self.candidates = list(candidates)
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self._i = len(self.candidates) // 2 if initial is None else initial
+        self.est: Dict[int, float] = {}
+        self.sig: Dict[int, float] = {}          # candidate -> last signature
+        self.last_visit: Dict[int, int] = {}
+        self.eps = cfg.epsilon
+        self.dwell = 0
+        # the initial epochs fill a cold cache exactly like a post-switch
+        # transient: exclude them from the first split's estimate too
+        self.warm_left = cfg.warm_epochs
+        self.measured = False    # has this visit recorded a real epoch yet?
+        self.hint = 0
+        self.hint_strikes: Dict[int, int] = {}   # direction -> refutations
+        self._probe: Optional[Tuple[int, float]] = None  # (dir, origin est)
+        self.epoch = 0
+        self.switches = 0
+        self.phase_shifts = 0
+        self.last_switched = False
+
+    @property
+    def current(self):
+        return self.candidates[self._i]
+
+    # ------------------------------------------------------------ observe
+    def observe(self, reward: float, hint: int = 0,
+                signature: Optional[float] = None) -> None:
+        """Record the reward of one epoch run at ``current``.
+
+        ``hint`` is the observed bottleneck direction (+1: the epoch was
+        compute-bound, more compute cores can help; -1: it was memory/
+        capacity-bound, more cache can help; 0: unknown).  It biases only
+        *exploration* — moves still require measured reward gains — and is
+        what lets the governor escape fully-cached plateaus where the
+        reward saturates at the compute ceiling for every workload.
+
+        ``signature`` is an observable phase fingerprint in [0, 1]
+        (drivers pass the epoch hit rate): a jump vs. the last signature
+        seen *at the same split* flags a phase shift even when the reward
+        itself is saturated and doesn't move."""
+        self.epoch += 1
+        self.last_visit[self._i] = self.epoch
+        self.hint = int(np.sign(hint))
+        if self.warm_left > 0:       # post-transition epoch: state re-warming
+            self.warm_left -= 1
+            return
+        self.measured = True
+        if self._probe is not None:  # first measurement of a hinted visit
+            d, origin = self._probe
+            self._probe = None
+            if origin is not None and \
+                    reward - origin <= self.cfg.min_gain * abs(origin):
+                self.hint_strikes[d] = self.hint_strikes.get(d, 0) + 1
+            else:
+                self.hint_strikes[d] = 0
+        prev = self.est.get(self._i)
+        shifted = False
+        if prev is not None and abs(prev) > 1e-12:
+            surprise = abs(reward - prev) / abs(prev)
+            shifted = surprise > self.cfg.phase_threshold
+        if signature is not None and not shifted:
+            prev_sig = self.sig.get(self._i)
+            shifted = prev_sig is not None and \
+                abs(signature - prev_sig) > self.cfg.signature_threshold
+        if shifted:
+            # the workload moved under us: every estimate is stale
+            self.est = {}
+            self.sig = {}
+            self.hint_strikes = {}
+            self.eps = self.cfg.epsilon
+            self.phase_shifts += 1
+            prev = None
+        if signature is not None:
+            self.sig[self._i] = signature
+        if prev is None:
+            self.est[self._i] = reward
+        else:
+            a = self.cfg.ema_up if reward >= prev else self.cfg.ema_down
+            self.est[self._i] = (1.0 - a) * prev + a * reward
+
+    # ------------------------------------------------------------- decide
+    def _neighbors(self) -> List[int]:
+        return [j for j in (self._i - 1, self._i + 1)
+                if 0 <= j < len(self.candidates)]
+
+    def decide(self):
+        """Choose the split for the next epoch (may equal ``current``)."""
+        self.last_switched = False
+        self.dwell += 1
+        # never move before this visit has recorded at least one measured
+        # (post-warm-up) epoch — otherwise a visit teaches nothing
+        if len(self.candidates) == 1 or not self.measured \
+                or self.dwell < self.cfg.hysteresis \
+                or self._i not in self.est:
+            return self.current
+        nbrs = self._neighbors()
+        target = None
+        probe = None
+        hinted = self._i + self.hint
+        hint_ok = bool(self.hint) and hinted in nbrs and \
+            self.hint_strikes.get(self.hint, 0) < self.cfg.hint_max_strikes \
+            and (hinted not in self.est    # nothing known (e.g. post-reset)
+                 or self.epoch - self.last_visit.get(hinted, -10**9)
+                 > self.cfg.hint_stale_after)
+        eps = max(self.eps, self.cfg.epsilon_hint) if hint_ok else self.eps
+        if self.rng.random() < eps:
+            # With a bottleneck hint, only ever explore in the hinted
+            # direction (an against-the-hint dip at a converged optimum is
+            # pure loss; at the ladder's edge, skip exploring entirely).
+            # Without a hint, refresh the longest-unvisited neighbour.
+            if self.hint:
+                # a struck-out direction is not probed at all — the
+                # measurements have repeatedly refuted the hint
+                if hinted in nbrs and self.hint_strikes.get(
+                        self.hint, 0) < self.cfg.hint_max_strikes:
+                    target = hinted
+                    probe = (self.hint, self.est.get(self._i))
+            else:
+                target = min(nbrs,
+                             key=lambda j: (self.last_visit.get(j, -1),
+                                            self.rng.random()))
+        else:
+            known = [j for j in nbrs if j in self.est]
+            if known:
+                best = max(known, key=lambda j: self.est[j])
+                cur = self.est[self._i]
+                # sign-safe relative margin (rewards may be negative,
+                # e.g. -latency in the serving governor)
+                if self.est[best] - cur > self.cfg.min_gain * abs(cur):
+                    target = best
+        self.eps = max(self.cfg.epsilon_min, self.eps * self.cfg.epsilon_decay)
+        if target is not None and target != self._i:
+            self._i = target
+            self.dwell = 0
+            self.warm_left = self.cfg.warm_epochs
+            self.measured = False
+            self._probe = probe
+            self.switches += 1
+            self.last_switched = True
+        return self.current
+
+
+# -------------------------------------------------------- serving driver
+
+class ServingGovernor:
+    """Drives a serving page pool's cache-chip count from its observed
+    request mix (the paper's mode-split decision at the serving tier).
+
+    One *epoch* is whatever interval the caller chooses (a batch, a time
+    slice); per tick it reads the pool's ``PoolStats`` delta, optimises
+
+        reward = -(modeled ns per lookup  +  chip_cost_ns * chips)
+
+    (the second term is the opportunity cost of holding chips in cache
+    mode instead of compute), and applies the decision via
+    ``pool.reconfigure`` — a mode transition that flushes the resident
+    pages, exactly like the simulator's split change flushes slices.
+    """
+
+    def __init__(self, pool, chip_candidates: Sequence[int]
+                 = (0, 1, 2, 4, 6, 8), *, chip_cost_ns: float = 15.0,
+                 gcfg: GovernorConfig = GovernorConfig()):
+        cands = sorted(set(int(c) for c in chip_candidates)
+                       | {pool.cfg.num_cache_chips})
+        self.pool = pool
+        self.chip_cost_ns = float(chip_cost_ns)
+        self.gov = Governor(cands, gcfg,
+                            initial=cands.index(pool.cfg.num_cache_chips))
+        self._last = pool.stats
+        self.epoch = 0
+        self.history: List[Dict] = []
+
+    def tick(self) -> Dict:
+        """Consume the interval since the last tick; maybe reconfigure.
+        Returns a record of the observation and the decision."""
+        chips = self.pool.cfg.num_cache_chips
+        delta = self.pool.stats - self._last
+        self._last = self.pool.stats
+        tel = self.pool.telemetry()
+        lookups = max(delta.lookups, 1)
+        ns_per = delta.time_ns / lookups
+        reward = -(ns_per + self.chip_cost_ns * chips)
+        # bottleneck hint, in chip direction (+1 = provision more chips):
+        # a saturated extended tier (or no tier at all) with misses means
+        # capacity starvation; an underused tier wastes compute chips.
+        ext_occ = tel["ext_occupancy"]
+        hit = delta.conv_hits + delta.ext_hits
+        if (chips == 0 or ext_occ > 0.85) and hit < 0.95 * delta.lookups:
+            hint = +1
+        elif chips > 0 and ext_occ < 0.30:
+            hint = -1
+        else:
+            hint = 0
+        self.gov.observe(reward, hint, signature=hit / lookups)
+        new_chips = self.gov.decide()
+        flushed = 0
+        if new_chips != chips:
+            flushed = self.pool.reconfigure(new_chips)
+        rec = {"epoch": self.epoch, "chips": chips, "lookups": int(
+            delta.lookups), "ns_per_lookup": ns_per,
+            "hit_rate_interval": hit / lookups, "ext_occupancy": ext_occ,
+            "pred_accuracy": tel["pred_accuracy"], "reward": reward,
+            "hint": hint, "new_chips": new_chips,
+            "switched": new_chips != chips, "flushed_pages": flushed,
+            "epsilon": self.gov.eps}
+        self.history.append(rec)
+        self.epoch += 1
+        return rec
+
+
+DEMO_POOL_KW = dict(conv_sets=64, ext_sets_per_chip=32, ways=4)
+
+
+def demo_pool(num_cache_chips: int):
+    """The reduced page pool the serving demos pin a split on (shared by
+    ``launch/serve.py`` and ``examples/serve_morpheus.py``)."""
+    from ..serving.paged_kv import MorpheusPagePool, PoolConfig
+    return MorpheusPagePool(PoolConfig(num_cache_chips=num_cache_chips,
+                                       **DEMO_POOL_KW))
+
+
+def describe_tick(rec: Dict) -> str:
+    """One-line human rendering of a ``ServingGovernor.tick`` record."""
+    s = (f"governor epoch {rec['epoch']}: chips {rec['chips']} -> "
+         f"{rec['new_chips']} | {rec['ns_per_lookup']:.0f} ns/lookup | "
+         f"hit {rec['hit_rate_interval']:.2f} | hint {rec['hint']:+d}")
+    if rec["switched"]:
+        s += f" | flushed {rec['flushed_pages']} pages"
+    return s
+
+
+# ------------------------------------------------------------ sim driver
+
+def candidates_for(app: str, system: str, *,
+                   grid: Sequence[int] = policy.DEFAULT_GRID,
+                   length: int = 60_000) -> List[Split]:
+    """The governor's candidate splits = the offline policy's sweep grid
+    for (app, system), plus the all-compute point (so compute-bound
+    phases have somewhere to go), ordered by compute-core count."""
+    pts = policy.grid_points(app, system, grid=grid, length=length)
+    splits = [(p.n_compute, p.n_cache) for p in pts]
+    if cs.SYSTEMS[system].morpheus and (cs.TOTAL_CORES, 0) not in splits:
+        splits.append((cs.TOTAL_CORES, 0))
+    return sorted(set(splits))
+
+
+@dataclass
+class OnlineResult:
+    """Outcome of one online (governed or fixed-split) run."""
+    system: str
+    phases: List[str]
+    records: List[EpochRecord]
+    log: TelemetryLog
+    stats: Stats                  # totals over all epochs (numpy leaves)
+    ipc: float                    # time-weighted, all epochs
+    steady_ipc: float             # time-weighted, post burn-in epochs
+    converged_ipc: float          # post burn-in epochs at converged_split
+    exec_time_s: float
+    switches: int
+    final_split: Split            # governor's choice when the run ended
+    converged_split: Split        # most-dwelt split post burn-in
+
+    def summary(self) -> Dict:
+        return {"system": self.system, "phases": self.phases,
+                "epochs": len(self.records), "ipc": self.ipc,
+                "steady_ipc": self.steady_ipc,
+                "converged_ipc": self.converged_ipc,
+                "switches": self.switches,
+                "converged_split": self.converged_split,
+                "final_split": self.final_split}
+
+
+def _epoch_telemetry(cfg, state, delta: Stats) -> Tuple[float, float, float]:
+    """(ext occupancy, predictor accuracy, BDI bytes saved) of an epoch."""
+    occupancy = saved = 0.0
+    if cfg.ext_enabled:
+        used = np.asarray(state.ext_used[0])
+        valid = np.asarray(state.ext_valid[0])
+        budget = cfg.ext_budget_bytes * max(cfg.amap.ext_sets, 1)
+        occupancy = float(used.sum()) / max(budget, 1)
+        saved = float(int(valid.sum()) * BLOCK_BYTES - used.sum())
+    h = float(np.asarray(delta.ext_hits))
+    fp = float(np.asarray(delta.ext_false_pos))
+    pm = float(np.asarray(delta.ext_pred_miss))
+    acc = (h + pm) / max(h + fp + pm, 1.0)
+    return occupancy, acc, saved
+
+
+def simulate_online(phases: Sequence[str] | str, system: str, *,
+                    length: int = 60_000, epoch_len: int = 3_000,
+                    seed: int = 0, backend: str | None = None,
+                    gcfg: GovernorConfig = GovernorConfig(),
+                    candidates: Optional[Sequence[Split]] = None,
+                    fixed_split: Optional[Split] = None,
+                    warm_handoff: bool = True,
+                    burn_in: Optional[int] = None,
+                    log: Optional[TelemetryLog] = None) -> OnlineResult:
+    """Run the online Morpheus runtime against the trace simulator.
+
+    ``phases`` is one app or a sequence of apps replayed back to back
+    (equal shares of ``length``); each phase keeps its own working set,
+    so phase boundaries shift the request mix under the governor.  One
+    trace is generated per candidate compute-core count (the request
+    interleaving depends on how many cores compute) and the stream reads
+    the current split's trace — exactly the feedback a real mode switch
+    has on the LLC stream.
+
+    ``fixed_split`` disables the governor (static-baseline mode).
+    Aggregate IPC is time-weighted over epochs; ``steady_ipc`` skips the
+    first ``burn_in`` epochs (default: one working-set fill).
+    """
+    phases = [phases] if isinstance(phases, str) else list(phases)
+    spec = cs.SYSTEMS[system]
+    primary = next((a for a in phases if tr.WORKLOADS[a].memory_bound),
+                   phases[0])
+    if fixed_split is not None:
+        cands: List[Split] = [tuple(fixed_split)]        # type: ignore
+        gcfg = replace(gcfg, epsilon=0.0, epsilon_min=0.0)
+    elif candidates is not None:
+        cands = sorted(set(tuple(c) for c in candidates))  # type: ignore
+    else:
+        cands = candidates_for(primary, system, length=length)
+    gov = Governor(cands, gcfg)
+
+    # one trace per candidate compute-core count, phase-concatenated
+    ws_scale = 1.0 / cs.SIM_SCALE
+    trace_of = {}
+    for nc in sorted({c[0] for c in cands}):
+        trace_of[nc] = tr.generate_phased(phases, n_cores=nc, length=length,
+                                          seed=seed, ws_scale=ws_scale)
+    bounds = tr.phase_bounds(len(phases), length)
+
+    log = log if log is not None else TelemetryLog()
+    records: List[EpochRecord] = []
+    nc, nk = gov.current
+    cfg = cs.build_config(spec, nk)
+    state = engine.init_state(cfg, 1)
+    total_stats = None
+    pending_flush = None     # last transition's flush cost -> next epoch
+    pos = 0
+    epoch_i = 0
+    t_all = 0.0
+    insts_all = 0.0
+    t_steady = 0.0
+    insts_steady = 0.0
+    if burn_in is None:
+        ws_blocks = tr.WORKLOADS[primary].working_set_bytes \
+            // cs.SIM_SCALE // tr.BLOCK_BYTES
+        burn_in = max(1, int(np.ceil(ws_blocks / epoch_len)))
+
+    while pos < length:
+        nc, nk = gov.current
+        cfg = cs.build_config(spec, nk)
+        addrs, writes, levels = trace_of[nc]
+        hi = min(pos + epoch_len, length)
+        pt = engine.pack(cfg, [(addrs[pos:hi], writes[pos:hi],
+                                levels[pos:hi], 0)], pos0=[pos])
+        state, delta_b = engine.advance_packed(cfg, pt, state, backend)
+        delta = jax.tree.map(lambda x: np.asarray(x[0]), delta_b)
+        if pending_flush is not None:
+            # the previous transition's flush writebacks are real traffic:
+            # charge them to this epoch so the reward, exec time and the
+            # aggregate IPC all pay for the switch (handoff also charges
+            # them on the carried state.stats)
+            delta = jax.tree.map(np.add, delta, pending_flush)
+            pending_flush = None
+        total_stats = delta if total_stats is None else \
+            jax.tree.map(np.add, total_stats, delta)
+        n_req = hi - pos
+        app = phases[int(np.searchsorted(bounds, pos, side="right"))]
+        rr = cs._finalize(cs.RunPoint(app, system, nc, nk, n_req, seed),
+                          nc, nk, n_req, delta)
+        reward = rr.ipc
+        insts = tr.instructions_for(app, n_req)
+        t_all += rr.exec_time_s
+        insts_all += insts
+        if epoch_i >= burn_in:
+            t_steady += rr.exec_time_s
+            insts_steady += insts
+
+        occ, acc, saved = _epoch_telemetry(cfg, state, delta)
+        # bottleneck direction: the runtime sees which term binds (stall
+        # counters in a real system; the roofline terms here).  Compute-
+        # bound => more compute cores can help (+1); a full extended tier
+        # on a memory-bound epoch => more cache capacity can help (-1).
+        t_comp = insts / (nc * cs.IPC_PER_CORE * cs.FREQ_GHZ * 1e9)
+        if t_comp >= 0.99 * rr.exec_time_s:
+            hint = +1
+        elif occ > 0.9:
+            hint = -1
+        else:
+            hint = 0
+        gov.observe(reward, hint, signature=rr.llc_hit_rate)
+        eps = gov.eps
+        new_split = gov.decide() if fixed_split is None else gov.current
+        flush_wbs = 0
+        if new_split != (nc, nk):
+            new_cfg = cs.build_config(spec, new_split[1])
+            if new_cfg != cfg:
+                state, rep = rt_stream.handoff(cfg, state, new_cfg,
+                                               migrate=warm_handoff)
+                flush_wbs = rep.flush_writebacks
+                if flush_wbs:
+                    e_dram = (tr.BLOCK_BYTES
+                              * cfg.costs.dram.energy_pJ_per_B * 1e-3)
+                    z = jax.tree.map(
+                        lambda x: np.zeros((), np.asarray(x).dtype), delta)
+                    pending_flush = z._replace(
+                        writebacks=np.int32(flush_wbs),
+                        dram_bytes=np.float32(flush_wbs * tr.BLOCK_BYTES),
+                        energy_nJ=np.float32(flush_wbs * e_dram))
+        rec = EpochRecord(
+            epoch=epoch_i, pos=pos, app=app, n_compute=nc, n_cache=nk,
+            requests=n_req,
+            hit_rate=rr.llc_hit_rate, ext_occupancy=occ, pred_accuracy=acc,
+            bytes_saved=saved, ipc=rr.ipc, exec_time_s=rr.exec_time_s,
+            reward=reward, switched=gov.last_switched,
+            flush_writebacks=flush_wbs, epsilon=eps)
+        records.append(rec)
+        log.append(rec)
+        pos = hi
+        epoch_i += 1
+
+    freq = cs.FREQ_GHZ * 1e9
+    ipc = insts_all / (t_all * freq) if t_all > 0 else 0.0
+    steady = insts_steady / (t_steady * freq) if t_steady > 0 else ipc
+    post = records[burn_in:] or records
+    dwelt = Counter((r.n_compute, r.n_cache) for r in post)
+    converged_split = max(dwelt, key=lambda s: dwelt[s])
+    conv_recs = [r for r in post
+                 if (r.n_compute, r.n_cache) == converged_split]
+    t_conv = sum(r.exec_time_s for r in conv_recs)
+    insts_conv = sum(tr.instructions_for(r.app, r.requests)
+                     for r in conv_recs)
+    converged = insts_conv / (t_conv * freq) if t_conv > 0 else steady
+    return OnlineResult(
+        system=system, phases=phases, records=records, log=log,
+        stats=total_stats, ipc=ipc, steady_ipc=steady,
+        converged_ipc=converged, exec_time_s=t_all,
+        switches=gov.switches, final_split=gov.current,
+        converged_split=converged_split)

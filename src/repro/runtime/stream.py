@@ -1,0 +1,289 @@
+"""Epoch-streaming resumable engine path.
+
+``EpochStream`` replays one trace through the set-parallel engine in
+fixed-length epochs, carrying the full simulator state between epochs as
+an explicit ``core.engine.EngineState`` pytree.  Because the packed scan
+applies the same ``controller`` transition kernels in the same in-set
+order regardless of where the trace is cut, the accumulated **integer
+Stats are bit-identical to one monolithic run** on both engine backends
+(property-tested in tests/test_runtime.py).
+
+The second half of this module is the *mode-transition* machinery the
+adaptive governor needs: ``handoff`` migrates an ``EngineState`` from one
+mode split's config to another.  Resident blocks are extracted (their
+full addresses are recoverable from tag + set), re-routed under the new
+address map, and re-inserted most-recent-first until ways/byte budgets
+fill; everything that does not survive is flushed, with dirty blocks
+accounted as writebacks (the paper's §4.1.3 transition cost).  The
+extended tier's BF1 filters are rebuilt from the surviving resident tags,
+preserving the predictor's no-false-negative invariant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bloom as bloomlib
+from ..core import controller as ctl
+from ..core import engine
+from ..core.compression import BLOCK_BYTES
+from ..core.controller import MorpheusConfig, Stats
+from ..core.engine import EngineState
+from ..core.tag_store import LRU_MAX_INT
+
+
+class EpochStream:
+    """Resumable epoch-by-epoch replay of one trace under one config."""
+
+    def __init__(self, cfg: MorpheusConfig, addrs, writes, levels, *,
+                 warmup: int = 0, epoch_len: int = 4096,
+                 backend: str | None = None,
+                 state: Optional[EngineState] = None):
+        assert epoch_len > 0
+        self.cfg = cfg
+        self.addrs = np.asarray(addrs, np.uint32)
+        self.writes = np.asarray(writes, bool)
+        self.levels = np.asarray(levels, np.int32)
+        self.warmup = int(warmup)
+        self.epoch_len = int(epoch_len)
+        self.backend = engine.resolve_backend(backend)
+        self.state = state if state is not None else engine.init_state(cfg, 1)
+        # ``state.pos`` counts every request the state ever consumed —
+        # possibly across earlier traces (warm handoff).  The stream's
+        # position within *this* trace is measured from the baseline.
+        self._base = int(self.state.pos[0])
+        self.epoch = 0
+
+    @property
+    def pos(self) -> int:
+        return int(self.state.pos[0]) - self._base
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= len(self.addrs)
+
+    @property
+    def stats(self) -> Stats:
+        """Accumulated Stats so far (scalar leaves)."""
+        return jax.tree.map(lambda x: x[0], self.state.stats)
+
+    def step(self) -> Stats:
+        """Advance one epoch; returns this epoch's Stats delta."""
+        lo = self.pos
+        assert lo < len(self.addrs), "stream exhausted"
+        hi = min(lo + self.epoch_len, len(self.addrs))
+        pt = engine.pack(self.cfg,
+                         [(self.addrs[lo:hi], self.writes[lo:hi],
+                           self.levels[lo:hi], self.warmup)], pos0=[lo])
+        self.state, delta = engine.advance_packed(self.cfg, pt, self.state,
+                                                  self.backend)
+        self.epoch += 1
+        return jax.tree.map(lambda x: x[0], delta)
+
+    def run(self) -> Stats:
+        """Drain the remaining epochs; returns the accumulated Stats."""
+        while not self.done:
+            self.step()
+        return self.stats
+
+    # --------------------------------------------------- snapshot/restore
+    def snapshot(self) -> EngineState:
+        """Host-materialized copy of the full carry (numpy leaves)."""
+        return jax.tree.map(np.asarray, self.state)
+
+    def restore(self, state: EngineState) -> None:
+        """Resume from a previously captured snapshot."""
+        self.state = jax.tree.map(jnp.asarray, state)
+
+
+def save_state(path: str | Path, state: EngineState) -> Path:
+    """Serialize an ``EngineState`` to ``.npz`` (leaves in pytree order)."""
+    path = Path(path)
+    leaves = jax.tree_util.tree_leaves(state)
+    np.savez(path, **{f"leaf{i}": np.asarray(x)
+                      for i, x in enumerate(leaves)})
+    return path
+
+
+def load_state(path: str | Path, cfg: MorpheusConfig,
+               batch: int = 1) -> EngineState:
+    """Load a state saved by ``save_state``; the treedef comes from
+    ``engine.init_state(cfg, batch)`` so cfg must match the saved run."""
+    with np.load(Path(path)) as z:
+        leaves = [z[f"leaf{i}"] for i in range(len(z.files))]
+    treedef = jax.tree_util.tree_structure(engine.init_state(cfg, batch))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ------------------------------------------------------- mode transitions
+
+@dataclass(frozen=True)
+class HandoffReport:
+    """What a mode transition did to the resident working set."""
+    resident_before: int
+    migrated: int            # blocks surviving into the new state
+    dropped: int             # blocks flushed (region moved / no room)
+    flush_writebacks: int    # of those, dirty blocks written back
+    flushed_bytes: int       # writeback DRAM traffic in bytes
+
+
+def extract_blocks(cfg: MorpheusConfig, state: EngineState,
+                   trace: int = 0) -> Dict[str, np.ndarray]:
+    """Recover the resident block population of one trace's state.
+
+    Block addresses are fully recoverable: ``addr = tag * total_sets +
+    global_set``.  Returns parallel arrays addr/dirty/recency/size
+    (recency = the per-set LRU counter — comparable only as a heuristic
+    across sets, exact within a set)."""
+    st = jax.tree.map(np.asarray, state)
+    total = max(cfg.amap.total_sets, 1)
+    out_addr, out_dirty, out_rec, out_size = [], [], [], []
+
+    s_idx, w_idx = np.nonzero(st.conv_valid[trace])
+    tags = st.conv_tags[trace][s_idx, w_idx].astype(np.uint64)
+    out_addr.append(tags * total + s_idx.astype(np.uint64))
+    out_dirty.append(st.conv_dirty[trace][s_idx, w_idx])
+    out_rec.append(st.conv_lru[trace][s_idx, w_idx].astype(np.int64))
+    out_size.append(np.full(len(s_idx), BLOCK_BYTES, np.int32))
+
+    if cfg.ext_enabled:
+        s_idx, w_idx = np.nonzero(st.ext_valid[trace])
+        tags = st.ext_tags[trace][s_idx, w_idx].astype(np.uint64)
+        gset = (cfg.amap.conv_sets + s_idx).astype(np.uint64)
+        out_addr.append(tags * total + gset)
+        out_dirty.append(st.ext_dirty[trace][s_idx, w_idx])
+        out_rec.append(st.ext_lru[trace][s_idx, w_idx].astype(np.int64))
+        out_size.append(st.ext_size[trace][s_idx, w_idx])
+
+    return {
+        "addr": np.concatenate(out_addr) if out_addr else
+        np.zeros(0, np.uint64),
+        "dirty": np.concatenate(out_dirty) if out_dirty else
+        np.zeros(0, bool),
+        "recency": np.concatenate(out_rec) if out_rec else
+        np.zeros(0, np.int64),
+        "size": np.concatenate(out_size) if out_size else
+        np.zeros(0, np.int32),
+    }
+
+
+def _rebuild_bf1(tags: np.ndarray, sets: np.ndarray, n_sets: int,
+                 words: int) -> np.ndarray:
+    """BF1 filters containing exactly the given (set, tag) residents —
+    invariant (1) (no false negatives) holds by construction."""
+    bf1 = np.zeros((n_sets, words), np.uint32)
+    if len(tags) == 0:
+        return bf1
+    bits = np.asarray(bloomlib._hash_bits(jnp.asarray(tags, jnp.uint32),
+                                          words * 32))          # (N, k)
+    word_idx = bits // 32
+    masks = (np.uint32(1) << (bits % 32).astype(np.uint32))
+    rows = np.repeat(sets, bits.shape[1])
+    np.bitwise_or.at(bf1, (rows, word_idx.ravel()), masks.ravel())
+    return bf1
+
+
+def handoff(old_cfg: MorpheusConfig, state: EngineState,
+            new_cfg: MorpheusConfig, *, migrate: bool = True
+            ) -> Tuple[EngineState, HandoffReport]:
+    """Mode transition: carry an ``EngineState`` across a split change.
+
+    The new split implies a new static address separation, so every
+    resident block is re-routed under ``new_cfg``'s map and re-inserted
+    most-recent-first until the target set's ways (and, extended tier,
+    byte budget) fill.  Blocks that do not survive are flushed; dirty
+    ones are charged as writebacks + DRAM bytes + DRAM energy on the
+    carried Stats — the paper's transition cost.  ``migrate=False``
+    models a flush-everything transition (cold restart).
+
+    Accumulated Stats and the stream position always carry over.
+    """
+    b = state.pos.shape[0]
+    new = engine.init_state(new_cfg, b)
+    host = jax.tree.map(lambda x: np.array(x), new)   # writable copies
+    amap = new_cfg.amap
+    total = max(amap.total_sets, 1)
+    words = ctl.BLOOM_WORDS
+    resident = migrated = dropped = 0
+    wbs_t = np.zeros(b, np.int32)
+
+    for t in range(b):
+        blocks = extract_blocks(old_cfg, state, t)
+        n = len(blocks["addr"])
+        resident += n
+        if n == 0:
+            continue
+        if not migrate:
+            dropped += n
+            wbs_t[t] += int(blocks["dirty"].sum())
+            continue
+        # most-recent first; tie-break on address for determinism
+        order = np.lexsort((blocks["addr"], -blocks["recency"]))
+        addr = blocks["addr"][order]
+        dirty = blocks["dirty"][order]
+        size = blocks["size"][order]
+        if not new_cfg.compression:
+            size = np.full_like(size, BLOCK_BYTES)
+        gset = (addr % total).astype(np.int64)
+        tag = (addr // total).astype(np.uint32)
+        is_ext = new_cfg.ext_enabled & (gset >= amap.conv_sets)
+
+        kept = np.zeros(n, bool)
+        fill: Dict[Tuple[int, int], int] = {}   # (tier, set) -> ways used
+        used = np.zeros(max(amap.ext_sets, 1), np.int64)
+        budget = new_cfg.ext_budget_bytes
+        for i in range(n):
+            if is_ext[i]:
+                s = int(gset[i] - amap.conv_sets)
+                k = fill.get((1, s), 0)
+                if k >= new_cfg.ext_max_ways or used[s] + size[i] > budget:
+                    continue
+                host.ext_tags[t, s, k] = tag[i]
+                host.ext_valid[t, s, k] = True
+                host.ext_dirty[t, s, k] = dirty[i]
+                host.ext_lru[t, s, k] = LRU_MAX_INT - k
+                host.ext_size[t, s, k] = size[i]
+                used[s] += int(size[i])
+                fill[(1, s)] = k + 1
+                kept[i] = True
+            else:
+                s = int(gset[i])
+                k = fill.get((0, s), 0)
+                if s >= amap.conv_sets or k >= new_cfg.conv_ways:
+                    continue
+                host.conv_tags[t, s, k] = tag[i]
+                host.conv_valid[t, s, k] = True
+                host.conv_dirty[t, s, k] = dirty[i]
+                host.conv_lru[t, s, k] = LRU_MAX_INT - k
+                fill[(0, s)] = k + 1
+                kept[i] = True
+        if amap.ext_sets:
+            host.ext_used[t] = used[:amap.ext_sets].astype(np.int32)
+            e = kept & is_ext
+            host.bf1[t] = _rebuild_bf1(
+                tag[e], (gset[e] - amap.conv_sets).astype(np.int64),
+                amap.ext_sets, words)
+        migrated += int(kept.sum())
+        dropped += int((~kept).sum())
+        wbs_t[t] += int(dirty[~kept].sum())
+
+    wbs = int(wbs_t.sum())
+    flushed_bytes = wbs * BLOCK_BYTES
+    # charge the flush on the carried stats (writeback DRAM traffic)
+    e_dram = BLOCK_BYTES * old_cfg.costs.dram.energy_pJ_per_B * 1e-3
+    stats = jax.tree.map(lambda x: np.array(x), state.stats)
+    stats = stats._replace(
+        writebacks=stats.writebacks + wbs_t,
+        dram_bytes=(stats.dram_bytes
+                    + (wbs_t * BLOCK_BYTES).astype(np.float32)),
+        energy_nJ=stats.energy_nJ + (wbs_t * e_dram).astype(np.float32))
+    new = EngineState(*[jnp.asarray(x) for x in host[:-2]],
+                      stats=jax.tree.map(jnp.asarray, stats),
+                      pos=jnp.asarray(np.asarray(state.pos)))
+    return new, HandoffReport(resident, migrated, dropped, wbs,
+                              flushed_bytes)

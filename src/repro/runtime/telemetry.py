@@ -1,0 +1,128 @@
+"""Per-epoch runtime telemetry: ring-buffer log + JSON/CSV export.
+
+One ``EpochRecord`` is appended per epoch by the streaming drivers
+(``runtime.governor.simulate_online``, the serving governor hook).  The
+log is a fixed-capacity ring buffer — a long-running server keeps the
+most recent ``capacity`` epochs — with loss-free export for the benchmark
+harness (``benchmarks/fig_online``) and ``tools/bench_runtime.py``.
+
+Schema (one row per epoch, documented in docs/runtime.md):
+
+  epoch        monotone epoch index
+  pos          trace/request position at epoch start
+  app          workload (phase) label observed this epoch
+  n_compute    cores in compute mode during the epoch
+  n_cache      cores (chips) in cache mode during the epoch
+  requests     LLC/pool requests served this epoch
+  hit_rate     (conv_hits + ext_hits) / lookups
+  ext_occupancy   mean extended-tier byte occupancy / budget (0..1)
+  pred_accuracy   (ext_hits + ext_pred_miss) / ext accesses
+  bytes_saved  BDI bytes saved by resident compressed blocks
+  ipc          modeled IPC of the epoch (simulator runtime)
+  exec_time_s  modeled execution time of the epoch
+  reward       scalar the governor optimised this epoch
+  switched     True iff the governor changed the split AFTER this epoch
+  flush_writebacks  dirty blocks flushed by that reconfiguration
+  epsilon      governor exploration rate when the epoch was decided
+"""
+from __future__ import annotations
+
+import csv
+import json
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+@dataclass
+class EpochRecord:
+    epoch: int
+    pos: int
+    app: str
+    n_compute: int
+    n_cache: int
+    requests: int
+    hit_rate: float
+    ext_occupancy: float
+    pred_accuracy: float
+    bytes_saved: float
+    ipc: float
+    exec_time_s: float
+    reward: float
+    switched: bool = False
+    flush_writebacks: int = 0
+    epsilon: float = 0.0
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+
+FIELDS = list(EpochRecord.__dataclass_fields__)
+
+
+class TelemetryLog:
+    """Fixed-capacity ring buffer of ``EpochRecord``s (oldest dropped)."""
+
+    def __init__(self, capacity: int = 4096):
+        assert capacity > 0
+        self.capacity = capacity
+        self._buf: List[Optional[EpochRecord]] = [None] * capacity
+        self._next = 0          # next write slot
+        self._count = 0         # records currently held (<= capacity)
+        self.total = 0          # records ever appended
+
+    def append(self, rec: EpochRecord) -> None:
+        self._buf[self._next] = rec
+        self._next = (self._next + 1) % self.capacity
+        self._count = min(self._count + 1, self.capacity)
+        self.total += 1
+
+    def __len__(self) -> int:
+        return self._count
+
+    def records(self) -> List[EpochRecord]:
+        """Held records, oldest first."""
+        if self._count < self.capacity:
+            return [r for r in self._buf[:self._count]]
+        head = self._next
+        return self._buf[head:] + self._buf[:head]  # type: ignore
+
+    def tail(self, n: int) -> List[EpochRecord]:
+        return self.records()[-n:]
+
+    # ------------------------------------------------------------- export
+    def to_json(self, path: str | Path | None = None) -> str:
+        payload = json.dumps([r.to_dict() for r in self.records()], indent=1)
+        if path is not None:
+            Path(path).write_text(payload)
+        return payload
+
+    def to_csv(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with path.open("w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(FIELDS)
+            for r in self.records():
+                d = r.to_dict()
+                w.writerow([d[k] for k in FIELDS])
+        return path
+
+    # ------------------------------------------------------------ summary
+    def summary(self) -> Dict:
+        recs = self.records()
+        if not recs:
+            return {"epochs": 0}
+        switches = sum(r.switched for r in recs)
+        t = sum(r.exec_time_s for r in recs)
+        insts = sum(r.ipc * r.exec_time_s for r in recs)  # ipc-weighted
+        return {
+            "epochs": len(recs),
+            "requests": sum(r.requests for r in recs),
+            "switches": switches,
+            "mean_hit_rate": sum(r.hit_rate for r in recs) / len(recs),
+            "mean_ipc": sum(r.ipc for r in recs) / len(recs),
+            "time_weighted_ipc": insts / t if t > 0 else 0.0,
+            "flush_writebacks": sum(r.flush_writebacks for r in recs),
+            "final_split": (recs[-1].n_compute, recs[-1].n_cache),
+        }

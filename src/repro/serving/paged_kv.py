@@ -19,7 +19,7 @@ compiled step consumes.  Page payloads live in dense pools; BDI compression
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -67,6 +67,15 @@ class PoolStats(NamedTuple):
 
     def __add__(self, o: "PoolStats") -> "PoolStats":
         return PoolStats(*[a + b for a, b in zip(self, o)])
+
+    def __sub__(self, o: "PoolStats") -> "PoolStats":
+        """Interval delta (epoch telemetry = stats_now - stats_then)."""
+        return PoolStats(*[a - b for a, b in zip(self, o)])
+
+    @property
+    def lookups(self) -> int:
+        return (self.conv_hits + self.conv_misses + self.ext_hits
+                + self.ext_false_pos + self.ext_pred_miss)
 
 
 class GatherPlan(NamedTuple):
@@ -296,6 +305,53 @@ class MorpheusPagePool:
         total = (s.conv_hits + s.conv_misses + s.ext_hits + s.ext_false_pos
                  + s.ext_pred_miss)
         return (s.conv_hits + s.ext_hits) / max(total, 1)
+
+    def occupancy(self) -> Tuple[float, float]:
+        """(conventional, extended) fraction of valid page slots."""
+        conv = float(np.asarray(self.conv_valid).mean())
+        ext = (float(np.asarray(self.ext_valid).mean())
+               if self.cfg.num_cache_chips else 0.0)
+        return conv, ext
+
+    def telemetry(self) -> Dict[str, float]:
+        """Observable request-mix snapshot for the runtime governor."""
+        s = self.stats
+        conv_occ, ext_occ = self.occupancy()
+        ext_total = s.ext_hits + s.ext_false_pos + s.ext_pred_miss
+        return {
+            "lookups": float(s.lookups),
+            "hit_rate": self.hit_rate(),
+            "conv_occupancy": conv_occ,
+            "ext_occupancy": ext_occ,
+            "pred_accuracy": (s.ext_hits + s.ext_pred_miss)
+            / max(ext_total, 1),
+            "time_ns_per_lookup": s.time_ns / max(s.lookups, 1),
+            "num_cache_chips": float(self.cfg.num_cache_chips),
+        }
+
+    # ------------------------------------------------------ mode transition
+    def reconfigure(self, num_cache_chips: int) -> int:
+        """Mode transition: re-provision the pool for a new cache-chip
+        count.  The static address separation is recomputed, so every
+        resident page is flushed (pages are clean — re-fetchable from the
+        backing store / recomputable — so unlike the simulator's
+        ``runtime.stream.handoff`` there is no writeback traffic to
+        charge).  Cumulative stats survive.  Returns the number of
+        resident pages dropped."""
+        if num_cache_chips == self.cfg.num_cache_chips:
+            return 0
+        flushed = int(np.asarray(self.conv_valid).sum())
+        if self.cfg.num_cache_chips:
+            flushed += int(np.asarray(self.ext_valid).sum())
+        stats = self.stats
+        self.__init__(replace_cfg(self.cfg, num_cache_chips))
+        self.stats = stats
+        return flushed
+
+
+def replace_cfg(cfg: PoolConfig, num_cache_chips: int) -> PoolConfig:
+    """A PoolConfig with a different cache-chip count (frozen dataclass)."""
+    return replace(cfg, num_cache_chips=num_cache_chips)
 
 
 def _first_per_set(req_set: np.ndarray) -> np.ndarray:

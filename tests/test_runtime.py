@@ -1,0 +1,398 @@
+"""Online runtime tests: epoch streaming, mode-transition handoff,
+governor, telemetry.
+
+The headline property (ISSUE 3 acceptance): replaying a trace in
+fixed-length epochs through an explicit ``EngineState`` carry yields
+integer Stats **bit-identical** to one monolithic ``simulate_parallel``
+dispatch — for any epoch length, on both engine backends, across the
+predictor × compression grid.
+"""
+import itertools
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import address_separation as asep
+from repro.core import bloom as bloomlib
+from repro.core import cache_sim as cs
+from repro.core import controller as ctl
+from repro.core import engine
+from repro.core import traces as tr
+from repro.runtime import (EpochStream, Governor, GovernorConfig,
+                           TelemetryLog, handoff, simulate_online)
+from repro.runtime.stream import extract_blocks, load_state, save_state
+from repro.runtime.telemetry import EpochRecord
+
+
+def _cfg(conv_sets=8, chips=2, sets_per_chip=4, **kw):
+    amap = asep.make_map(conv_sets=conv_sets, num_cache_chips=chips,
+                         sets_per_chip=sets_per_chip)
+    return ctl.MorpheusConfig(amap=amap, conv_ways=4, ext_ways=4, **kw)
+
+
+def _trace(n=2500, span=2048, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, span, size=n).astype(np.uint32),
+            rng.random(n) < 0.3,
+            rng.integers(0, 3, size=n).astype(np.int32))
+
+
+def _case_seed(*parts) -> int:
+    return zlib.crc32("/".join(map(str, parts)).encode()) % 1000
+
+
+def _assert_int_identical(a: ctl.Stats, b: ctl.Stats, ctx=""):
+    for f in ctl.Stats._fields:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        if f in ctl._INT_FIELDS:
+            assert x == y, f"{ctx} {f}: {x} vs {y}"
+        else:
+            tol = 1e-3 * max(abs(float(x)), 1.0)
+            assert abs(float(x) - float(y)) <= tol, f"{ctx} {f}: {x} vs {y}"
+
+
+# --------------------------------------------------- epoch bit-identity
+
+@pytest.mark.parametrize("pred,comp", list(itertools.product(
+    list(ctl.Predictor), [False, True])))
+def test_epoch_stream_bit_identical_to_monolithic(pred, comp):
+    """Acceptance: epoch-streamed replay == monolithic run on every
+    integer counter, across the predictor × compression grid (jnp)."""
+    cfg = _cfg(predictor=pred, compression=comp)
+    addrs, writes, levels = _trace(seed=_case_seed(pred.value, comp))
+    warmup = 311
+    mono = engine.simulate_parallel(cfg, addrs, writes, levels, warmup)
+    stream = EpochStream(cfg, addrs, writes, levels, warmup=warmup,
+                         epoch_len=400, backend="jnp")
+    _assert_int_identical(mono, stream.run(),
+                          f"{pred.value}/comp={comp}")
+    assert stream.pos == len(addrs)
+
+
+@pytest.mark.parametrize("epoch_len", [1_000, 317, 2_500, 7_000])
+def test_epoch_stream_any_epoch_length(epoch_len):
+    """Any epoch partition (including one covering the whole trace, and
+    one that doesn't divide it) reproduces the monolithic integers."""
+    cfg = _cfg(predictor=ctl.Predictor.BLOOM, compression=True)
+    addrs, writes, levels = _trace(seed=9)
+    mono = engine.simulate_parallel(cfg, addrs, writes, levels, 100)
+    stream = EpochStream(cfg, addrs, writes, levels, warmup=100,
+                         epoch_len=epoch_len, backend="jnp")
+    _assert_int_identical(mono, stream.run(), f"elen={epoch_len}")
+
+
+_pallas_ok, _pallas_why = engine.backend_status("pallas")
+needs_pallas = pytest.mark.skipif(not _pallas_ok, reason=_pallas_why)
+
+
+@needs_pallas
+@pytest.mark.parametrize("pred,comp", list(itertools.product(
+    list(ctl.Predictor), [False, True])))
+def test_epoch_stream_bit_identical_pallas(pred, comp):
+    """Same bit-identity property through the stateful Pallas kernels
+    (interpret mode off-TPU) — and cross-backend: pallas epochs must
+    match the jnp monolithic run."""
+    cfg = _cfg(predictor=pred, compression=comp)
+    addrs, writes, levels = _trace(n=1200,
+                                   seed=_case_seed("p", pred.value, comp))
+    warmup = 111
+    mono = engine.simulate_parallel(cfg, addrs, writes, levels, warmup,
+                                    backend="jnp")
+    stream = EpochStream(cfg, addrs, writes, levels, warmup=warmup,
+                         epoch_len=333, backend="pallas")
+    _assert_int_identical(mono, stream.run(),
+                          f"pallas/{pred.value}/comp={comp}")
+
+
+def test_epoch_stream_conv_only():
+    """Extended tier disabled: state carry covers the conv tier alone."""
+    amap = asep.make_map(conv_sets=8, num_cache_chips=0, sets_per_chip=0)
+    cfg = ctl.MorpheusConfig(amap=amap, conv_ways=4, ext_ways=4)
+    addrs, writes, levels = _trace(span=512, seed=7)
+    mono = engine.simulate_parallel(cfg, addrs, writes, levels, 0)
+    stream = EpochStream(cfg, addrs, writes, levels, epoch_len=500)
+    _assert_int_identical(mono, stream.run(), "conv-only")
+
+
+# ------------------------------------------------- snapshot / restore
+
+def test_snapshot_restore_resumes_identically(tmp_path):
+    """A snapshot taken mid-stream resumes to the same final Stats —
+    through in-memory restore AND an .npz round-trip."""
+    cfg = _cfg()
+    addrs, writes, levels = _trace(seed=4)
+    ref = EpochStream(cfg, addrs, writes, levels, epoch_len=500)
+    ref_stats = ref.run()
+
+    s1 = EpochStream(cfg, addrs, writes, levels, epoch_len=500)
+    s1.step()
+    s1.step()
+    snap = s1.snapshot()
+    save_state(tmp_path / "state.npz", snap)
+
+    s1.run()
+    _assert_int_identical(ref_stats, s1.stats, "uninterrupted")
+
+    s2 = EpochStream(cfg, addrs, writes, levels, epoch_len=500)
+    s2.restore(snap)
+    assert s2.pos == 1000
+    _assert_int_identical(ref_stats, s2.run(), "restored")
+
+    s3 = EpochStream(cfg, addrs, writes, levels, epoch_len=500)
+    s3.restore(load_state(tmp_path / "state.npz", cfg))
+    _assert_int_identical(ref_stats, s3.run(), "npz round-trip")
+
+
+def test_epoch_stream_partial_stats_monotone():
+    """Per-epoch deltas sum to the accumulated stats."""
+    cfg = _cfg()
+    addrs, writes, levels = _trace(seed=5)
+    stream = EpochStream(cfg, addrs, writes, levels, epoch_len=600)
+    acc = {f: 0 for f in ctl._INT_FIELDS}
+    while not stream.done:
+        delta = stream.step()
+        for f in ctl._INT_FIELDS:
+            acc[f] += int(np.asarray(getattr(delta, f)))
+    for f in ctl._INT_FIELDS:
+        assert acc[f] == int(np.asarray(getattr(stream.stats, f))), f
+
+
+# --------------------------------------------------- handoff / migration
+
+def _run_stream(cfg, n=3000, seed=11, epoch_len=1000):
+    addrs, writes, levels = _trace(n=n, seed=seed)
+    st = EpochStream(cfg, addrs, writes, levels, epoch_len=epoch_len)
+    st.run()
+    return st
+
+
+def test_handoff_migrates_resident_blocks():
+    """Warm handoff: surviving blocks are a subset of the old residents,
+    re-routed correctly under the new map, and the rebuilt BF1 has no
+    false negatives (every resident ext tag predicts 'hit')."""
+    old_cfg = _cfg(chips=3)
+    new_cfg = _cfg(chips=2)
+    st = _run_stream(old_cfg)
+    old_blocks = set(extract_blocks(old_cfg, st.state)["addr"].tolist())
+    assert old_blocks, "stream left no resident blocks"
+
+    new_state, rep = handoff(old_cfg, st.state, new_cfg)
+    new_blocks = extract_blocks(new_cfg, new_state)
+    got = set(new_blocks["addr"].tolist())
+    assert got, "nothing migrated"
+    assert got <= old_blocks, "handoff invented blocks"
+    assert rep.migrated == len(got)
+    assert rep.migrated + rep.dropped == rep.resident_before
+    assert rep.flush_writebacks <= rep.dropped
+
+    # predictor invariant (1): no false negatives for residents
+    host = jax.tree.map(np.asarray, new_state)
+    words = ctl.BLOOM_WORDS
+    s_idx, w_idx = np.nonzero(host.ext_valid[0])
+    for s, w in zip(s_idx, w_idx):
+        tag = host.ext_tags[0][s, w]
+        bits = bloomlib._hash_bits(jnp.uint32(tag), words * 32)
+        assert bool(bloomlib._test(jnp.asarray(host.bf1[0][s]), bits)), \
+            f"BF1 false negative for resident tag {tag} in set {s}"
+
+
+def test_handoff_preserves_stats_and_position():
+    old_cfg = _cfg(chips=2)
+    new_cfg = _cfg(chips=3)
+    st = _run_stream(old_cfg)
+    wbs_before = int(np.asarray(st.state.stats.writebacks)[0])
+    hits_before = int(np.asarray(st.state.stats.conv_hits)[0])
+    new_state, rep = handoff(old_cfg, st.state, new_cfg)
+    assert int(np.asarray(new_state.pos)[0]) == st.pos
+    assert int(np.asarray(new_state.stats.conv_hits)[0]) == hits_before
+    # flush cost charged on the carried stats
+    assert int(np.asarray(new_state.stats.writebacks)[0]) == \
+        wbs_before + rep.flush_writebacks
+
+
+def test_handoff_cold_flushes_everything():
+    old_cfg = _cfg(chips=2)
+    new_cfg = _cfg(chips=3)
+    st = _run_stream(old_cfg)
+    dirty = int(np.asarray(st.state.conv_dirty).sum()
+                + np.asarray(st.state.ext_dirty).sum())
+    new_state, rep = handoff(old_cfg, st.state, new_cfg, migrate=False)
+    assert rep.migrated == 0
+    assert rep.dropped == rep.resident_before
+    assert rep.flush_writebacks == dirty
+    assert not np.asarray(new_state.conv_valid).any()
+    assert not np.asarray(new_state.ext_valid).any()
+
+
+def test_handoff_warm_state_produces_hits():
+    """The point of warm handoff: after a same-map transition, migrated
+    blocks keep serving hits that a cold restart would miss."""
+    cfg_a = _cfg(chips=2)
+    cfg_b = _cfg(chips=2, compression=True)   # same amap, new config
+    addrs, writes, levels = _trace(n=2000, seed=13, span=256)
+    st = EpochStream(cfg_a, addrs, writes, levels, epoch_len=1000)
+    st.run()
+    warm_state, _ = handoff(cfg_a, st.state, cfg_b)
+    cold_state = engine.init_state(cfg_b, 1)
+
+    replay = EpochStream(cfg_b, addrs[:500], writes[:500], levels[:500],
+                         epoch_len=500, state=warm_state)
+    base = int(np.asarray(warm_state.stats.conv_hits)[0]
+               + np.asarray(warm_state.stats.ext_hits)[0])
+    replay.step()
+    warm_hits = int(np.asarray(replay.stats.conv_hits)
+                    + np.asarray(replay.stats.ext_hits)) - base
+    cold = EpochStream(cfg_b, addrs[:500], writes[:500], levels[:500],
+                       epoch_len=500, state=cold_state)
+    cold.step()
+    cold_hits = int(np.asarray(cold.stats.conv_hits)
+                    + np.asarray(cold.stats.ext_hits))
+    assert warm_hits > cold_hits
+
+
+# ------------------------------------------------------------- governor
+
+def _drive(gov, reward_fn, epochs):
+    for _ in range(epochs):
+        gov.observe(reward_fn(gov.current), hint=0)
+        gov.decide()
+
+
+def test_governor_smoke_converges_to_peak():
+    """Synthetic unimodal reward: the governor climbs to the argmax and
+    stays there (the CI 'governor smoke test')."""
+    cands = [(n, 68 - n) for n in (10, 20, 30, 40, 50, 60)]
+    peak = {c: 100.0 - abs(c[0] - 40) for c in cands}   # argmax at n=40
+    gov = Governor(cands, GovernorConfig(seed=3, warm_epochs=0))
+    _drive(gov, lambda c: peak[c], 60)
+    assert gov.current == (40, 28), gov.est
+    assert gov.switches >= 2        # it had to move to get there
+
+
+def test_governor_hysteresis_limits_switch_rate():
+    cands = list(range(8))
+    cfg = GovernorConfig(hysteresis=3, warm_epochs=0, seed=0)
+    gov = Governor(cands, cfg)
+    rng = np.random.default_rng(0)
+    prev = gov.current
+    dwell = 0
+    for _ in range(100):
+        gov.observe(rng.random() * 100)    # adversarial noise
+        new = gov.decide()
+        if new != prev:
+            assert dwell + 1 >= cfg.hysteresis, \
+                "switched before the hysteresis dwell elapsed"
+            dwell = 0
+        else:
+            dwell += 1
+        prev = new
+
+
+def test_governor_phase_shift_reconverges():
+    """When the reward landscape flips, phase detection clears stale
+    estimates and the governor re-converges to the new optimum."""
+    cands = list(range(6))
+    phase = {"a": lambda c: 50.0 - 5 * c,     # best at 0
+             "b": lambda c: 30.0 + 5 * c}     # best at 5
+    gov = Governor(cands, GovernorConfig(seed=1, warm_epochs=0))
+    _drive(gov, phase["a"], 40)
+    assert gov.current <= 1
+    _drive(gov, phase["b"], 60)
+    assert gov.current >= 4, (gov.current, gov.est)
+    assert gov.phase_shifts >= 1
+
+
+def test_governor_hint_directs_exploration():
+    """A persistent bottleneck hint makes the governor probe in that
+    direction even when greedy estimates say stay."""
+    cands = list(range(5))
+    gov = Governor(cands, GovernorConfig(seed=0, warm_epochs=0),
+                   initial=2)
+    # flat reward + up-hint: must visit index 3 soon
+    visited = set()
+    for _ in range(12):
+        visited.add(gov.current)
+        gov.observe(10.0, hint=+1)
+        gov.decide()
+    assert 3 in visited or gov.current == 3
+
+
+def test_simulate_online_smoke(tmp_path):
+    """End-to-end governed run on the simulator: telemetry rows cover the
+    full trace, stats totals match the per-epoch records, exports work."""
+    r = simulate_online("cfd", "Morpheus-Basic", length=12_000,
+                        epoch_len=2_000, seed=0)
+    assert len(r.records) == 6
+    assert sum(rec.requests for rec in r.records) == 12_000
+    assert r.ipc > 0 and r.converged_ipc > 0
+    total_hits = int(r.stats.conv_hits + r.stats.ext_hits)
+    assert total_hits >= 0
+    # telemetry exports
+    p = r.log.to_csv(tmp_path / "epochs.csv")
+    assert p.exists() and len(p.read_text().splitlines()) == 7
+    r.log.to_json(tmp_path / "epochs.json")
+    assert (tmp_path / "epochs.json").exists()
+
+
+def test_simulate_online_fixed_split_never_switches():
+    r = simulate_online("cfd", "Morpheus-Basic", length=8_000,
+                        epoch_len=2_000, fixed_split=(32, 36))
+    assert r.switches == 0
+    assert {(rec.n_compute, rec.n_cache) for rec in r.records} == {(32, 36)}
+
+
+# ------------------------------------------------------------ telemetry
+
+def _rec(i):
+    return EpochRecord(epoch=i, pos=i * 10, app="cfd", n_compute=32,
+                       n_cache=36, requests=10, hit_rate=0.5,
+                       ext_occupancy=0.1, pred_accuracy=1.0,
+                       bytes_saved=0.0, ipc=1.0, exec_time_s=1e-6,
+                       reward=1.0)
+
+
+def test_telemetry_ring_buffer_wraps():
+    log = TelemetryLog(capacity=8)
+    for i in range(20):
+        log.append(_rec(i))
+    assert len(log) == 8
+    assert log.total == 20
+    assert [r.epoch for r in log.records()] == list(range(12, 20))
+    assert [r.epoch for r in log.tail(3)] == [17, 18, 19]
+    assert log.summary()["epochs"] == 8
+
+
+# -------------------------------------------------------- phased traces
+
+def test_generate_phased_concatenates_working_sets():
+    apps = ("lib", "kmeans")          # 2 MiB vs 40 MiB working sets
+    addrs, writes, levels = tr.generate_phased(apps, n_cores=8,
+                                               length=10_000, seed=0)
+    assert len(addrs) == len(writes) == len(levels) == 10_000
+    bounds = tr.phase_bounds(2, 10_000)
+    assert list(bounds) == [5_000, 10_000]
+    span_a = addrs[:5_000].max()
+    span_b = addrs[5_000:].max()
+    assert span_b > span_a * 4        # kmeans working set is far larger
+
+
+def test_generate_phases_knob_matches_generate_phased():
+    a1 = tr.generate("ignored", n_cores=4, length=6_000, seed=2,
+                     phases=("cfd", "lib"))
+    a2 = tr.generate_phased(("cfd", "lib"), n_cores=4, length=6_000,
+                            seed=2)
+    for x, y in zip(a1, a2):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_generate_phased_deterministic_and_seed_sensitive():
+    # kmeans addresses are rng-driven (powerlaw); cfd/lib sweeps are not,
+    # so seed sensitivity must be asserted on a stochastic phase
+    a = tr.generate_phased(("kmeans", "lib"), n_cores=4, length=4_000, seed=0)
+    b = tr.generate_phased(("kmeans", "lib"), n_cores=4, length=4_000, seed=0)
+    c = tr.generate_phased(("kmeans", "lib"), n_cores=4, length=4_000, seed=1)
+    np.testing.assert_array_equal(a[0], b[0])
+    assert not np.array_equal(a[0], c[0])

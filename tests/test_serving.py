@@ -77,6 +77,119 @@ def test_pool_no_prediction_pays_remote_penalty():
     assert a.stats.ext_hits == b.stats.ext_hits  # same semantics
 
 
+# ------------------------------------------------- eviction pressure
+
+def _keys_for_tier(pool, tier, n, start=1, stride=7919):
+    """First n keys routing to the given tier of the pool's address map.
+
+    Keys whose tag is 0 are skipped: the batched tag_lookup kernel probes
+    unrequested sets with tag 0, which would spuriously refresh a
+    resident tag-0 page's LRU on every batch."""
+    from repro.core import address_separation as asep
+    amap = pool.cfg.amap
+    keys, k = [], start
+    while len(keys) < n:
+        t, _ = asep.route(amap, jnp.uint32(k))
+        if int(t) == tier and (k // amap.total_sets) != 0:
+            keys.append(k)
+        k += stride
+    return np.asarray(keys, np.uint32)
+
+
+def test_pool_conv_eviction_pressure():
+    """Conventional tier under pressure: more distinct pages than slots.
+    Valid counts stay bounded by the ways, early pages get evicted (a
+    re-lookup is a backing fetch again), and the LRU victim choice keeps
+    the most recently touched pages resident."""
+    pool = _pool(num_cache_chips=0, conv_sets=4, ways=2)   # 8 slots total
+    keys = _keys_for_tier(pool, 0, 32)
+    for k in keys:                       # sequential install, 4x capacity
+        pool.lookup_batch(np.asarray([k], np.uint32))
+    valid = np.asarray(pool.conv_valid)
+    assert valid.sum() <= 4 * 2, "more resident pages than slots"
+    assert pool.stats.conv_misses == 32
+    # the earliest key must have been evicted by now
+    plan = pool.lookup_batch(np.asarray([keys[0]], np.uint32))
+    assert plan.tier[0] == 2, "LRU should have evicted the oldest page"
+    # ...while the most recent keys are still resident
+    plan = pool.lookup_batch(np.asarray([keys[-1]], np.uint32))
+    assert plan.tier[0] == 0
+
+
+def test_pool_ext_eviction_pressure():
+    """Extended tier under pressure: ways stay bounded, evicted pages
+    fetch from backing again, and the predictor keeps absorbing the
+    (recurring) cold misses as predicted misses, not interconnect trips."""
+    pool = _pool(num_cache_chips=1, ext_sets_per_chip=2, ways=2,
+                 compression=False)     # 4 ext slots
+    keys = _keys_for_tier(pool, 1, 24)
+    for _ in range(2):                  # two rounds of 6x overcommit
+        for k in keys:
+            pool.lookup_batch(np.asarray([k], np.uint32))
+    valid = np.asarray(pool.ext_valid)
+    assert valid.sum() <= 2 * 2, "ext tier exceeded its ways"
+    s = pool.stats
+    assert s.backing_fetches >= 24, "evictions must re-fetch"
+    # with 6x overcommit the vast majority of lookups miss; the Bloom
+    # filters may go false-positive but hits can never exceed residency
+    assert s.ext_hits <= len(keys)
+    assert s.ext_pred_miss > 0
+
+
+def test_pool_two_tier_pressure_keeps_payloads_consistent():
+    """Under eviction pressure, a resident page's payload must always be
+    the last one written for that key (no cross-key aliasing)."""
+    pool = _pool(conv_sets=4, ext_sets_per_chip=2, num_cache_chips=2,
+                 ways=2, compression=True)
+    rng = np.random.default_rng(1)
+    payloads = {}
+    keys = np.concatenate([_keys_for_tier(pool, 0, 6),
+                           _keys_for_tier(pool, 1, 6, start=3)])
+    for rnd in range(3):
+        for k in keys:
+            plan = pool.lookup_batch(np.asarray([k], np.uint32))
+            if plan.tier[0] == 2:       # fetch + install fresh payload
+                pay = jnp.asarray(rng.integers(0, 2**16, 32,
+                                               dtype=np.uint32))
+                pool.write_page(int(k), pay)
+                payloads[int(k)] = np.asarray(pay)
+            else:                        # resident: must read back intact
+                got = np.asarray(pool.read_pages(plan))[0]
+                np.testing.assert_array_equal(got, payloads[int(k)],
+                                              err_msg=f"key {k} rnd {rnd}")
+
+
+def test_pool_reconfigure_flushes_and_keeps_stats():
+    """A mode transition re-provisions the pool: all resident pages flush
+    (the address separation changed), cumulative stats survive, and the
+    flushed pages are re-fetchable afterwards."""
+    pool = _pool()
+    keys = np.asarray([11, 87, 1003, 50021], np.uint32)
+    pool.lookup_batch(keys)
+    pool.lookup_batch(keys)             # now resident
+    fetches_before = pool.stats.backing_fetches
+    assert pool.stats.conv_hits + pool.stats.ext_hits > 0
+    flushed = pool.reconfigure(4)
+    assert flushed > 0
+    assert pool.cfg.num_cache_chips == 4
+    assert pool.stats.backing_fetches == fetches_before  # stats carried
+    plan = pool.lookup_batch(keys)
+    assert (np.asarray(plan.tier) == 2).all(), "flush must drop residency"
+    # no-op reconfigure flushes nothing
+    assert pool.reconfigure(4) == 0
+
+
+def test_pool_telemetry_snapshot():
+    pool = _pool()
+    pool.lookup_batch(np.arange(0, 64, dtype=np.uint32))
+    t = pool.telemetry()
+    assert t["lookups"] == 64
+    assert 0.0 <= t["hit_rate"] <= 1.0
+    assert 0.0 <= t["conv_occupancy"] <= 1.0
+    assert t["num_cache_chips"] == pool.cfg.num_cache_chips
+    assert t["time_ns_per_lookup"] > 0
+
+
 @pytest.fixture(scope="module")
 def tiny_engine_model():
     cfg = configs.get("qwen3-4b").reduced()
@@ -104,6 +217,52 @@ def test_engine_prefix_cache_reuse(tiny_engine_model):
     assert r1.pages_reused == 0 and r1.pages_fetched == 2
     r2 = eng.run([Request(1, prompt, 2)])
     assert r2.pages_reused >= 2                 # prefix pages hit
+
+
+def test_engine_prefix_hash_shared_prefix_diverging_suffix(tiny_engine_model):
+    """Page keys hash the token *prefix* up to each page boundary: two
+    prompts sharing their first page (16 tokens) but diverging inside the
+    second page reuse exactly the shared page and re-fetch the rest."""
+    cfg, model, params = tiny_engine_model
+    eng = Engine(model, params, max_len=64)
+    base = list(range(1, 33))
+    eng.run([Request(0, base, 2)])
+    fetched0 = eng.pages_fetched
+    assert fetched0 == 2                    # both pages cold
+
+    div = base[:24] + [88] * 8              # page 1 differs in its tail
+    eng.run([Request(1, div, 2)])
+    assert eng.pages_reused == 1            # page 0 (shared prefix) hit
+    assert eng.pages_fetched == fetched0 + 1   # page 1 re-fetched
+
+    # a prompt differing in token 0 shares nothing
+    other = [97] + base[1:]
+    eng.run([Request(2, other, 2)])
+    assert eng.pages_reused == 1
+    assert eng.pages_fetched == fetched0 + 3
+
+
+def test_engine_prefix_hash_order_sensitivity(tiny_engine_model):
+    """Permuting tokens inside the first page changes its prefix hash:
+    nothing is reused even though the token multiset is identical."""
+    cfg, model, params = tiny_engine_model
+    eng = Engine(model, params, max_len=64)
+    p1 = list(range(1, 33))
+    p2 = p1[:]
+    p2[0], p2[1] = p2[1], p2[0]
+    eng.run([Request(0, p1, 2)])
+    eng.run([Request(1, p2, 2)])
+    assert eng.pages_reused == 0
+    assert eng.pages_fetched == 4
+
+
+def test_page_key_determinism_and_spread():
+    """page_key is stable across calls and spreads (hash, layer, page)
+    combinations without collisions at demo scale."""
+    assert page_key(123, 0, 0) == page_key(123, 0, 0)
+    keys = {page_key(h, l, p)
+            for h in (1, 2, 0xDEADBEEF) for l in range(4) for p in range(8)}
+    assert len(keys) == 3 * 4 * 8
 
 
 def test_engine_decode_matches_plain_decode(tiny_engine_model):

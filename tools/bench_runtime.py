@@ -1,0 +1,114 @@
+"""Benchmark the online runtime: epoch-streaming overhead + governor demo.
+
+  PYTHONPATH=src python tools/bench_runtime.py [quick|std] [--backend jnp]
+  PYTHONPATH=src python tools/bench_runtime.py --backend pallas
+
+Part 1 times the epoch-streaming engine (``runtime.stream.EpochStream``)
+against one monolithic ``engine.simulate_parallel`` dispatch over the same
+trace, across epoch lengths, and checks the integer Stats are
+bit-identical (the ``EngineState`` resume contract).
+
+Part 2 runs the adaptive governor (``runtime.governor.simulate_online``)
+on a phase-shifting trace, prints the telemetry summary and exports the
+per-epoch log to ``results/runtime_telemetry.{csv,json}``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import cache_sim as cs                      # noqa: E402
+from repro.core import controller as ctl                    # noqa: E402
+from repro.core import engine                               # noqa: E402
+from repro.core import traces as tr                         # noqa: E402
+from repro.runtime import EpochStream, simulate_online      # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+PROFILES = {
+    "quick": dict(length=30_000, epochs=(1_000, 3_000), phased=60_000),
+    "std": dict(length=120_000, epochs=(3_000, 12_000), phased=200_000),
+}
+
+
+def bench_stream(length: int, epoch_lens, backend: str) -> None:
+    spec = cs.SYSTEMS["Morpheus-ALL"]
+    cfg = cs.build_config(spec, 36)
+    addrs, writes, levels = tr.generate("cfd", n_cores=32, length=length,
+                                        ws_scale=1.0 / cs.SIM_SCALE)
+    warmup = length // 4
+
+    def ints(s):
+        return {f: int(np.asarray(getattr(s, f)))
+                for f in ctl._INT_FIELDS}
+
+    t0 = time.time()
+    mono = engine.simulate_parallel(cfg, addrs, writes, levels, warmup,
+                                    backend=backend)
+    mono_ints = ints(mono)
+    t_mono_cold = time.time() - t0
+    t0 = time.time()
+    engine.simulate_parallel(cfg, addrs, writes, levels, warmup,
+                             backend=backend)
+    t_mono = time.time() - t0
+    print(f"monolithic [{backend}]: cold {t_mono_cold:.2f}s / "
+          f"warm {t_mono:.2f}s ({length} reqs)")
+
+    for elen in epoch_lens:
+        stream = EpochStream(cfg, addrs, writes, levels, warmup=warmup,
+                             epoch_len=elen, backend=backend)
+        t0 = time.time()
+        stream.run()
+        dt = time.time() - t0
+        got = ints(stream.stats)
+        identical = got == mono_ints
+        print(f"epoch_len {elen:>6}: {stream.epoch:>3} epochs "
+              f"{dt:6.2f}s  ({dt / max(t_mono, 1e-9):4.1f}x warm "
+              f"monolithic)  int-stats identical: {identical}")
+        if not identical:
+            raise SystemExit(f"bit-identity violated at epoch_len={elen}: "
+                             f"{got} vs {mono_ints}")
+
+
+def bench_governor(phased_len: int, backend: str) -> None:
+    phases = ("kmeans", "lib")
+    t0 = time.time()
+    r = simulate_online(phases, "Morpheus-ALL", length=phased_len,
+                        epoch_len=3_000, backend=backend)
+    dt = time.time() - t0
+    print(f"\ngovernor on {'+'.join(phases)} ({phased_len} reqs, "
+          f"{len(r.records)} epochs) in {dt:.1f}s")
+    for k, v in r.log.summary().items():
+        print(f"  {k}: {v}")
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    csv_p = r.log.to_csv(RESULTS / "runtime_telemetry.csv")
+    r.log.to_json(RESULTS / "runtime_telemetry.json")
+    print(f"telemetry exported to {csv_p} (+ .json)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("profile", nargs="?", default="quick",
+                    choices=sorted(PROFILES))
+    ap.add_argument("--backend", default="",
+                    help="engine backend (jnp|pallas; default session)")
+    args = ap.parse_args()
+    try:
+        backend = engine.resolve_backend(args.backend or None)
+    except engine.BackendError as e:
+        print(f"error: {e}")
+        raise SystemExit(2)
+    p = PROFILES[args.profile]
+    print(f"profile={args.profile} backend={backend}")
+    bench_stream(p["length"], p["epochs"], backend)
+    bench_governor(p["phased"], backend)
+
+
+if __name__ == "__main__":
+    main()
