@@ -17,9 +17,40 @@ from typing import Dict, Iterable, List, Sequence, Tuple
 OUT_DIR = Path(__file__).resolve().parent / "out"
 RESULTS_DIR = Path(__file__).resolve().parents[1] / "results"
 
-# Benchmark profile: quick (CI smoke), std (default), full (paper-grade)
-PROFILE = os.environ.get("REPRO_BENCH_PROFILE", "std")
-TRACE_LEN = {"quick": 12_000, "std": 40_000, "full": 120_000}[PROFILE]
+# Benchmark profile: quick (CI smoke), std (default), full (paper-grade).
+# The *cheap* sweeps (fig1 / fig2 / tab3's policy sweep) default to the
+# full profile — the batched engine made them affordable — while the
+# expensive multi-system modules stay on std; an explicit profile
+# (env REPRO_BENCH_PROFILE or --profile) overrides BOTH.
+TRACE_LEN_OF = {"quick": 12_000, "std": 40_000, "full": 120_000}
+GRID_OF = {
+    "quick": (18, 32, 48, 68),
+    "std": (10, 18, 24, 32, 40, 48, 56, 68),
+    "full": (10, 14, 18, 24, 28, 32, 36, 40, 44, 48, 53, 56, 62, 68),
+}
+MORPHEUS_GRID_OF = {
+    "quick": (32, 48),
+    "std": (18, 32, 40, 48, 56),
+    "full": (10, 18, 24, 32, 40, 44, 48, 56, 62),
+}
+
+_PROFILE_ENV = os.environ.get("REPRO_BENCH_PROFILE") or None
+PROFILE = _PROFILE_ENV or "std"
+CHEAP_PROFILE = _PROFILE_ENV or "full"
+TRACE_LEN = TRACE_LEN_OF[PROFILE]
+CHEAP_TRACE_LEN = TRACE_LEN_OF[CHEAP_PROFILE]
+
+
+def set_profile(profile: str) -> None:
+    """Override the benchmark profile after import (used by module
+    __main__ blocks that parse --profile themselves, e.g. fig_serving)."""
+    global PROFILE, CHEAP_PROFILE, TRACE_LEN, CHEAP_TRACE_LEN, GRID
+    global MORPHEUS_GRID, CHEAP_GRID
+    assert profile in TRACE_LEN_OF, profile
+    PROFILE = CHEAP_PROFILE = profile
+    TRACE_LEN = CHEAP_TRACE_LEN = TRACE_LEN_OF[profile]
+    GRID = CHEAP_GRID = GRID_OF[profile]
+    MORPHEUS_GRID = MORPHEUS_GRID_OF[profile]
 
 # Trace seeds per grid cell (env REPRO_BENCH_SEEDS or --seeds N on
 # benchmarks.run / fig1 / fig2).  >1 turns fig1/fig2 cells into
@@ -44,18 +75,11 @@ def mean_std(xs: Sequence[float]) -> Tuple[float, float]:
     import numpy as np
     a = np.asarray(list(xs), float)
     return float(a.mean()), float(a.std())
-GRID = {
-    "quick": (18, 32, 48, 68),
-    "std": (10, 18, 24, 32, 40, 48, 56, 68),
-    "full": (10, 14, 18, 24, 28, 32, 36, 40, 44, 48, 53, 56, 62, 68),
-}[PROFILE]
+GRID = GRID_OF[PROFILE]
+CHEAP_GRID = GRID_OF[CHEAP_PROFILE]
 # Morpheus variants recompile per distinct cache-chip count; keep that grid
 # small (compile cache is shared across apps since cfg is static).
-MORPHEUS_GRID = {
-    "quick": (32, 48),
-    "std": (18, 32, 40, 48, 56),
-    "full": (10, 18, 24, 32, 40, 44, 48, 56, 62),
-}[PROFILE]
+MORPHEUS_GRID = MORPHEUS_GRID_OF[PROFILE]
 
 
 def write_csv(name: str, header: Sequence[str],
@@ -99,15 +123,21 @@ class Timer:
 
 # ---------------------------------------------------------------- policy
 # Mode-split (Table 3) results are expensive (grid sweep per app x system);
-# cache them on disk so fig12 / bw_analysis / tab3 share one sweep.
-_POLICY_CACHE = RESULTS_DIR / f"policy_cache_{PROFILE}.json"
+# cache them on disk (results/policy_cache_<profile>.json) so fig12 /
+# bw_analysis / tab3 share one sweep per profile.
 
 
 def mode_splits(systems: Sequence[str], apps: Sequence[str],
-                *, recompute: bool = False,
-                backend: str = "") -> Dict[str, Dict[str, Tuple[int, int]]]:
+                *, recompute: bool = False, backend: str = "",
+                profile: str | None = None
+                ) -> Dict[str, Dict[str, Tuple[int, int]]]:
     """{(system) -> {app -> (n_compute, n_cache)}} via the offline policy
     sweep (core/policy.py), cached on disk per profile.
+
+    ``profile`` overrides the session profile for this sweep alone —
+    tab3 passes ``CHEAP_PROFILE`` so the policy sweep defaults to the
+    full grid while fig12/bw_analysis keep the session profile (their
+    multi-system sweeps are the expensive part).
 
     All missing (system, app, grid) points are collected into ONE
     ``policy.sweep`` / ``cache_sim.run_batch`` call: points that share a
@@ -125,9 +155,19 @@ def mode_splits(systems: Sequence[str], apps: Sequence[str],
     from repro.core import policy
     from repro.core import traces as tr
 
+    from repro.workloads.synthetic import TRACE_SCHEMA
+
+    profile = profile or PROFILE
+    cache_path = RESULTS_DIR / f"policy_cache_{profile}.json"
+    grid, mgrid = GRID_OF[profile], MORPHEUS_GRID_OF[profile]
+    trace_len = TRACE_LEN_OF[profile]
     cache: Dict[str, Dict[str, List[int]]] = {}
-    if _POLICY_CACHE.exists() and not recompute:
-        cache = json.loads(_POLICY_CACHE.read_text())
+    if cache_path.exists() and not recompute:
+        cache = json.loads(cache_path.read_text())
+        # splits computed from a different trace-generator schema are
+        # silently wrong for today's traces: discard, resweep
+        if cache.pop("_trace_schema", None) != TRACE_SCHEMA:
+            cache = {}
 
     changed = False
     pending: List[cs.RunPoint] = []
@@ -144,10 +184,9 @@ def mode_splits(systems: Sequence[str], apps: Sequence[str],
                 sys_cache[app] = [cs.TOTAL_CORES, 0]
                 changed = True
                 continue
-            grid = MORPHEUS_GRID if (spec.morpheus and w.memory_bound) \
-                else GRID
-            pending.extend(policy.grid_points(app, system, grid=grid,
-                                              length=TRACE_LEN,
+            g = mgrid if (spec.morpheus and w.memory_bound) else grid
+            pending.extend(policy.grid_points(app, system, grid=g,
+                                              length=trace_len,
                                               backend=backend))
     if pending:
         for (app, system), split in policy.sweep(pending).items():
@@ -156,7 +195,8 @@ def mode_splits(systems: Sequence[str], apps: Sequence[str],
     missing = [(s, a) for s in systems for a in apps if a not in cache[s]]
     assert not missing, f"mode_splits produced no split for {missing}"
     if changed:
-        _POLICY_CACHE.parent.mkdir(parents=True, exist_ok=True)
-        _POLICY_CACHE.write_text(json.dumps(cache, indent=1))
+        cache_path.parent.mkdir(parents=True, exist_ok=True)
+        cache_path.write_text(json.dumps(
+            {"_trace_schema": TRACE_SCHEMA, **cache}, indent=1))
     return {s: {a: (v[0], v[1]) for a, v in cache[s].items()}
             for s in systems}

@@ -20,12 +20,14 @@ THRASHERS = ("kmeans", "histo", "mri-gri", "spmv", "lbm")
 
 def run() -> Dict[str, List[float]]:
     apps = tr.MEMORY_BOUND + tr.COMPUTE_BOUND
-    grid = list(C.GRID)
+    # cheap sweep: defaults to the FULL profile grid/trace length (the
+    # batched engine makes it affordable); --profile / env overrides
+    grid = list(C.CHEAP_GRID)
     seeds = C.seed_list()
     # the whole figure is one batched sweep: every (app, n_compute, seed)
     # point shares the BL config, so the engine compiles once and vmaps
     # over all; extra seeds (--seeds N) are just more RunPoints
-    pts = [cs.RunPoint(app, "BL", n, 0, C.TRACE_LEN, seed)
+    pts = [cs.RunPoint(app, "BL", n, 0, C.CHEAP_TRACE_LEN, seed)
            for app in apps for n in grid for seed in seeds]
     res = {(p.app, p.n_compute, p.seed): r
            for p, r in zip(pts, cs.run_batch(pts))}
@@ -63,14 +65,14 @@ def run() -> Dict[str, List[float]]:
     C.verdict("fig1.thrashers-drop", all(d < 0.95 for d in drop),
               f"thrashers perf(68)/peak = {['%.2f' % d for d in drop]} (<0.95 expected)")
     C.verdict("fig1.compute-bound-scales", all(g > 3.0 for g in comp_gain),
-              f"compute-bound perf(68)/perf({C.GRID[0]}) = "
+              f"compute-bound perf(68)/perf({grid[0]}) = "
               f"{['%.1f' % g for g in comp_gain]}")
     # paper: on average 56% of cores saturate performance
     knees = []
     for app in tr.MEMORY_BOUND:
         c = curves[app]
         peak = max(c)
-        for n, v in zip(C.GRID, c):
+        for n, v in zip(grid, c):
             if v >= 0.95 * peak:
                 knees.append(n / 68.0)
                 break

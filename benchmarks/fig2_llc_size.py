@@ -27,10 +27,12 @@ def _scaled_system(conv_scale: float) -> str:
 
 def run() -> Dict[str, Dict[float, float]]:
     # one batched sweep over (scale, app, n_compute, seed); points group
-    # by scale (each LLC scale is one config shape) inside run_batch
+    # by scale (each LLC scale is one config shape) inside run_batch.
+    # Cheap sweep: defaults to the FULL profile grid/trace length (the
+    # batched engine makes it affordable); --profile / env overrides.
     seeds = C.seed_list()
-    pts = [cs.RunPoint(app, _scaled_system(s), n, 0, C.TRACE_LEN, seed)
-           for s in SCALES for app in tr.MEMORY_BOUND for n in C.GRID
+    pts = [cs.RunPoint(app, _scaled_system(s), n, 0, C.CHEAP_TRACE_LEN, seed)
+           for s in SCALES for app in tr.MEMORY_BOUND for n in C.CHEAP_GRID
            for seed in seeds]
     res = {}           # (app, system, seed) -> best-over-grid IPC
     for p, r in zip(pts, cs.run_batch(pts)):

@@ -18,7 +18,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated module keys (fig1,fig2,fig5,fig11,"
-                         "fig12,fig13,tab3,bw,overheads,roofline,online)")
+                         "fig12,fig13,tab3,bw,overheads,roofline,online,"
+                         "serving)")
     ap.add_argument("--profile", default=None, choices=("quick", "std", "full"))
     ap.add_argument("--seeds", type=int, default=None,
                     help="trace seeds per grid cell; >1 adds mean±std "
@@ -33,8 +34,8 @@ def main() -> None:
     from . import common as C
     from . import (bw_analysis, fig1_core_scaling, fig2_llc_size,
                    fig5_latency, fig11_characterization, fig12_endtoend,
-                   fig13_predictor, fig_online, roofline_table,
-                   tab3_mode_split, tab_overheads)
+                   fig13_predictor, fig_online, fig_serving,
+                   roofline_table, tab3_mode_split, tab_overheads)
 
     modules = {
         "fig5": ("Fig. 5 latency timelines", fig5_latency.run),
@@ -50,6 +51,8 @@ def main() -> None:
         "fig13": ("Fig. 13 predictor ablation", fig13_predictor.run),
         "bw": ("§7.4 bandwidth analysis", bw_analysis.run),
         "online": ("Online governor vs. static splits", fig_online.run),
+        "serving": ("Multi-tenant bursty replay (workload subsystem)",
+                    fig_serving.run),
     }
     only = [k.strip() for k in args.only.split(",") if k.strip()]
     t0 = time.time()

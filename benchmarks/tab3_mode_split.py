@@ -22,7 +22,9 @@ SYSTEMS = ("IBL", "Morpheus-Basic", "Morpheus-ALL")
 
 def run():
     apps = tr.MEMORY_BOUND + tr.COMPUTE_BOUND
-    splits = C.mode_splits(list(SYSTEMS), apps)
+    # cheap sweep: the policy grid defaults to the full profile (batched
+    # engine); an explicit --profile / env profile overrides
+    splits = C.mode_splits(list(SYSTEMS), apps, profile=C.CHEAP_PROFILE)
     rows = []
     for app in apps:
         rows.append([app] + [splits[s][app][0] for s in SYSTEMS] +

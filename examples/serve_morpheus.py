@@ -11,9 +11,18 @@ cache-chip count statically; ``auto`` hands it to the adaptive runtime
 governor (``repro.runtime.ServingGovernor``), which watches the pool's
 observed request mix between batches and prints its per-epoch decisions.
 
+``--workload``/``--arrival`` schedule the rounds from the workload
+subsystem instead of fixed demo batches: K tenant prompt families
+(distinct prefix-page populations) interleave within each round, and the
+arrival process decides how many requests land per round — an ``onoff``
+process produces packed rounds and idle windows, the bursty load the
+governor exists for.
+
   PYTHONPATH=src python examples/serve_morpheus.py
   PYTHONPATH=src python examples/serve_morpheus.py --arch gemma2-9b --batch 4
   PYTHONPATH=src python examples/serve_morpheus.py --split auto --rounds 6
+  PYTHONPATH=src python examples/serve_morpheus.py --split auto --rounds 8 \
+      --workload tenantA,tenantB --arrival onoff:64,0.5,0.5
 """
 from __future__ import annotations
 
@@ -24,7 +33,8 @@ import jax
 
 from repro import configs
 from repro.models import build_model
-from repro.runtime import ServingGovernor, demo_pool, describe_tick
+from repro.runtime import (SERVING_GCFG, ServingGovernor, demo_pool,
+                           describe_tick)
 from repro.serving import Engine, Request
 
 
@@ -49,6 +59,12 @@ def main():
     ap.add_argument("--rounds", type=int, default=None,
                     help="number of serving rounds (default 2, or 6 with "
                          "--split auto)")
+    ap.add_argument("--workload", default=None,
+                    help="tenant prompt families, comma-joined "
+                         "(e.g. 'tenantA,tenantB')")
+    ap.add_argument("--arrival", default=None,
+                    help="per-round arrival process: det:R | poisson:R | "
+                         "mmpp:Ra,Rb,Ta,Tb | onoff:R,Ton,Toff")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).reduced()
@@ -63,14 +79,40 @@ def main():
     eng = Engine(model, params, max_len=args.prompt_len + args.max_new + 8,
                  morpheus=True, pool=pool)
     if args.split == "auto":
-        governor = ServingGovernor(eng.pool)
+        # conservative preset: bursty rounds / idle windows thrash the
+        # default config's phase detector
+        governor = ServingGovernor(eng.pool, gcfg=SERVING_GCFG)
         print(f"governor: candidates {governor.gov.candidates}, starting "
               f"at {eng.pool.cfg.num_cache_chips} cache chips")
 
     rounds = args.rounds or (6 if governor else 2)
+    if args.workload or args.arrival:
+        from repro.workloads.serving import round_requests
+        sched = round_requests(args.workload or "demo",
+                               args.arrival or f"det:{args.batch}",
+                               rounds, args.batch, args.prompt_len)
+    else:
+        sched = None
+    rid = 0
     for rnd in range(rounds):
         tag = "cold" if rnd == 0 else f"warm{rnd}"
-        reqs = make_requests(args.batch, args.prompt_len, args.max_new)
+        if sched is None:
+            reqs = make_requests(args.batch, args.prompt_len, args.max_new)
+        else:
+            batch = sched[rnd]
+            if not batch:
+                print(f"[{tag}] idle window (no arrivals)")
+                if governor is not None:
+                    print("       " + describe_tick(governor.tick()))
+                continue
+            from repro.workloads.serving import batch_mix
+            mix = batch_mix(batch)
+            print(f"[{tag}] arrivals: "
+                  + "+".join(f"{k}:{v}" for k, v in mix.items()))
+            reqs = [Request(rid=rid + i, prompt=toks,
+                            max_new_tokens=args.max_new)
+                    for i, (_, toks) in enumerate(batch)]
+            rid += len(reqs)
         t0 = time.time()
         rep = eng.run(reqs)
         dt = time.time() - t0

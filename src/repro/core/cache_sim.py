@@ -192,18 +192,29 @@ def _prepare(pt: RunPoint):
 
 
 def _finalize(pt: RunPoint, n_compute: int, n_cache: int, n_acc: int,
-              stats: Stats) -> RunResult:
-    """Analytical execution-time / power model on top of simulated Stats."""
+              stats: Stats, *, insts: float | None = None,
+              knee: float | None = None) -> RunResult:
+    """Analytical execution-time / power model on top of simulated Stats.
+
+    ``insts``/``knee`` override the app-profile-derived warp-instruction
+    count and DRAM contention knee — a multi-tenant epoch mixes apps with
+    different arithmetic intensities, so the workload replayer passes the
+    slice's exact request-weighted values (``repro.workloads.tenancy``)
+    instead of attributing the whole epoch to the dominant app.
+    """
     app, spec = pt.app, SYSTEMS[pt.system]
     w = tr.WORKLOADS[app]
-    insts = tr.instructions_for(app, n_acc)
+    if insts is None:
+        insts = tr.instructions_for(app, n_acc)
+    if knee is None:
+        knee = w.contention_knee
     gpu = PaperGPU()
 
     boost = spec.mem_boost
     t_compute = insts / (n_compute * IPC_PER_CORE * FREQ_GHZ * 1e9)
     # DRAM row-buffer locality: interleaving more streams than the app's
     # knee degrades effective DRAM bandwidth (the Fig. 1 'drop' mechanism)
-    row_locality = max(0.2, min(1.0, w.contention_knee / max(n_compute, 1)))
+    row_locality = max(0.2, min(1.0, knee / max(n_compute, 1)))
     t_dram = float(stats.dram_bytes) / (BW_DRAM * boost * row_locality)
     t_conv = float(stats.conv_bytes) / (BW_CONV * boost)
     t_noc = float(stats.noc_bytes) / (BW_NOC * boost)

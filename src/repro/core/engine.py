@@ -150,9 +150,13 @@ def _dense_layout(set_idx: np.ndarray, n_sets: int, length: int,
     return active, out
 
 
+_UNCOUNTED_POS = np.int32(-(1 << 30))
+
+
 def pack(cfg: MorpheusConfig,
          traces: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray, int]],
-         pos0: Sequence[int] | None = None) -> PackedTraces:
+         pos0: Sequence[int] | None = None,
+         count: Sequence[np.ndarray | None] | None = None) -> PackedTraces:
     """Partition a batch of (addrs, writes, levels, warmup) traces.
 
     Traces may have different lengths and warmups; shorter traces simply
@@ -162,6 +166,15 @@ def pack(cfg: MorpheusConfig,
     positions: an epoch stream packs each slice with ``pos0 = epoch
     start`` so the *global* positions — and therefore the ``pos >=
     warmup`` stats mask — are identical to a monolithic pack.
+
+    ``count`` (per-trace boolean mask or None) selects which requests are
+    *counted* in the Stats.  Uncounted requests still replay — they update
+    tags/LRU/Bloom state exactly like any other request — but their
+    position is recorded as a large negative number, so the engines' ``pos
+    >= warmup`` stats mask (identical on both backends) excludes them.
+    This is how the workload subsystem attributes per-tenant Stats: K
+    replays of the same composed stream whose masks partition the
+    requests sum to the unmasked run bit-identically on integer counters.
     """
     amap = cfg.amap
     total = max(amap.total_sets, 1)
@@ -176,6 +189,10 @@ def pack(cfg: MorpheusConfig,
         tag = (addrs // np.uint32(total)).astype(np.uint32)
         off = int(pos0[i]) if pos0 is not None else 0
         pos = off + np.arange(len(addrs), dtype=np.int32)
+        if count is not None and count[i] is not None:
+            mask = np.asarray(count[i], bool)
+            assert mask.shape == addrs.shape, "count mask length mismatch"
+            pos = np.where(mask, pos, _UNCOUNTED_POS)
         is_ext = gset >= sc if cfg.ext_enabled else np.zeros(len(addrs), bool)
         if sc:
             cnt = np.bincount(gset[~is_ext], minlength=sc)

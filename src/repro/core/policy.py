@@ -74,12 +74,15 @@ def best_split(app: str, system: str, *, grid: Sequence[int] = DEFAULT_GRID,
 
 
 def table3(systems: Sequence[str] = ("IBL", "Morpheus-Basic", "Morpheus-ALL"),
-           apps: Sequence[str] | None = None, *, length: int = 60_000,
+           apps: Sequence[str] | None = None, *, length: int = 120_000,
            backend: str = "") -> Dict[str, Dict[str, ModeSplit]]:
     """Paper Table 3: per-app compute-core counts for each system.
 
     All (system, app, grid) points go through ONE ``run_batch`` so points
-    sharing a config shape share compiled executables and dispatches."""
+    sharing a config shape share compiled executables and dispatches.
+    The default ``length`` is the full-profile trace length — the batched
+    engine made the sweep cheap enough to run paper-grade by default
+    (pass a smaller length for smoke runs)."""
     apps = list(apps or (tr.MEMORY_BOUND + tr.COMPUTE_BOUND))
     pts: List[cs.RunPoint] = []
     for system in systems:

@@ -10,8 +10,19 @@ cache-chip count; ``auto`` attaches the adaptive runtime governor
 (``repro.runtime.ServingGovernor``), which adjusts the split between
 rounds from the pool's observed request mix and reports each decision.
 
+``--workload``/``--arrival`` replace the fixed demo batches with the
+workload subsystem's serving schedule (``repro.workloads.serving``):
+``--workload`` names K tenant prompt families that interleave within
+each round (distinct prefix-page populations contending for the pool),
+and ``--arrival`` shapes how many requests land in each round
+(``det:R`` | ``poisson:R`` | ``mmpp:Ra,Rb,Ta,Tb`` | ``onoff:R,Ton,Toff``
+— an on-off process gives packed rounds and idle windows, the bursty
+load the governor is for).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --batch 4
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --split auto
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+      --split auto --workload tenantA,tenantB --arrival onoff:64,0.5,0.5
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v2-lite-16b \
       --mesh multipod --shape decode_32k --dry-run
 """
@@ -35,6 +46,14 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=None,
                     help="serving rounds (default 2, or 6 with "
                          "--split auto)")
+    ap.add_argument("--workload", default=None,
+                    help="tenant prompt families, comma-joined (e.g. "
+                         "'tenantA,tenantB'); default: one demo family")
+    ap.add_argument("--arrival", default=None,
+                    help="per-round arrival process: det:R | poisson:R | "
+                         "mmpp:Ra,Rb,Ta,Tb | onoff:R,Ton,Toff (R in "
+                         "requests/second of schedule time; default: "
+                         "fixed --batch per round)")
     ap.add_argument("--mesh", choices=("host", "pod", "multipod"),
                     default="host")
     ap.add_argument("--shape", default="decode_32k")
@@ -80,22 +99,45 @@ def main() -> None:
                  max_len=args.prompt_len + args.max_new + 8,
                  morpheus=not args.no_morpheus, pool=pool)
     if args.split == "auto":
-        from repro.runtime import ServingGovernor
-        governor = ServingGovernor(eng.pool)
+        from repro.runtime import SERVING_GCFG, ServingGovernor
+        # the conservative preset: idle windows and bursty rounds swing
+        # the per-tick signature, which thrashes the default config
+        governor = ServingGovernor(eng.pool, gcfg=SERVING_GCFG)
         print(f"governor: candidates {governor.gov.candidates}, starting "
               f"at {eng.pool.cfg.num_cache_chips} cache chips")
     prompt = [(5 * j + 11) % 89 + 1 for j in range(args.prompt_len)]
     rounds = args.rounds or (6 if governor else 2)
-    for rnd in range(rounds):
+    if args.workload or args.arrival:
+        from repro.workloads.serving import round_requests
+        sched = round_requests(args.workload or "demo",
+                               args.arrival or f"det:{args.batch}",
+                               rounds, args.batch, args.prompt_len)
+    else:
+        sched = [[("demo", prompt)] * args.batch for _ in range(rounds)]
+    rid = 0
+    for rnd, batch in enumerate(sched):
         round_ = "cold" if rnd == 0 else f"warm{rnd}"
-        reqs = [Request(rid=i, prompt=prompt, max_new_tokens=args.max_new)
-                for i in range(args.batch)]
+        if not batch:
+            print(f"[{round_}] idle window (no arrivals)")
+            if governor is not None:
+                from repro.runtime import describe_tick
+                print("  " + describe_tick(governor.tick()))
+            continue
+        reqs = [Request(rid=rid + i, prompt=toks,
+                        max_new_tokens=args.max_new)
+                for i, (_, toks) in enumerate(batch)]
+        rid += len(reqs)
+        from repro.workloads.serving import batch_mix
+        mix = batch_mix(batch)
         t0 = time.time()
         rep = eng.run(reqs)
         dt = time.time() - t0
+        tenant_note = "" if len(mix) == 1 and "demo" in mix else \
+            " | tenants " + "+".join(f"{k}:{v}" for k, v in mix.items())
         print(f"[{round_}] {rep.generated} tokens in {dt:.2f}s "
               f"({rep.generated / dt:.1f} tok/s) | prefix pages reused "
-              f"{rep.pages_reused}, backing fetches {rep.pages_fetched}")
+              f"{rep.pages_reused}, backing fetches {rep.pages_fetched}"
+              f"{tenant_note}")
         if governor is not None:
             from repro.runtime import describe_tick
             print("  " + describe_tick(governor.tick()))

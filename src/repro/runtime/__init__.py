@@ -15,8 +15,9 @@ be in cache mode for the work arriving *right now*?
   * ``telemetry`` — per-epoch ring-buffer log with JSON/CSV export,
     consumed by ``tools/bench_runtime.py`` and ``benchmarks/fig_online``.
 """
-from .governor import (Governor, GovernorConfig, OnlineResult,  # noqa: F401
-                       ServingGovernor, candidates_for, demo_pool,
-                       describe_tick, simulate_online)
+from .governor import (SERVING_GCFG, Governor,  # noqa: F401
+                       GovernorConfig, OnlineResult, ServingGovernor,
+                       candidates_for, demo_pool, describe_tick,
+                       simulate_online)
 from .stream import EpochStream, HandoffReport, handoff  # noqa: F401
 from .telemetry import EpochRecord, TelemetryLog  # noqa: F401

@@ -33,6 +33,7 @@ from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core import cache_sim as cs
@@ -79,7 +80,30 @@ class GovernorConfig:
     # the observable signature (hit rate) at the SAME split flags a phase
     # shift even when the reward doesn't move.
     signature_threshold: float = 0.15
+    # Per-phase memory (CABA-style): phases are fingerprinted by their
+    # observable signature quantized into ``phase_bins`` buckets; when a
+    # shift lands in a bucket seen before, the governor jumps straight to
+    # the split it had converged to there instead of re-climbing the
+    # ladder.  The jump is still a normal transition (flush + warm-up),
+    # and a wrong table entry self-corrects: estimates restart fresh, so
+    # greedy moves walk away if the remembered split no longer wins.
+    phase_memory: bool = True
+    phase_bins: int = 6
     seed: int = 0
+
+
+# Conservative preset for bursty multi-tenant replay (fig_serving, the
+# serving launchers): under a bursty arrival process the per-epoch mix
+# composition swings constantly, so the default config's eager phase
+# resets + hint probing thrash between splits on a *stationary* tenant
+# mix.  This preset damps both — wider surprise thresholds, rarer and
+# once-refuted-then-dropped hint probes — trading reaction speed for
+# stability; measured on cfd+kmeans under MMPP it converges to the
+# offline-best split with a bounded (<10%) adaptation tax.
+SERVING_GCFG = GovernorConfig(
+    hysteresis=3, min_gain=0.08, epsilon=0.15, epsilon_min=0.03,
+    phase_threshold=0.5, signature_threshold=0.35,
+    hint_stale_after=40, hint_max_strikes=1)
 
 
 class Governor:
@@ -111,10 +135,18 @@ class Governor:
         self.hint = 0
         self.hint_strikes: Dict[int, int] = {}   # direction -> refutations
         self._probe: Optional[Tuple[int, float]] = None  # (dir, origin est)
+        self.phase_table: Dict[int, int] = {}    # sig bucket -> best index
+        self._phase_key: Optional[int] = None    # current phase's bucket
+        self._jumped = False
         self.epoch = 0
         self.switches = 0
         self.phase_shifts = 0
+        self.phase_jumps = 0                     # re-entries served by memory
         self.last_switched = False
+
+    def _sig_bucket(self, signature: float) -> int:
+        b = self.cfg.phase_bins
+        return min(b - 1, max(0, int(float(signature) * b)))
 
     @property
     def current(self):
@@ -161,7 +193,14 @@ class Governor:
             shifted = prev_sig is not None and \
                 abs(signature - prev_sig) > self.cfg.signature_threshold
         if shifted:
-            # the workload moved under us: every estimate is stale
+            # the workload moved under us: every estimate is stale.  Before
+            # discarding them, remember where the *departing* phase had
+            # converged — if its signature bucket comes back, decide() can
+            # jump straight there instead of re-climbing (CABA-style).
+            if self.cfg.phase_memory and self._phase_key is not None \
+                    and self.est:
+                self.phase_table[self._phase_key] = \
+                    max(self.est, key=lambda j: self.est[j])
             self.est = {}
             self.sig = {}
             self.hint_strikes = {}
@@ -175,6 +214,20 @@ class Governor:
         else:
             a = self.cfg.ema_up if reward >= prev else self.cfg.ema_down
             self.est[self._i] = (1.0 - a) * prev + a * reward
+        if shifted and self.cfg.phase_memory and signature is not None:
+            known = self.phase_table.get(self._sig_bucket(signature))
+            if known is not None and known != self._i:
+                # revisit of a remembered phase: jump to its best split
+                self._i = known
+                self.dwell = 0
+                self.warm_left = self.cfg.warm_epochs
+                self.measured = False
+                self._probe = None
+                self.switches += 1
+                self.phase_jumps += 1
+                self._jumped = True
+        if signature is not None:
+            self._phase_key = self._sig_bucket(signature)
 
     # ------------------------------------------------------------- decide
     def _neighbors(self) -> List[int]:
@@ -183,7 +236,8 @@ class Governor:
 
     def decide(self):
         """Choose the split for the next epoch (may equal ``current``)."""
-        self.last_switched = False
+        self.last_switched = self._jumped   # phase-memory jump in observe()
+        self._jumped = False
         self.dwell += 1
         # never move before this visit has recorded at least one measured
         # (post-warm-up) epoch — otherwise a visit teaches nothing
@@ -275,7 +329,23 @@ class ServingGovernor:
         delta = self.pool.stats - self._last
         self._last = self.pool.stats
         tel = self.pool.telemetry()
-        lookups = max(delta.lookups, 1)
+        if delta.lookups == 0:
+            # idle window: no requests means no observation — a zero
+            # signature/reward sample would fire the phase detector on
+            # every idle/busy boundary and wipe real estimates (the
+            # simulator path merges near-empty epochs for the same
+            # reason, arrivals.epochs_by_time)
+            rec = {"epoch": self.epoch, "chips": chips, "lookups": 0,
+                   "idle": True, "ns_per_lookup": 0.0,
+                   "hit_rate_interval": 0.0,
+                   "ext_occupancy": tel["ext_occupancy"],
+                   "pred_accuracy": tel["pred_accuracy"], "reward": 0.0,
+                   "hint": 0, "new_chips": chips, "switched": False,
+                   "flushed_pages": 0, "epsilon": self.gov.eps}
+            self.history.append(rec)
+            self.epoch += 1
+            return rec
+        lookups = delta.lookups
         ns_per = delta.time_ns / lookups
         reward = -(ns_per + self.chip_cost_ns * chips)
         # bottleneck hint, in chip direction (+1 = provision more chips):
@@ -319,6 +389,9 @@ def demo_pool(num_cache_chips: int):
 
 def describe_tick(rec: Dict) -> str:
     """One-line human rendering of a ``ServingGovernor.tick`` record."""
+    if rec.get("idle"):
+        return (f"governor epoch {rec['epoch']}: chips {rec['chips']} "
+                f"held (idle window, no lookups)")
     s = (f"governor epoch {rec['epoch']}: chips {rec['chips']} -> "
          f"{rec['new_chips']} | {rec['ns_per_lookup']:.0f} ns/lookup | "
          f"hit {rec['hit_rate_interval']:.2f} | hint {rec['hint']:+d}")
@@ -357,15 +430,29 @@ class OnlineResult:
     switches: int
     final_split: Split            # governor's choice when the run ended
     converged_split: Split        # most-dwelt split post burn-in
+    # multi-tenant replay only: exact per-tenant Stats (numpy leaves; the
+    # integer counters sum to ``stats`` up to the flush charges, which are
+    # attributed to the tenant owning each flushed block)
+    tenant_stats: Optional[Dict[str, Stats]] = None
+
+    def tenant_hit_rates(self) -> Dict[str, float]:
+        """Per-tenant LLC hit rates (multi-tenant replay only)."""
+        if not self.tenant_stats:
+            return {}
+        from ..workloads.tenancy import hit_rate
+        return {name: hit_rate(s) for name, s in self.tenant_stats.items()}
 
     def summary(self) -> Dict:
-        return {"system": self.system, "phases": self.phases,
-                "epochs": len(self.records), "ipc": self.ipc,
-                "steady_ipc": self.steady_ipc,
-                "converged_ipc": self.converged_ipc,
-                "switches": self.switches,
-                "converged_split": self.converged_split,
-                "final_split": self.final_split}
+        out = {"system": self.system, "phases": self.phases,
+               "epochs": len(self.records), "ipc": self.ipc,
+               "steady_ipc": self.steady_ipc,
+               "converged_ipc": self.converged_ipc,
+               "switches": self.switches,
+               "converged_split": self.converged_split,
+               "final_split": self.final_split}
+        if self.tenant_stats:
+            out["tenant_hit_rates"] = self.tenant_hit_rates()
+        return out
 
 
 def _epoch_telemetry(cfg, state, delta: Stats) -> Tuple[float, float, float]:
@@ -384,8 +471,10 @@ def _epoch_telemetry(cfg, state, delta: Stats) -> Tuple[float, float, float]:
     return occupancy, acc, saved
 
 
-def simulate_online(phases: Sequence[str] | str, system: str, *,
+def simulate_online(phases, system: str, *,
                     length: int = 60_000, epoch_len: int = 3_000,
+                    window_s: Optional[float] = None,
+                    target_epoch: Optional[int] = None,
                     seed: int = 0, backend: str | None = None,
                     gcfg: GovernorConfig = GovernorConfig(),
                     candidates: Optional[Sequence[Split]] = None,
@@ -395,22 +484,54 @@ def simulate_online(phases: Sequence[str] | str, system: str, *,
                     log: Optional[TelemetryLog] = None) -> OnlineResult:
     """Run the online Morpheus runtime against the trace simulator.
 
-    ``phases`` is one app or a sequence of apps replayed back to back
-    (equal shares of ``length``); each phase keeps its own working set,
-    so phase boundaries shift the request mix under the governor.  One
-    trace is generated per candidate compute-core count (the request
-    interleaving depends on how many cores compute) and the stream reads
-    the current split's trace — exactly the feedback a real mode switch
-    has on the LLC stream.
+    ``phases`` is one app, a sequence of apps replayed back to back
+    (equal shares of ``length``), or a composed multi-tenant
+    ``repro.workloads.Workload``.
+
+    In the *phased* form each phase keeps its own working set, so phase
+    boundaries shift the request mix under the governor; one trace is
+    generated per candidate compute-core count (the request interleaving
+    depends on how many cores compute) and the stream reads the current
+    split's trace — exactly the feedback a real mode switch has on the
+    LLC stream.
+
+    In the *workload* form the request stream is a recorded artifact
+    (tenant traces merged by arrival time): it does not re-interleave
+    when the split changes, epochs follow the workload's arrival
+    timestamps (``window_s``/``target_epoch``: variable-size epochs under
+    bursty arrivals; default fixed ``epoch_len`` chunks), the reward model
+    uses the epoch's exact request-weighted instruction mix, and the
+    engine carries one masked state row per tenant so the result reports
+    exact per-tenant Stats (``OnlineResult.tenant_stats``) — including
+    flush charges attributed to the tenant owning each flushed block.
 
     ``fixed_split`` disables the governor (static-baseline mode).
     Aggregate IPC is time-weighted over epochs; ``steady_ipc`` skips the
     first ``burn_in`` epochs (default: one working-set fill).
     """
-    phases = [phases] if isinstance(phases, str) else list(phases)
+    workload = phases if hasattr(phases, "tenants") else None
     spec = cs.SYSTEMS[system]
-    primary = next((a for a in phases if tr.WORKLOADS[a].memory_bound),
-                   phases[0])
+    ws_scale = 1.0 / cs.SIM_SCALE
+    if workload is not None:
+        wl = workload
+        length = len(wl)
+        phase_names = [t.name for t in wl.tenants]
+        primary = wl.primary_app
+        n_tenants = len(wl.tenants)
+        if window_s is None and target_epoch is None:
+            epoch_bounds = wl.epoch_bounds(epoch_len=epoch_len)
+        else:
+            epoch_bounds = wl.epoch_bounds(window_s=window_s,
+                                           target_epoch=target_epoch)
+        masks = wl.tenant_masks()
+    else:
+        phases = [phases] if isinstance(phases, str) else list(phases)
+        phase_names = phases
+        primary = next((a for a in phases if tr.WORKLOADS[a].memory_bound),
+                       phases[0])
+        n_tenants = 1
+        from ..workloads.arrivals import epochs_by_count
+        epoch_bounds = epochs_by_count(length, epoch_len)
     if fixed_split is not None:
         cands: List[Split] = [tuple(fixed_split)]        # type: ignore
         gcfg = replace(gcfg, epsilon=0.0, epsilon_min=0.0)
@@ -420,41 +541,48 @@ def simulate_online(phases: Sequence[str] | str, system: str, *,
         cands = candidates_for(primary, system, length=length)
     gov = Governor(cands, gcfg)
 
-    # one trace per candidate compute-core count, phase-concatenated
-    ws_scale = 1.0 / cs.SIM_SCALE
-    trace_of = {}
-    for nc in sorted({c[0] for c in cands}):
-        trace_of[nc] = tr.generate_phased(phases, n_cores=nc, length=length,
-                                          seed=seed, ws_scale=ws_scale)
-    bounds = tr.phase_bounds(len(phases), length)
+    if workload is None:
+        # one trace per candidate compute-core count, phase-concatenated
+        trace_of = {}
+        for nc in sorted({c[0] for c in cands}):
+            trace_of[nc] = tr.generate_phased(phases, n_cores=nc,
+                                              length=length, seed=seed,
+                                              ws_scale=ws_scale)
+        bounds = tr.phase_bounds(len(phases), length)
 
     log = log if log is not None else TelemetryLog()
     records: List[EpochRecord] = []
     nc, nk = gov.current
     cfg = cs.build_config(spec, nk)
-    state = engine.init_state(cfg, 1)
+    state = engine.init_state(cfg, n_tenants)
     total_stats = None
     pending_flush = None     # last transition's flush cost -> next epoch
-    pos = 0
     epoch_i = 0
     t_all = 0.0
     insts_all = 0.0
     t_steady = 0.0
     insts_steady = 0.0
+    mean_epoch = max(length // max(len(epoch_bounds), 1), 1)
     if burn_in is None:
         ws_blocks = tr.WORKLOADS[primary].working_set_bytes \
             // cs.SIM_SCALE // tr.BLOCK_BYTES
-        burn_in = max(1, int(np.ceil(ws_blocks / epoch_len)))
+        burn_in = max(1, int(np.ceil(ws_blocks / mean_epoch)))
 
-    while pos < length:
+    for lo, hi in epoch_bounds:
         nc, nk = gov.current
         cfg = cs.build_config(spec, nk)
-        addrs, writes, levels = trace_of[nc]
-        hi = min(pos + epoch_len, length)
-        pt = engine.pack(cfg, [(addrs[pos:hi], writes[pos:hi],
-                                levels[pos:hi], 0)], pos0=[pos])
+        if workload is not None:
+            addrs, writes, levels = wl.addrs, wl.writes, wl.levels
+            count = [m[lo:hi] for m in masks] if n_tenants > 1 else None
+        else:
+            addrs, writes, levels = trace_of[nc]
+            count = None
+        pt = engine.pack(cfg, [(addrs[lo:hi], writes[lo:hi],
+                                levels[lo:hi], 0)] * n_tenants,
+                         pos0=[lo] * n_tenants, count=count)
         state, delta_b = engine.advance_packed(cfg, pt, state, backend)
-        delta = jax.tree.map(lambda x: np.asarray(x[0]), delta_b)
+        delta_rows = jax.tree.map(np.asarray, delta_b)
+        delta = jax.tree.map(lambda x: x.sum(axis=0), delta_rows)
         if pending_flush is not None:
             # the previous transition's flush writebacks are real traffic:
             # charge them to this epoch so the reward, exec time and the
@@ -464,12 +592,19 @@ def simulate_online(phases: Sequence[str] | str, system: str, *,
             pending_flush = None
         total_stats = delta if total_stats is None else \
             jax.tree.map(np.add, total_stats, delta)
-        n_req = hi - pos
-        app = phases[int(np.searchsorted(bounds, pos, side="right"))]
-        rr = cs._finalize(cs.RunPoint(app, system, nc, nk, n_req, seed),
-                          nc, nk, n_req, delta)
+        n_req = hi - lo
+        if workload is not None:
+            app = wl.app_at(lo, hi)
+            insts = wl.instructions(lo, hi)
+            rr = cs._finalize(cs.RunPoint(app, system, nc, nk, n_req, seed),
+                              nc, nk, n_req, delta, insts=insts,
+                              knee=wl.contention_knee(lo, hi))
+        else:
+            app = phases[int(np.searchsorted(bounds, lo, side="right"))]
+            insts = tr.instructions_for(app, n_req)
+            rr = cs._finalize(cs.RunPoint(app, system, nc, nk, n_req, seed),
+                              nc, nk, n_req, delta)
         reward = rr.ipc
-        insts = tr.instructions_for(app, n_req)
         t_all += rr.exec_time_s
         insts_all += insts
         if epoch_i >= burn_in:
@@ -497,10 +632,10 @@ def simulate_online(phases: Sequence[str] | str, system: str, *,
             if new_cfg != cfg:
                 state, rep = rt_stream.handoff(cfg, state, new_cfg,
                                                migrate=warm_handoff)
-                flush_wbs = rep.flush_writebacks
+                state = _attribute_flush(state, rep, workload, cfg)
+                flush_wbs = rep.flush_writebacks // n_tenants
                 if flush_wbs:
-                    e_dram = (tr.BLOCK_BYTES
-                              * cfg.costs.dram.energy_pJ_per_B * 1e-3)
+                    e_dram = rt_stream.flush_energy_nJ_per_block(cfg)
                     z = jax.tree.map(
                         lambda x: np.zeros((), np.asarray(x).dtype), delta)
                     pending_flush = z._replace(
@@ -508,15 +643,17 @@ def simulate_online(phases: Sequence[str] | str, system: str, *,
                         dram_bytes=np.float32(flush_wbs * tr.BLOCK_BYTES),
                         energy_nJ=np.float32(flush_wbs * e_dram))
         rec = EpochRecord(
-            epoch=epoch_i, pos=pos, app=app, n_compute=nc, n_cache=nk,
+            epoch=epoch_i, pos=lo, app=app, n_compute=nc, n_cache=nk,
             requests=n_req,
             hit_rate=rr.llc_hit_rate, ext_occupancy=occ, pred_accuracy=acc,
             bytes_saved=saved, ipc=rr.ipc, exec_time_s=rr.exec_time_s,
             reward=reward, switched=gov.last_switched,
-            flush_writebacks=flush_wbs, epsilon=eps)
+            flush_writebacks=flush_wbs, epsilon=eps,
+            tenants="" if workload is None else "|".join(
+                f"{t.name}:{c}" for t, c in
+                zip(wl.tenants, wl.tenant_counts(lo, hi))))
         records.append(rec)
         log.append(rec)
-        pos = hi
         epoch_i += 1
 
     freq = cs.FREQ_GHZ * 1e9
@@ -528,12 +665,49 @@ def simulate_online(phases: Sequence[str] | str, system: str, *,
     conv_recs = [r for r in post
                  if (r.n_compute, r.n_cache) == converged_split]
     t_conv = sum(r.exec_time_s for r in conv_recs)
-    insts_conv = sum(tr.instructions_for(r.app, r.requests)
-                     for r in conv_recs)
+    # per-epoch ipc = insts / (t * freq), so insts = ipc * t * freq: exact
+    # for both the phased and the mixed-tenant reward paths
+    insts_conv = sum(r.ipc * r.exec_time_s for r in conv_recs) * freq
     converged = insts_conv / (t_conv * freq) if t_conv > 0 else steady
+    tenant_stats = None
+    if workload is not None:
+        tenant_stats = {t.name: jax.tree.map(lambda x, k=k: np.asarray(x[k]),
+                                             state.stats)
+                        for k, t in enumerate(wl.tenants)}
     return OnlineResult(
-        system=system, phases=phases, records=records, log=log,
+        system=system, phases=phase_names, records=records, log=log,
         stats=total_stats, ipc=ipc, steady_ipc=steady,
         converged_ipc=converged, exec_time_s=t_all,
         switches=gov.switches, final_split=gov.current,
-        converged_split=converged_split)
+        converged_split=converged_split, tenant_stats=tenant_stats)
+
+
+def _attribute_flush(state, rep: rt_stream.HandoffReport, workload,
+                     cfg) -> "engine.EngineState":
+    """Re-attribute a handoff's flush charges to the owning tenants.
+
+    ``handoff`` charged EVERY state row the full replica flush (the rows
+    replay identical requests, so each sees the same resident blocks).
+    For a K-tenant state the global view must count the flush once, and
+    each tenant row should only pay for the dirty blocks in its own
+    address region — recoverable exactly because tenant regions are
+    disjoint (``addr // TENANT_STRIDE_BLOCKS``).
+    """
+    if workload is None or len(workload.tenants) <= 1 \
+            or rep.flush_writebacks == 0:
+        return state
+    from ..workloads.tenancy import TENANT_STRIDE_BLOCKS
+    k = len(workload.tenants)
+    per = rep.flush_writebacks // k          # identical rows: exact
+    tids = (np.asarray(rep.dropped_dirty_addr, np.uint64)
+            // np.uint64(TENANT_STRIDE_BLOCKS)).astype(np.int64)
+    wbs_k = np.bincount(tids, minlength=k)[:k].astype(np.int64)
+    corr = (per - wbs_k)                     # over-charge to remove per row
+    e_dram = rt_stream.flush_energy_nJ_per_block(cfg)
+    stats = jax.tree.map(lambda x: np.array(x), state.stats)
+    stats = stats._replace(
+        writebacks=(stats.writebacks - corr).astype(np.int32),
+        dram_bytes=(stats.dram_bytes
+                    - (corr * tr.BLOCK_BYTES)).astype(np.float32),
+        energy_nJ=(stats.energy_nJ - (corr * e_dram)).astype(np.float32))
+    return state._replace(stats=jax.tree.map(jnp.asarray, stats))

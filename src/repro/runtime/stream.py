@@ -20,9 +20,10 @@ preserving the predictor's no-false-negative invariant.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Dict, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,35 +34,88 @@ from ..core import controller as ctl
 from ..core import engine
 from ..core.compression import BLOCK_BYTES
 from ..core.controller import MorpheusConfig, Stats
-from ..core.engine import EngineState
+from ..core.engine import EngineState, PackedTraces
 from ..core.tag_store import LRU_MAX_INT
 
 
 class EpochStream:
-    """Resumable epoch-by-epoch replay of one trace under one config."""
+    """Resumable epoch-by-epoch replay of one trace under one config.
 
-    def __init__(self, cfg: MorpheusConfig, addrs, writes, levels, *,
-                 warmup: int = 0, epoch_len: int = 4096,
-                 backend: str | None = None,
+    The trace can be raw arrays (``EpochStream(cfg, addrs, writes,
+    levels)``) or a composed multi-tenant ``repro.workloads.Workload``
+    (``EpochStream(cfg, workload)``):
+
+      * a Workload brings its own epoching — fixed request counts
+        (``epoch_len``), wall-clock windows (``window_s``: variable-size
+        epochs under bursty arrivals) or a mean-size target
+        (``target_epoch``);
+      * with K tenants the engine state carries K batch rows replaying
+        the *same* requests under per-tenant count masks, so the rows'
+        state evolution is identical while their Stats partition exactly:
+        ``stats`` sums the rows (the global view), ``tenant_stats()``
+        returns the per-tenant split (bit-identical integer sum).
+
+    ``ring`` keeps up to that many upcoming epochs pre-packed and
+    device-resident: the per-epoch host packing happens ahead of the
+    dispatch loop and the stream never blocks on a device readback to
+    learn its own position (the position is mirrored on host), which is
+    the per-epoch overhead ``tools/bench_runtime.py`` measures.
+    """
+
+    def __init__(self, cfg: MorpheusConfig, addrs, writes=None, levels=None,
+                 *, warmup: int = 0, epoch_len: Optional[int] = 4096,
+                 window_s: Optional[float] = None,
+                 target_epoch: Optional[int] = None,
+                 backend: str | None = None, ring: int = 0,
                  state: Optional[EngineState] = None):
-        assert epoch_len > 0
         self.cfg = cfg
-        self.addrs = np.asarray(addrs, np.uint32)
-        self.writes = np.asarray(writes, bool)
-        self.levels = np.asarray(levels, np.int32)
+        self.workload = None
+        if writes is None and levels is None and hasattr(addrs, "tenants"):
+            wl = addrs
+            self.workload = wl
+            self.addrs = wl.addrs
+            self.writes = wl.writes
+            self.levels = wl.levels
+            if window_s is not None or target_epoch is not None:
+                epoch_len = None
+            self._bounds: Optional[List[Tuple[int, int]]] = wl.epoch_bounds(
+                epoch_len=epoch_len, window_s=window_s,
+                target_epoch=target_epoch)
+            self._masks = wl.tenant_masks()
+        else:
+            assert writes is not None and levels is not None
+            assert window_s is None and target_epoch is None, \
+                "raw traces have no timestamps; wall-clock epoching " \
+                "needs a workloads.Workload"
+            assert epoch_len and epoch_len > 0
+            self.addrs = np.asarray(addrs, np.uint32)
+            self.writes = np.asarray(writes, bool)
+            self.levels = np.asarray(levels, np.int32)
+            self._bounds = None
+            self._masks = [None]
         self.warmup = int(warmup)
-        self.epoch_len = int(epoch_len)
+        self.epoch_len = int(epoch_len) if epoch_len else 0
         self.backend = engine.resolve_backend(backend)
-        self.state = state if state is not None else engine.init_state(cfg, 1)
+        k = len(self._masks)
+        self.state = state if state is not None \
+            else engine.init_state(cfg, k)
+        assert int(self.state.pos.shape[0]) == k, \
+            f"state batch {self.state.pos.shape[0]} != tenant count {k}"
         # ``state.pos`` counts every request the state ever consumed —
         # possibly across earlier traces (warm handoff).  The stream's
-        # position within *this* trace is measured from the baseline.
-        self._base = int(self.state.pos[0])
+        # position within *this* trace is measured from the baseline and
+        # mirrored on host so stepping never forces a device readback.
+        self._base = int(np.asarray(self.state.pos)[0])
+        self._host_pos = 0
         self.epoch = 0
+        self.ring = int(ring)
+        self._ring: Deque[Tuple[int, int, PackedTraces]] = deque()
+        self._packed_to = 0
 
+    # ------------------------------------------------------------- basics
     @property
     def pos(self) -> int:
-        return int(self.state.pos[0]) - self._base
+        return self._host_pos
 
     @property
     def done(self) -> bool:
@@ -69,21 +123,69 @@ class EpochStream:
 
     @property
     def stats(self) -> Stats:
-        """Accumulated Stats so far (scalar leaves)."""
-        return jax.tree.map(lambda x: x[0], self.state.stats)
+        """Accumulated global Stats so far (scalar leaves; with K tenants
+        the per-tenant rows partition the requests, so their sum is the
+        global view)."""
+        if len(self._masks) == 1:
+            return jax.tree.map(lambda x: x[0], self.state.stats)
+        return jax.tree.map(lambda x: x.sum(axis=0), self.state.stats)
+
+    def tenant_stats(self) -> Dict[str, Stats]:
+        """Per-tenant accumulated Stats (workload mode only)."""
+        assert self.workload is not None, "raw-trace stream has no tenants"
+        return {t.name: jax.tree.map(lambda x, k=k: np.asarray(x[k]),
+                                     self.state.stats)
+                for k, t in enumerate(self.workload.tenants)}
+
+    # ----------------------------------------------------------- epoching
+    def _next_bound(self, lo: int) -> int:
+        if self._bounds is None:
+            return min(lo + self.epoch_len, len(self.addrs))
+        for b_lo, b_hi in self._bounds:
+            if b_lo <= lo < b_hi:
+                return b_hi
+        return len(self.addrs)
+
+    def _pack_epoch(self, lo: int, hi: int) -> PackedTraces:
+        k = len(self._masks)
+        sl = slice(lo, hi)
+        traces = [(self.addrs[sl], self.writes[sl], self.levels[sl],
+                   self.warmup)] * k
+        count = None
+        if self.workload is not None and k > 1:
+            count = [m[sl] for m in self._masks]
+        return engine.pack(self.cfg, traces, pos0=[lo] * k, count=count)
+
+    # --------------------------------------------------------------- ring
+    def _fill_ring(self) -> None:
+        """Pre-pack upcoming epochs and park them on device."""
+        if self._packed_to < self._host_pos:
+            self._packed_to = self._host_pos
+        while len(self._ring) < self.ring and \
+                self._packed_to < len(self.addrs):
+            lo = self._packed_to
+            hi = self._next_bound(lo)
+            pt = jax.tree.map(jnp.asarray, self._pack_epoch(lo, hi))
+            self._ring.append((lo, hi, pt))
+            self._packed_to = hi
 
     def step(self) -> Stats:
-        """Advance one epoch; returns this epoch's Stats delta."""
-        lo = self.pos
+        """Advance one epoch; returns this epoch's global Stats delta."""
+        lo = self._host_pos
         assert lo < len(self.addrs), "stream exhausted"
-        hi = min(lo + self.epoch_len, len(self.addrs))
-        pt = engine.pack(self.cfg,
-                         [(self.addrs[lo:hi], self.writes[lo:hi],
-                           self.levels[lo:hi], self.warmup)], pos0=[lo])
+        if self.ring:
+            self._fill_ring()
+            lo, hi, pt = self._ring.popleft()
+        else:
+            hi = self._next_bound(lo)
+            pt = self._pack_epoch(lo, hi)
         self.state, delta = engine.advance_packed(self.cfg, pt, self.state,
                                                   self.backend)
         self.epoch += 1
-        return jax.tree.map(lambda x: x[0], delta)
+        self._host_pos = hi
+        if len(self._masks) == 1:
+            return jax.tree.map(lambda x: x[0], delta)
+        return jax.tree.map(lambda x: x.sum(axis=0), delta)
 
     def run(self) -> Stats:
         """Drain the remaining epochs; returns the accumulated Stats."""
@@ -99,6 +201,10 @@ class EpochStream:
     def restore(self, state: EngineState) -> None:
         """Resume from a previously captured snapshot."""
         self.state = jax.tree.map(jnp.asarray, state)
+        self._host_pos = int(np.asarray(state.pos)[0]) - self._base
+        # pre-packed epochs may not match the restored position: drop them
+        self._ring.clear()
+        self._packed_to = self._host_pos
 
 
 def save_state(path: str | Path, state: EngineState) -> Path:
@@ -122,6 +228,18 @@ def load_state(path: str | Path, cfg: MorpheusConfig,
 
 # ------------------------------------------------------- mode transitions
 
+def flush_energy_nJ_per_block(cfg: MorpheusConfig) -> float:
+    """DRAM-writeback energy charged per flushed dirty block.
+
+    One definition on purpose: ``handoff`` charges it per state row, the
+    online driver charges it on the next epoch's delta, and the
+    multi-tenant replayer *un*-charges it per tenant row — the per-tenant
+    sum-to-global invariant holds only while all three sites use
+    bit-identical arithmetic.
+    """
+    return BLOCK_BYTES * cfg.costs.dram.energy_pJ_per_B * 1e-3
+
+
 @dataclass(frozen=True)
 class HandoffReport:
     """What a mode transition did to the resident working set."""
@@ -130,6 +248,10 @@ class HandoffReport:
     dropped: int             # blocks flushed (region moved / no room)
     flush_writebacks: int    # of those, dirty blocks written back
     flushed_bytes: int       # writeback DRAM traffic in bytes
+    # full addresses of trace 0's flushed dirty blocks — the multi-tenant
+    # replayer maps them back to tenants (addr // TENANT_STRIDE_BLOCKS)
+    # to attribute the flush cost to the tenant that owned the block
+    dropped_dirty_addr: np.ndarray = None  # type: ignore[assignment]
 
 
 def extract_blocks(cfg: MorpheusConfig, state: EngineState,
@@ -211,6 +333,7 @@ def handoff(old_cfg: MorpheusConfig, state: EngineState,
     words = ctl.BLOOM_WORDS
     resident = migrated = dropped = 0
     wbs_t = np.zeros(b, np.int32)
+    drop_dirty0 = np.zeros(0, np.uint64)
 
     for t in range(b):
         blocks = extract_blocks(old_cfg, state, t)
@@ -221,6 +344,8 @@ def handoff(old_cfg: MorpheusConfig, state: EngineState,
         if not migrate:
             dropped += n
             wbs_t[t] += int(blocks["dirty"].sum())
+            if t == 0:
+                drop_dirty0 = blocks["addr"][blocks["dirty"]]
             continue
         # most-recent first; tie-break on address for determinism
         order = np.lexsort((blocks["addr"], -blocks["recency"]))
@@ -271,11 +396,13 @@ def handoff(old_cfg: MorpheusConfig, state: EngineState,
         migrated += int(kept.sum())
         dropped += int((~kept).sum())
         wbs_t[t] += int(dirty[~kept].sum())
+        if t == 0:
+            drop_dirty0 = addr[~kept & dirty]
 
     wbs = int(wbs_t.sum())
     flushed_bytes = wbs * BLOCK_BYTES
     # charge the flush on the carried stats (writeback DRAM traffic)
-    e_dram = BLOCK_BYTES * old_cfg.costs.dram.energy_pJ_per_B * 1e-3
+    e_dram = flush_energy_nJ_per_block(old_cfg)
     stats = jax.tree.map(lambda x: np.array(x), state.stats)
     stats = stats._replace(
         writebacks=stats.writebacks + wbs_t,
@@ -286,4 +413,4 @@ def handoff(old_cfg: MorpheusConfig, state: EngineState,
                       stats=jax.tree.map(jnp.asarray, stats),
                       pos=jnp.asarray(np.asarray(state.pos)))
     return new, HandoffReport(resident, migrated, dropped, wbs,
-                              flushed_bytes)
+                              flushed_bytes, drop_dirty0)

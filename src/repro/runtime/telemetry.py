@@ -24,6 +24,8 @@ Schema (one row per epoch, documented in docs/runtime.md):
   switched     True iff the governor changed the split AFTER this epoch
   flush_writebacks  dirty blocks flushed by that reconfiguration
   epsilon      governor exploration rate when the epoch was decided
+  tenants      multi-tenant replay: per-tenant request counts this epoch
+               ("name:count|name:count"; empty for single-trace runs)
 """
 from __future__ import annotations
 
@@ -52,6 +54,9 @@ class EpochRecord:
     switched: bool = False
     flush_writebacks: int = 0
     epsilon: float = 0.0
+    # multi-tenant replay: per-tenant request counts this epoch, rendered
+    # "name:count|name:count" (empty for single-trace runs)
+    tenants: str = ""
 
     def to_dict(self) -> Dict:
         return asdict(self)

@@ -1,0 +1,68 @@
+"""Workload subsystem — every way a request stream can be produced.
+
+The simulator core answers "what does this trace do under this config";
+this package owns where traces come from and how they arrive:
+
+  * ``synthetic`` — the Table-2 parameterized per-app generators (moved
+    here from ``core/traces.py``, which remains a compatibility shim);
+  * ``corpus``    — file-backed ``.npz`` trace corpus with import/export/
+    validate, so externally captured memory traces can be replayed;
+  * ``sources``   — the pluggable ``TraceSource`` protocol + registry
+    (``synthetic:<app>``, ``phased:<a>+<b>``, ``corpus:<path>``);
+  * ``arrivals``  — arrival processes (deterministic, Poisson, bursty
+    two-state MMPP / on-off) that timestamp requests and chunk them into
+    variable-size epochs;
+  * ``tenancy``   — the multi-tenant composer: K tenants' traces
+    interleaved by arrival time with per-tenant address-space tagging and
+    per-tenant Stats attribution, producing the ``Workload`` object the
+    online runtime (``runtime/stream.py`` / ``runtime/governor.py``)
+    replays.
+
+This ``__init__`` is deliberately lazy (PEP 562): ``core/traces.py``
+imports ``workloads.synthetic`` at module level, so eagerly importing the
+composer here (which pulls in the engine, which pulls in ``core``) would
+create an import cycle.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    # synthetic
+    "AppSpec": "synthetic", "WORKLOADS": "synthetic",
+    "MEMORY_BOUND": "synthetic", "COMPUTE_BOUND": "synthetic",
+    "generate": "synthetic", "generate_phased": "synthetic",
+    # sources
+    "TraceSource": "sources", "SyntheticSource": "sources",
+    "PhasedSource": "sources", "CorpusSource": "sources",
+    "make_source": "sources", "register_source": "sources",
+    "SOURCE_KINDS": "sources",
+    # corpus
+    "save_trace": "corpus", "load_trace": "corpus",
+    "validate_trace": "corpus", "trace_info": "corpus",
+    # arrivals
+    "ArrivalProcess": "arrivals", "Deterministic": "arrivals",
+    "Poisson": "arrivals", "MMPP": "arrivals", "make_arrival": "arrivals",
+    "empirical_rate": "arrivals", "burstiness": "arrivals",
+    "epochs_by_time": "arrivals",
+    # tenancy
+    "Tenant": "tenancy", "Workload": "tenancy", "compose": "tenancy",
+    "make_workload": "tenancy", "attribute_stats": "tenancy",
+    "hit_rate": "tenancy", "TENANT_STRIDE_BLOCKS": "tenancy",
+    # serving-side helpers
+    "round_sizes": "serving", "tenant_prompts": "serving",
+    "round_requests": "serving",
+}
+
+_SUBMODULES = ("arrivals", "corpus", "serving", "sources", "synthetic",
+               "tenancy")
+
+__all__ = sorted(_EXPORTS) + list(_SUBMODULES)
+
+
+def __getattr__(name: str):
+    import importlib
+    if name in _EXPORTS:
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        return getattr(mod, name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,91 @@
+"""Serving-side workload helpers: bursty round sizes + tenant prompts.
+
+The trace-level composer (``tenancy``) drives the *simulator*; this
+module drives the *serving engine* (``launch/serve.py`` /
+``examples/serve_morpheus.py``): the ``--arrival`` knob maps an arrival
+process onto per-round request counts (a round models one scheduling
+window — under an on-off process some rounds are packed and some idle),
+and the ``--workload`` knob names K tenant prompt families whose
+requests interleave within each round, so the page pool and the
+``ServingGovernor`` see contended multi-tenant traffic instead of one
+repeated demo batch.
+
+The helpers return plain data (counts, token lists); the launchers build
+``serving.Request`` objects themselves — workloads stays below serving
+in the layering.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from . import arrivals as arrlib
+
+
+def round_sizes(arrival: str, rounds: int, mean_batch: int,
+                seed: int = 0) -> List[int]:
+    """Requests arriving in each of ``rounds`` equal scheduling windows.
+
+    Samples ``rounds * mean_batch`` arrivals from the process and bins
+    them into ``rounds`` windows spanning the whole stream: a
+    deterministic process gives ``mean_batch`` per round, an on-off/MMPP
+    process gives bursts and idle windows (count 0 = nothing arrived).
+    """
+    assert rounds > 0 and mean_batch > 0
+    proc = arrlib.make_arrival(arrival)
+    n = rounds * mean_batch
+    ts = np.asarray(proc.timestamps(n, seed=seed), np.float64)
+    span = float(ts[-1] - ts[0])
+    if span <= 0:
+        return [mean_batch] * rounds
+    win = np.minimum(((ts - ts[0]) / span * rounds).astype(np.int64),
+                     rounds - 1)
+    return np.bincount(win, minlength=rounds).tolist()
+
+
+def tenant_prompts(workload: str, prompt_len: int
+                   ) -> List[Tuple[str, List[int]]]:
+    """Per-tenant (name, prompt tokens) families for a '+/,'-joined spec.
+
+    Each tenant gets a distinct deterministic token family, so its pages
+    hash to a distinct prefix population in the pool: tenants *share* the
+    cache tiers but never each other's pages — the serving analogue of
+    the composer's per-tenant address-space tagging.
+    """
+    names = [s.strip() for s in workload.replace("+", ",").split(",")
+             if s.strip()]
+    assert names, f"empty workload spec {workload!r}"
+    out = []
+    for k, name in enumerate(names):
+        tokens = [((7 + 2 * k) * j + 3 + 13 * k) % 97 + 1
+                  for j in range(prompt_len)]
+        out.append((name, tokens))
+    return out
+
+
+def batch_mix(batch) -> dict:
+    """{tenant name -> request count} of one round's (name, tokens) batch
+    (shared by both serving launchers' per-round reporting)."""
+    mix: dict = {}
+    for name, _ in batch:
+        mix[name] = mix.get(name, 0) + 1
+    return mix
+
+
+def round_requests(workload: str, arrival: str, rounds: int,
+                   mean_batch: int, prompt_len: int, *, seed: int = 0
+                   ) -> List[List[Tuple[str, List[int]]]]:
+    """Fully scheduled rounds: for each round, the (tenant, prompt) of
+    every arriving request (tenants round-robin within the round)."""
+    fams = tenant_prompts(workload, prompt_len)
+    sizes = round_sizes(arrival, rounds, mean_batch, seed=seed)
+    sched = []
+    k = 0
+    for size in sizes:
+        batch = []
+        for _ in range(size):
+            batch.append(fams[k % len(fams)])
+            k += 1
+        sched.append(batch)
+    return sched

@@ -305,6 +305,50 @@ def test_governor_phase_shift_reconverges():
     assert gov.phase_shifts >= 1
 
 
+def test_governor_phase_memory_jumps_on_revisit():
+    """Per-phase memory: re-entering a previously seen phase (same
+    signature bucket) jumps straight to that phase's remembered best
+    split instead of re-climbing the ladder."""
+    cands = list(range(6))
+    gov = Governor(cands, GovernorConfig(seed=2, warm_epochs=0))
+    reward_a = lambda c: 50.0 - 5 * c      # phase A: best at 0
+    reward_b = lambda c: 30.0 + 5 * c      # phase B: best at 5
+    sig_a, sig_b = 0.15, 0.90              # distinct signature buckets
+
+    def drive(fn, sig, n):
+        for _ in range(n):
+            gov.observe(fn(gov.current), hint=0, signature=sig)
+            gov.decide()
+
+    drive(reward_a, sig_a, 40)
+    assert gov.current <= 1, gov.est
+    drive(reward_b, sig_b, 60)
+    assert gov.current >= 4, gov.est
+    # revisit phase A: the first shifted observation must jump via the
+    # phase table — within a couple of epochs, not another full climb
+    shifts = gov.phase_shifts
+    drive(reward_a, sig_a, 3)
+    assert gov.phase_shifts == shifts + 1
+    assert gov.phase_jumps >= 1, "phase memory never fired"
+    assert gov.current <= 1, (gov.current, gov.phase_table)
+
+
+def test_governor_phase_memory_disabled_is_inert():
+    """phase_memory=False preserves the old clear-and-reclimb behaviour
+    (no jumps recorded)."""
+    cands = list(range(6))
+    gov = Governor(cands, GovernorConfig(seed=2, warm_epochs=0,
+                                         phase_memory=False))
+    for fn, sig in ((lambda c: 50.0 - 5 * c, 0.15),
+                    (lambda c: 30.0 + 5 * c, 0.90),
+                    (lambda c: 50.0 - 5 * c, 0.15)):
+        for _ in range(40):
+            gov.observe(fn(gov.current), hint=0, signature=sig)
+            gov.decide()
+    assert gov.phase_jumps == 0
+    assert not gov.phase_table
+
+
 def test_governor_hint_directs_exploration():
     """A persistent bottleneck hint makes the governor probe in that
     direction even when greedy estimates say stay."""

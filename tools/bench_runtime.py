@@ -6,7 +6,11 @@
 Part 1 times the epoch-streaming engine (``runtime.stream.EpochStream``)
 against one monolithic ``engine.simulate_parallel`` dispatch over the same
 trace, across epoch lengths, and checks the integer Stats are
-bit-identical (the ``EngineState`` resume contract).
+bit-identical (the ``EngineState`` resume contract).  Each epoch length is
+timed twice — per-epoch host packing (``ring 0``, the old behaviour) vs.
+the device-resident ring of pre-packed epochs (``ring 8``), so the output
+shows the per-epoch host packing + position-readback overhead the ring
+removes.
 
 Part 2 runs the adaptive governor (``runtime.governor.simulate_online``)
 on a phase-shifting trace, prints the telemetry summary and exports the
@@ -61,19 +65,27 @@ def bench_stream(length: int, epoch_lens, backend: str) -> None:
           f"warm {t_mono:.2f}s ({length} reqs)")
 
     for elen in epoch_lens:
-        stream = EpochStream(cfg, addrs, writes, levels, warmup=warmup,
-                             epoch_len=elen, backend=backend)
-        t0 = time.time()
-        stream.run()
-        dt = time.time() - t0
-        got = ints(stream.stats)
-        identical = got == mono_ints
-        print(f"epoch_len {elen:>6}: {stream.epoch:>3} epochs "
-              f"{dt:6.2f}s  ({dt / max(t_mono, 1e-9):4.1f}x warm "
-              f"monolithic)  int-stats identical: {identical}")
-        if not identical:
-            raise SystemExit(f"bit-identity violated at epoch_len={elen}: "
-                             f"{got} vs {mono_ints}")
+        # compile this epoch shape once so neither variant pays it
+        EpochStream(cfg, addrs, writes, levels, warmup=warmup,
+                    epoch_len=elen, backend=backend).step()
+        times = {}
+        for ring in (0, 8):
+            stream = EpochStream(cfg, addrs, writes, levels, warmup=warmup,
+                                 epoch_len=elen, backend=backend, ring=ring)
+            t0 = time.time()
+            stream.run()
+            times[ring] = time.time() - t0
+            got = ints(stream.stats)
+            if got != mono_ints:
+                raise SystemExit(
+                    f"bit-identity violated at epoch_len={elen} "
+                    f"ring={ring}: {got} vs {mono_ints}")
+        saved = times[0] - times[8]
+        print(f"epoch_len {elen:>6}: {stream.epoch:>3} epochs | "
+              f"host-pack-per-epoch {times[0]:6.2f}s -> prepacked ring "
+              f"{times[8]:6.2f}s (saves {saved:+5.2f}s, "
+              f"{times[8] / max(t_mono, 1e-9):4.1f}x warm monolithic) | "
+              f"int-stats identical: True")
 
 
 def bench_governor(phased_len: int, backend: str) -> None:
