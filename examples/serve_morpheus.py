@@ -23,6 +23,8 @@ governor exists for.
   PYTHONPATH=src python examples/serve_morpheus.py --split auto --rounds 6
   PYTHONPATH=src python examples/serve_morpheus.py --split auto --rounds 8 \
       --workload tenantA,tenantB --arrival onoff:64,0.5,0.5
+  PYTHONPATH=src python examples/serve_morpheus.py --split auto \
+      --workload tenantA,tenantB --slo-ms 2.5
 """
 from __future__ import annotations
 
@@ -65,6 +67,10 @@ def main():
     ap.add_argument("--arrival", default=None,
                     help="per-round arrival process: det:R | poisson:R | "
                          "mmpp:Ra,Rb,Ta,Tb | onoff:R,Ton,Toff")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="SLO-driven round sizing: closed-loop budgeter "
+                         "targets this modeled ms/round instead of a "
+                         "fixed round size")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).reduced()
@@ -85,8 +91,18 @@ def main():
         print(f"governor: candidates {governor.gov.candidates}, starting "
               f"at {eng.pool.cfg.num_cache_chips} cache chips")
 
-    rounds = args.rounds or (6 if governor else 2)
-    if args.workload or args.arrival:
+    rounds = args.rounds or (6 if governor or args.slo_ms else 2)
+    budgeter = batches = None
+    if args.slo_ms:
+        from repro.workloads.serving import SLOBudgeter, slo_batches
+        budgeter = SLOBudgeter(args.slo_ms, max_batch=4 * args.batch,
+                               initial_batch=args.batch)
+        batches = slo_batches(args.workload or "demo", budgeter,
+                              args.prompt_len)
+        sched = None
+        print(f"slo budgeter: target {args.slo_ms:g} ms/round, budget "
+              f"{budgeter.min_batch}..{budgeter.max_batch} reqs")
+    elif args.workload or args.arrival:
         from repro.workloads.serving import round_requests
         sched = round_requests(args.workload or "demo",
                                args.arrival or f"det:{args.batch}",
@@ -94,12 +110,13 @@ def main():
     else:
         sched = None
     rid = 0
+    pool_last = eng.pool.stats
     for rnd in range(rounds):
         tag = "cold" if rnd == 0 else f"warm{rnd}"
-        if sched is None:
+        if sched is None and batches is None:
             reqs = make_requests(args.batch, args.prompt_len, args.max_new)
         else:
-            batch = sched[rnd]
+            batch = next(batches) if batches is not None else sched[rnd]
             if not batch:
                 print(f"[{tag}] idle window (no arrivals)")
                 if governor is not None:
@@ -121,6 +138,15 @@ def main():
               f"({tput:.1f} tok/s)")
         print(f"       prefix pages reused {rep.pages_reused}, "
               f"fetched from backing {rep.pages_fetched}")
+        if budgeter is not None:
+            d = eng.pool.stats - pool_last
+            pool_last = eng.pool.stats
+            ns_per = d.time_ns / d.lookups if d.lookups else 0.0
+            budgeter.observe(ns_per, d.lookups, len(reqs))
+            est = budgeter.ns_per_request or 0.0
+            print(f"       slo: {est * len(reqs) / 1e6:.3f} ms modeled "
+                  f"(target {args.slo_ms:g}) | next budget "
+                  f"{budgeter.next_budget()}")
         if governor is not None:
             print("       " + describe_tick(governor.tick()))
     s = eng.pool.stats

@@ -227,7 +227,10 @@ def _finalize(pt: RunPoint, n_compute: int, n_cache: int, n_acc: int,
     t_lat = float(stats.latency_ns) * 1e-9 / (boost * n_compute * MLP_PER_CORE)
     t_exec = max(t_compute, t_dram, t_conv, t_noc, t_ext, t_lat)
 
-    ipc = insts / (t_exec * FREQ_GHZ * 1e9)
+    # zero-work slice (a departed/idle tenant's epoch in the QoS
+    # runtime): no instructions and no traffic means no time — report
+    # zero IPC instead of 0/0
+    ipc = insts / (t_exec * FREQ_GHZ * 1e9) if t_exec > 0 else 0.0
 
     mem_energy_J = float(stats.energy_nJ) * 1e-9
     power = gpu.static_power_W + gpu.core_power_W * (n_compute + n_cache)

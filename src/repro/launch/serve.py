@@ -19,10 +19,18 @@ and ``--arrival`` shapes how many requests land in each round
 — an on-off process gives packed rounds and idle windows, the bursty
 load the governor is for).
 
+``--slo-ms`` switches round sizing from the arrival schedule to the
+SLO budgeter (``repro.workloads.serving.SLOBudgeter``): a closed loop
+converts the pool's observed ns/lookup into the next round's request
+budget so each round's modeled service time tracks the target, reported
+per tenant (docs/qos.md).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --batch 4
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --split auto
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
       --split auto --workload tenantA,tenantB --arrival onoff:64,0.5,0.5
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+      --split auto --workload tenantA,tenantB --slo-ms 2.5
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v2-lite-16b \
       --mesh multipod --shape decode_32k --dry-run
 """
@@ -54,6 +62,12 @@ def main() -> None:
                          "mmpp:Ra,Rb,Ta,Tb | onoff:R,Ton,Toff (R in "
                          "requests/second of schedule time; default: "
                          "fixed --batch per round)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="SLO-driven round sizing: a closed-loop "
+                         "budgeter converts observed ns/lookup into the "
+                         "next round's request budget so each round's "
+                         "modeled service time tracks this target "
+                         "(replaces --arrival's fixed round sizes)")
     ap.add_argument("--mesh", choices=("host", "pod", "multipod"),
                     default="host")
     ap.add_argument("--shape", default="decode_32k")
@@ -106,8 +120,18 @@ def main() -> None:
         print(f"governor: candidates {governor.gov.candidates}, starting "
               f"at {eng.pool.cfg.num_cache_chips} cache chips")
     prompt = [(5 * j + 11) % 89 + 1 for j in range(args.prompt_len)]
-    rounds = args.rounds or (6 if governor else 2)
-    if args.workload or args.arrival:
+    rounds = args.rounds or (6 if governor or args.slo_ms else 2)
+    budgeter = None
+    if args.slo_ms:
+        from repro.workloads.serving import SLOBudgeter, slo_batches
+        budgeter = SLOBudgeter(args.slo_ms, max_batch=4 * args.batch,
+                               initial_batch=args.batch)
+        batches = slo_batches(args.workload or "demo", budgeter,
+                              args.prompt_len)
+        sched = None
+        print(f"slo budgeter: target {args.slo_ms:g} ms/round, "
+              f"budget {budgeter.min_batch}..{budgeter.max_batch} reqs")
+    elif args.workload or args.arrival:
         from repro.workloads.serving import round_requests
         sched = round_requests(args.workload or "demo",
                                args.arrival or f"det:{args.batch}",
@@ -115,7 +139,11 @@ def main() -> None:
     else:
         sched = [[("demo", prompt)] * args.batch for _ in range(rounds)]
     rid = 0
-    for rnd, batch in enumerate(sched):
+    pool_last = eng.pool.stats
+    for rnd in range(rounds):
+        # SLO mode re-sizes each round from the latest telemetry; the
+        # pre-built schedule is only consulted in the fixed modes
+        batch = next(batches) if budgeter is not None else sched[rnd]
         round_ = "cold" if rnd == 0 else f"warm{rnd}"
         if not batch:
             print(f"[{round_}] idle window (no arrivals)")
@@ -138,6 +166,16 @@ def main() -> None:
               f"({rep.generated / dt:.1f} tok/s) | prefix pages reused "
               f"{rep.pages_reused}, backing fetches {rep.pages_fetched}"
               f"{tenant_note}")
+        if budgeter is not None:
+            d = eng.pool.stats - pool_last
+            pool_last = eng.pool.stats
+            ns_per = d.time_ns / d.lookups if d.lookups else 0.0
+            budgeter.observe(ns_per, d.lookups, len(reqs))
+            est = budgeter.ns_per_request or 0.0
+            print(f"  slo: {est * len(reqs) / 1e6:.3f} ms modeled "
+                  f"(target {args.slo_ms:g}) | {est / 1e3:.1f} us/req | "
+                  f"next budget {budgeter.next_budget()} | per tenant "
+                  + " ".join(f"{k}:{v}" for k, v in mix.items()))
         if governor is not None:
             from repro.runtime import describe_tick
             print("  " + describe_tick(governor.tick()))

@@ -18,6 +18,6 @@ be in cache mode for the work arriving *right now*?
 from .governor import (SERVING_GCFG, Governor,  # noqa: F401
                        GovernorConfig, OnlineResult, ServingGovernor,
                        candidates_for, demo_pool, describe_tick,
-                       simulate_online)
+                       qos_reward, simulate_online, tenant_epoch_ipcs)
 from .stream import EpochStream, HandoffReport, handoff  # noqa: F401
 from .telemetry import EpochRecord, TelemetryLog  # noqa: F401

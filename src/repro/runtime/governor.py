@@ -89,7 +89,20 @@ class GovernorConfig:
     # greedy moves walk away if the remembered split no longer wins.
     phase_memory: bool = True
     phase_bins: int = 6
+    # QoS objective over per-tenant rewards (multi-tenant replay only;
+    # docs/qos.md).  "global": the classic mixed-epoch IPC.  "weighted":
+    # weighted mean of per-tenant IPCs — skewing a weight steers the
+    # governor toward that tenant's preferred split.  "minf": weighted
+    # max-min fairness, max over splits of min_k(ipc_k / w_k) — the
+    # governor serves the worst-off tenant first.  ``tenant_weights``
+    # (None = uniform) must match the workload's tenant count.
+    objective: str = "global"
+    tenant_weights: Optional[Tuple[float, ...]] = None
     seed: int = 0
+
+    def __post_init__(self):
+        assert self.objective in ("global", "weighted", "minf"), \
+            f"unknown objective {self.objective!r}"
 
 
 # Conservative preset for bursty multi-tenant replay (fig_serving, the
@@ -135,9 +148,18 @@ class Governor:
         self.hint = 0
         self.hint_strikes: Dict[int, int] = {}   # direction -> refutations
         self._probe: Optional[Tuple[int, float]] = None  # (dir, origin est)
-        self.phase_table: Dict[int, int] = {}    # sig bucket -> best index
-        self._phase_key: Optional[int] = None    # current phase's bucket
+        self.phase_table: Dict[int, int] = {}    # phase key -> best index
+        self._phase_key: Optional[int] = None    # current phase's key
         self._jumped = False
+        # external phase context (the active-tenant signature of a churn
+        # workload): a context change is a churn event — estimates reset
+        # like a phase shift, and phase-table keys embed the context so a
+        # mix's memory never collides with another mix's.  None until the
+        # first set_context: the initial mix is not a churn event.
+        self._ctx: Optional[int] = None
+        self.ctx_table: Dict[int, int] = {}      # context -> best index
+        self._pending_jump: Optional[int] = None
+        self.churn_resets = 0
         self.epoch = 0
         self.switches = 0
         self.phase_shifts = 0
@@ -147,6 +169,60 @@ class Governor:
     def _sig_bucket(self, signature: float) -> int:
         b = self.cfg.phase_bins
         return min(b - 1, max(0, int(float(signature) * b)))
+
+    def _phase_key_of(self, signature: float) -> int:
+        """Phase-table key: signature bucket qualified by the external
+        context, so e.g. 'hit rate 0.7 with tenants {A,B}' and 'hit rate
+        0.7 with tenant {B}' are distinct phases."""
+        ctx = self._ctx if self._ctx is not None else 0
+        return ctx * self.cfg.phase_bins + self._sig_bucket(signature)
+
+    def _jump_to(self, j: int) -> None:
+        """Adopt a remembered split: an ordinary transition (flush +
+        warm-up) whose estimates restart fresh."""
+        self._i = j
+        self.dwell = 0
+        self.warm_left = self.cfg.warm_epochs
+        self.measured = False
+        self._probe = None
+        self.switches += 1
+        self.phase_jumps += 1
+        self._jumped = True
+
+    # ------------------------------------------------------------ context
+    def set_context(self, tag: int) -> None:
+        """Declare the external phase context (e.g. the active-tenant
+        bitmask).  A change is a *churn event*: every estimate describes
+        a tenant mix that no longer exists, so they are cleared like a
+        phase shift; the departing context's converged split is
+        remembered, and re-entering a known context jumps straight to
+        its remembered split (same self-correction story as the
+        signature phase table)."""
+        tag = int(tag)
+        if tag == self._ctx:
+            return
+        if self._ctx is None:        # first mix of the run, not a churn
+            self._ctx = tag
+            return
+        if self.cfg.phase_memory and self.est:
+            best = max(self.est, key=lambda j: self.est[j])
+            self.ctx_table[self._ctx] = best
+            if self._phase_key is not None:
+                self.phase_table[self._phase_key] = best
+        self._ctx = tag
+        self.est = {}
+        self.sig = {}
+        self.hint_strikes = {}
+        self.eps = self.cfg.epsilon
+        self._phase_key = None
+        self.churn_resets += 1
+        # the jump is deferred to the next decide(): the caller is about
+        # to observe() the first epoch of the new mix, which ran at the
+        # *current* split — its reward must be recorded there, not at the
+        # remembered split
+        known = self.ctx_table.get(tag) if self.cfg.phase_memory else None
+        if known is not None and known != self._i:
+            self._pending_jump = known
 
     @property
     def current(self):
@@ -215,19 +291,12 @@ class Governor:
             a = self.cfg.ema_up if reward >= prev else self.cfg.ema_down
             self.est[self._i] = (1.0 - a) * prev + a * reward
         if shifted and self.cfg.phase_memory and signature is not None:
-            known = self.phase_table.get(self._sig_bucket(signature))
+            known = self.phase_table.get(self._phase_key_of(signature))
             if known is not None and known != self._i:
                 # revisit of a remembered phase: jump to its best split
-                self._i = known
-                self.dwell = 0
-                self.warm_left = self.cfg.warm_epochs
-                self.measured = False
-                self._probe = None
-                self.switches += 1
-                self.phase_jumps += 1
-                self._jumped = True
+                self._jump_to(known)
         if signature is not None:
-            self._phase_key = self._sig_bucket(signature)
+            self._phase_key = self._phase_key_of(signature)
 
     # ------------------------------------------------------------- decide
     def _neighbors(self) -> List[int]:
@@ -236,7 +305,11 @@ class Governor:
 
     def decide(self):
         """Choose the split for the next epoch (may equal ``current``)."""
-        self.last_switched = self._jumped   # phase-memory jump in observe()
+        if self._pending_jump is not None:   # churn re-entry (set_context)
+            j, self._pending_jump = self._pending_jump, None
+            if j != self._i:
+                self._jump_to(j)
+        self.last_switched = self._jumped   # phase-memory/churn jump
         self._jumped = False
         self.dwell += 1
         # never move before this visit has recorded at least one measured
@@ -311,6 +384,7 @@ class ServingGovernor:
 
     def __init__(self, pool, chip_candidates: Sequence[int]
                  = (0, 1, 2, 4, 6, 8), *, chip_cost_ns: float = 15.0,
+                 ema_alpha: float = 0.4,
                  gcfg: GovernorConfig = GovernorConfig()):
         cands = sorted(set(int(c) for c in chip_candidates)
                        | {pool.cfg.num_cache_chips})
@@ -319,6 +393,14 @@ class ServingGovernor:
         self.gov = Governor(cands, gcfg,
                             initial=cands.index(pool.cfg.num_cache_chips))
         self._last = pool.stats
+        # EMA over the per-tick reward: single serving ticks are noisy
+        # (a handful of lookups), so the governor observes the smoothed
+        # value.  Idle windows FREEZE it — blending an idle tick in
+        # would decay the EMA toward the pure chip-cost term, and the
+        # first busy tick after a long gap would then read as a phase
+        # shift and wipe real estimates (tests/test_qos.py pins this).
+        self.ema_alpha = float(ema_alpha)
+        self.reward_ema: Optional[float] = None
         self.epoch = 0
         self.history: List[Dict] = []
 
@@ -330,16 +412,19 @@ class ServingGovernor:
         self._last = self.pool.stats
         tel = self.pool.telemetry()
         if delta.lookups == 0:
-            # idle window: no requests means no observation — a zero
-            # signature/reward sample would fire the phase detector on
-            # every idle/busy boundary and wipe real estimates (the
-            # simulator path merges near-empty epochs for the same
-            # reason, arrivals.epochs_by_time)
+            # idle window: no requests means no observation — observe/
+            # decide are skipped (a zero signature/reward sample would
+            # fire the phase detector on every idle/busy boundary and
+            # wipe real estimates; the simulator path merges near-empty
+            # epochs for the same reason, arrivals.epochs_by_time) AND
+            # the reward EMA is frozen: long idle gaps must not decay it
+            # into a spurious phase-change signal on resume
             rec = {"epoch": self.epoch, "chips": chips, "lookups": 0,
                    "idle": True, "ns_per_lookup": 0.0,
                    "hit_rate_interval": 0.0,
                    "ext_occupancy": tel["ext_occupancy"],
                    "pred_accuracy": tel["pred_accuracy"], "reward": 0.0,
+                   "reward_ema": self.reward_ema,
                    "hint": 0, "new_chips": chips, "switched": False,
                    "flushed_pages": 0, "epsilon": self.gov.eps}
             self.history.append(rec)
@@ -348,6 +433,9 @@ class ServingGovernor:
         lookups = delta.lookups
         ns_per = delta.time_ns / lookups
         reward = -(ns_per + self.chip_cost_ns * chips)
+        self.reward_ema = reward if self.reward_ema is None else \
+            (1.0 - self.ema_alpha) * self.reward_ema \
+            + self.ema_alpha * reward
         # bottleneck hint, in chip direction (+1 = provision more chips):
         # a saturated extended tier (or no tier at all) with misses means
         # capacity starvation; an underused tier wastes compute chips.
@@ -359,15 +447,21 @@ class ServingGovernor:
             hint = -1
         else:
             hint = 0
-        self.gov.observe(reward, hint, signature=hit / lookups)
+        self.gov.observe(self.reward_ema, hint, signature=hit / lookups)
+        ema_observed = self.reward_ema
         new_chips = self.gov.decide()
         flushed = 0
         if new_chips != chips:
             flushed = self.pool.reconfigure(new_chips)
+            # the EMA mixes the old chip count's reward (different
+            # chip-cost term, different latencies): reseed it at the new
+            # split so post-switch estimates aren't cross-contaminated
+            self.reward_ema = None
         rec = {"epoch": self.epoch, "chips": chips, "lookups": int(
             delta.lookups), "ns_per_lookup": ns_per,
             "hit_rate_interval": hit / lookups, "ext_occupancy": ext_occ,
             "pred_accuracy": tel["pred_accuracy"], "reward": reward,
+            "reward_ema": ema_observed,
             "hint": hint, "new_chips": new_chips,
             "switched": new_chips != chips, "flushed_pages": flushed,
             "epsilon": self.gov.eps}
@@ -430,6 +524,7 @@ class OnlineResult:
     switches: int
     final_split: Split            # governor's choice when the run ended
     converged_split: Split        # most-dwelt split post burn-in
+    churn_resets: int = 0         # tenant-churn context resets (QoS runs)
     # multi-tenant replay only: exact per-tenant Stats (numpy leaves; the
     # integer counters sum to ``stats`` up to the flush charges, which are
     # attributed to the tenant owning each flushed block)
@@ -453,6 +548,64 @@ class OnlineResult:
         if self.tenant_stats:
             out["tenant_hit_rates"] = self.tenant_hit_rates()
         return out
+
+
+def tenant_epoch_ipcs(wl, system: str, nc: int, nk: int, lo: int, hi: int,
+                      delta_rows: Stats, seed: int = 0,
+                      counts: Optional[np.ndarray] = None) -> List[float]:
+    """Per-tenant modeled IPC of one epoch of a multi-tenant replay.
+
+    Tenant *k*'s term finalizes its own masked Stats row under its own
+    app profile (arithmetic intensity, contention knee): the IPC it
+    would sustain serving its own traffic through the shared cache state
+    of the epoch.  This is the per-tenant service quality the QoS
+    objectives weigh — unlike a share of the mixed-epoch IPC, it moves
+    differently per tenant as the split moves, so weighting a tenant
+    actually steers the governor (docs/qos.md).  A tenant with no
+    requests in the epoch (idle or departed) scores 0.
+    """
+    if counts is None:
+        counts = wl.tenant_counts(lo, hi)
+    out = []
+    for k, t in enumerate(wl.tenants):
+        n_k = int(counts[k])
+        row = jax.tree.map(lambda x, k=k: x[k], delta_rows)
+        rr = cs._finalize(cs.RunPoint(t.app, system, nc, nk, n_k, seed),
+                          nc, nk, n_k, row)
+        out.append(rr.ipc)
+    return out
+
+
+def qos_reward(gcfg: GovernorConfig, ipcs: Sequence[float],
+               counts: Sequence[int]) -> float:
+    """Scalar QoS reward from per-tenant IPC terms (docs/qos.md).
+
+    Inactive tenants (zero requests this epoch) are excluded — a
+    departed tenant must not pin the min-fairness term to zero or dilute
+    the weighted mean.  ``weighted``: convex combination under the
+    (renormalized) tenant weights — with one tenant and uniform weights
+    this *is* the global epoch reward.  ``minf``: weighted max-min
+    fairness, min over active tenants of ``ipc_k / (w_k / max(w))`` —
+    uniform weights reduce it to the worst-off tenant's IPC.
+    """
+    k = len(ipcs)
+    w = np.ones(k) if gcfg.tenant_weights is None \
+        else np.asarray(gcfg.tenant_weights, float)
+    assert len(w) == k, \
+        f"tenant_weights has {len(w)} entries for {k} tenants"
+    assert np.all(w >= 0), "tenant weights must be non-negative"
+    act = np.asarray(counts)[:k] > 0
+    if not act.any():
+        return 0.0
+    w = np.where(act, w, 0.0)
+    assert w.sum() > 0, "every active tenant has zero weight"
+    x = np.asarray(ipcs, float)
+    if gcfg.objective == "weighted":
+        return float((w / w.sum() * x).sum())
+    # minf: a zero weight means "no fairness claim" — the tenant is
+    # excluded from the min instead of dividing by zero
+    wtil = w / w.max()
+    return float(min(x[i] / wtil[i] for i in np.nonzero(w > 0)[0]))
 
 
 def _epoch_telemetry(cfg, state, delta: Stats) -> Tuple[float, float, float]:
@@ -532,6 +685,14 @@ def simulate_online(phases, system: str, *,
         n_tenants = 1
         from ..workloads.arrivals import epochs_by_count
         epoch_bounds = epochs_by_count(length, epoch_len)
+    assert gcfg.objective == "global" or workload is not None, \
+        "QoS objectives need a composed workloads.Workload"
+    if gcfg.tenant_weights is not None:
+        assert workload is not None \
+            and len(gcfg.tenant_weights) == n_tenants, \
+            (f"tenant_weights {gcfg.tenant_weights} does not match the "
+             f"workload's {n_tenants} tenants")
+    churn = workload is not None and wl.has_churn()
     if fixed_split is not None:
         cands: List[Split] = [tuple(fixed_split)]        # type: ignore
         gcfg = replace(gcfg, epsilon=0.0, epsilon_min=0.0)
@@ -583,28 +744,50 @@ def simulate_online(phases, system: str, *,
         state, delta_b = engine.advance_packed(cfg, pt, state, backend)
         delta_rows = jax.tree.map(np.asarray, delta_b)
         delta = jax.tree.map(lambda x: x.sum(axis=0), delta_rows)
+        t_counts = wl.tenant_counts(lo, hi) if workload is not None else None
         if pending_flush is not None:
             # the previous transition's flush writebacks are real traffic:
             # charge them to this epoch so the reward, exec time and the
             # aggregate IPC all pay for the switch (handoff also charges
             # them on the carried state.stats)
             delta = jax.tree.map(np.add, delta, pending_flush)
+            if workload is not None:
+                # the per-tenant reward rows must pay too, or a QoS
+                # objective would see switches as free and lose the
+                # thrashing disincentive; apportion by request share
+                # (reward attribution only — the carried per-tenant
+                # stats are charged exactly via _attribute_flush)
+                shares = t_counts / max(int(t_counts.sum()), 1)
+
+                def _apportion(rows, f):
+                    if np.issubdtype(rows.dtype, np.floating):
+                        return (rows + float(f) * shares).astype(rows.dtype)
+                    return rows
+                delta_rows = jax.tree.map(_apportion, delta_rows,
+                                          pending_flush)
             pending_flush = None
         total_stats = delta if total_stats is None else \
             jax.tree.map(np.add, total_stats, delta)
         n_req = hi - lo
+        tenant_ipc: Optional[List[float]] = None
         if workload is not None:
             app = wl.app_at(lo, hi)
             insts = wl.instructions(lo, hi)
             rr = cs._finalize(cs.RunPoint(app, system, nc, nk, n_req, seed),
                               nc, nk, n_req, delta, insts=insts,
                               knee=wl.contention_knee(lo, hi))
+            tenant_ipc = tenant_epoch_ipcs(wl, system, nc, nk, lo, hi,
+                                           delta_rows, seed,
+                                           counts=t_counts)
         else:
             app = phases[int(np.searchsorted(bounds, lo, side="right"))]
             insts = tr.instructions_for(app, n_req)
             rr = cs._finalize(cs.RunPoint(app, system, nc, nk, n_req, seed),
                               nc, nk, n_req, delta)
-        reward = rr.ipc
+        if workload is not None and gcfg.objective != "global":
+            reward = qos_reward(gcfg, tenant_ipc, t_counts)
+        else:
+            reward = rr.ipc
         t_all += rr.exec_time_s
         insts_all += insts
         if epoch_i >= burn_in:
@@ -623,6 +806,12 @@ def simulate_online(phases, system: str, *,
             hint = -1
         else:
             hint = 0
+        if churn:
+            # churn boundary = active-tenant signature change: context
+            # reset (estimates describe a departed mix) + phase keys
+            # scoped to the new mix; a remembered mix is jumped to on
+            # the next decide()
+            gov.set_context(wl.active_signature(lo, hi))
         gov.observe(reward, hint, signature=rr.llc_hit_rate)
         eps = gov.eps
         new_split = gov.decide() if fixed_split is None else gov.current
@@ -650,8 +839,10 @@ def simulate_online(phases, system: str, *,
             reward=reward, switched=gov.last_switched,
             flush_writebacks=flush_wbs, epsilon=eps,
             tenants="" if workload is None else "|".join(
-                f"{t.name}:{c}" for t, c in
-                zip(wl.tenants, wl.tenant_counts(lo, hi))))
+                f"{t.name}:{c}" for t, c in zip(wl.tenants, t_counts)),
+            tenant_ipc="" if tenant_ipc is None else "|".join(
+                f"{t.name}:{x:.4f}"
+                for t, x in zip(wl.tenants, tenant_ipc)))
         records.append(rec)
         log.append(rec)
         epoch_i += 1
@@ -679,7 +870,8 @@ def simulate_online(phases, system: str, *,
         stats=total_stats, ipc=ipc, steady_ipc=steady,
         converged_ipc=converged, exec_time_s=t_all,
         switches=gov.switches, final_split=gov.current,
-        converged_split=converged_split, tenant_stats=tenant_stats)
+        converged_split=converged_split, churn_resets=gov.churn_resets,
+        tenant_stats=tenant_stats)
 
 
 def _attribute_flush(state, rep: rt_stream.HandoffReport, workload,

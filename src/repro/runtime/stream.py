@@ -82,6 +82,7 @@ class EpochStream:
                 epoch_len=epoch_len, window_s=window_s,
                 target_epoch=target_epoch)
             self._masks = wl.tenant_masks()
+            self._churn = wl.has_churn()
         else:
             assert writes is not None and levels is not None
             assert window_s is None and target_epoch is None, \
@@ -93,6 +94,11 @@ class EpochStream:
             self.levels = np.asarray(levels, np.int32)
             self._bounds = None
             self._masks = [None]
+            self._churn = False
+        # tenant churn: the active-tenant signature of the last stepped
+        # epoch and the boundaries where it changed (epoch, old, new)
+        self._sig: Optional[int] = None
+        self.churn_events: List[Tuple[int, int, int]] = []
         self.warmup = int(warmup)
         self.epoch_len = int(epoch_len) if epoch_len else 0
         self.backend = engine.resolve_backend(backend)
@@ -154,6 +160,18 @@ class EpochStream:
         count = None
         if self.workload is not None and k > 1:
             count = [m[sl] for m in self._masks]
+            if self._churn:
+                # churn workload: a departed/not-yet-arrived tenant's
+                # mask slice is all-False, so its state row freezes
+                # (counts nothing) by construction — validate the
+                # activity-interval invariant at every epoch so any
+                # frame mismatch fails loudly instead of silently
+                # counting requests toward no tenant (tests/test_qos.py)
+                act = self.workload.active_mask(lo, hi)
+                for j, m in enumerate(count):
+                    assert act[j] or not m.any(), \
+                        (f"tenant {j} marked inactive over [{lo},{hi}) "
+                         f"but has {int(m.sum())} requests there")
         return engine.pack(self.cfg, traces, pos0=[lo] * k, count=count)
 
     # --------------------------------------------------------------- ring
@@ -179,6 +197,11 @@ class EpochStream:
         else:
             hi = self._next_bound(lo)
             pt = self._pack_epoch(lo, hi)
+        if self.workload is not None:
+            sig = self.workload.active_signature(lo, hi)
+            if self._sig is not None and sig != self._sig:
+                self.churn_events.append((self.epoch, self._sig, sig))
+            self._sig = sig
         self.state, delta = engine.advance_packed(self.cfg, pt, self.state,
                                                   self.backend)
         self.epoch += 1
@@ -202,9 +225,13 @@ class EpochStream:
         """Resume from a previously captured snapshot."""
         self.state = jax.tree.map(jnp.asarray, state)
         self._host_pos = int(np.asarray(state.pos)[0]) - self._base
-        # pre-packed epochs may not match the restored position: drop them
+        # pre-packed epochs may not match the restored position: drop
+        # them; likewise the churn detector's last signature belongs to
+        # wherever the stream was before the rollback — comparing the
+        # next epoch against it would fabricate a churn event
         self._ring.clear()
         self._packed_to = self._host_pos
+        self._sig = None
 
 
 def save_state(path: str | Path, state: EngineState) -> Path:

@@ -26,6 +26,9 @@ Schema (one row per epoch, documented in docs/runtime.md):
   epsilon      governor exploration rate when the epoch was decided
   tenants      multi-tenant replay: per-tenant request counts this epoch
                ("name:count|name:count"; empty for single-trace runs)
+  tenant_ipc   multi-tenant replay: per-tenant modeled IPC terms
+               ("name:ipc|name:ipc") — the inputs to the QoS reward
+               objectives (docs/qos.md)
 """
 from __future__ import annotations
 
@@ -57,6 +60,9 @@ class EpochRecord:
     # multi-tenant replay: per-tenant request counts this epoch, rendered
     # "name:count|name:count" (empty for single-trace runs)
     tenants: str = ""
+    # multi-tenant replay: per-tenant modeled IPC terms this epoch
+    # ("name:ipc|name:ipc"; what the QoS objectives weigh — docs/qos.md)
+    tenant_ipc: str = ""
 
     def to_dict(self) -> Dict:
         return asdict(self)

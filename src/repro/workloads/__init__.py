@@ -49,7 +49,8 @@ _EXPORTS = {
     "hit_rate": "tenancy", "TENANT_STRIDE_BLOCKS": "tenancy",
     # serving-side helpers
     "round_sizes": "serving", "tenant_prompts": "serving",
-    "round_requests": "serving",
+    "round_requests": "serving", "SLOBudgeter": "serving",
+    "slo_batches": "serving", "batch_mix": "serving",
 }
 
 _SUBMODULES = ("arrivals", "corpus", "serving", "sources", "synthetic",

@@ -10,13 +10,19 @@ requests interleave within each round, so the page pool and the
 ``ServingGovernor`` see contended multi-tenant traffic instead of one
 repeated demo batch.
 
+``SLOBudgeter`` is the third knob (``--slo-ms``): instead of a fixed
+round size, a closed loop converts the pool's observed ns/lookup
+telemetry into the next round's request budget, so each round's modeled
+service time tracks a latency target (docs/qos.md).
+
 The helpers return plain data (counts, token lists); the launchers build
 ``serving.Request`` objects themselves — workloads stays below serving
 in the layering.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -62,6 +68,75 @@ def tenant_prompts(workload: str, prompt_len: int
                   for j in range(prompt_len)]
         out.append((name, tokens))
     return out
+
+
+@dataclass
+class SLOBudgeter:
+    """Closed-loop round budgeter toward a latency target (docs/qos.md).
+
+    A fixed round size serves whatever arrived regardless of how long
+    the round will take; the budgeter instead admits only as many
+    requests as the SLO affords.  Per round it observes the pool's
+    telemetry — ns/lookup, lookups and requests served — maintains an
+    EMA of the modeled *ns per request* (requests drive several pool
+    lookups each, so the per-request cost is learned online, not
+    assumed), and sizes the next round as ``slo_ms / ns_per_request``
+    clipped to ``[min_batch, max_batch]``.
+
+    Idle rounds (zero lookups) freeze the EMA, exactly like the serving
+    governor's idle-window skip: an idle gap carries no latency signal.
+
+    On a constant-latency stream the EMA converges geometrically to the
+    true per-request cost, so the budget converges to the largest SLO-
+    compliant round size (tests/test_qos.py).
+    """
+    slo_ms: float
+    min_batch: int = 1
+    max_batch: int = 64
+    alpha: float = 0.5                     # EMA blend per observation
+    initial_batch: Optional[int] = None    # first round (default: min)
+    ns_per_request: Optional[float] = field(default=None, init=False)
+    rounds_observed: int = field(default=0, init=False)
+
+    def __post_init__(self):
+        assert self.slo_ms > 0 and 0 < self.alpha <= 1
+        assert 1 <= self.min_batch <= self.max_batch
+
+    def observe(self, ns_per_lookup: float, lookups: int,
+                requests: int) -> None:
+        """Feed one round's telemetry (idle rounds are a frozen no-op)."""
+        if lookups <= 0 or requests <= 0:
+            return
+        per_req = float(ns_per_lookup) * lookups / requests
+        self.ns_per_request = per_req if self.ns_per_request is None else \
+            (1.0 - self.alpha) * self.ns_per_request + self.alpha * per_req
+        self.rounds_observed += 1
+
+    def next_budget(self) -> int:
+        """Request budget for the next round."""
+        if self.ns_per_request is None or self.ns_per_request <= 0:
+            start = self.initial_batch if self.initial_batch is not None \
+                else self.min_batch
+            return int(np.clip(start, self.min_batch, self.max_batch))
+        fit = int(self.slo_ms * 1e6 // self.ns_per_request)
+        return int(np.clip(fit, self.min_batch, self.max_batch))
+
+
+def slo_batches(workload: str, budgeter: SLOBudgeter, prompt_len: int
+                ):
+    """Generator of SLO-budgeted rounds: each ``next()`` yields the next
+    round's (tenant, prompt) batch, sized by ``budgeter.next_budget()``
+    at yield time (tenants round-robin across rounds, so the budget is
+    spread over every tenant family).  Feed the budgeter between rounds.
+    """
+    fams = tenant_prompts(workload, prompt_len)
+    k = 0
+    while True:
+        batch = []
+        for _ in range(budgeter.next_budget()):
+            batch.append(fams[k % len(fams)])
+            k += 1
+        yield batch
 
 
 def batch_mix(batch) -> dict:

@@ -42,11 +42,24 @@ TENANT_STRIDE_BLOCKS = 1 << 22
 
 @dataclass(frozen=True)
 class Tenant:
-    """One tenant: who it is, what it runs, how its requests arrive."""
+    """One tenant: who it is, what it runs, how its requests arrive.
+
+    ``window`` is the tenant's activity window as fractions of the
+    composed stream's wall-clock span: ``(0.0, 1.0)`` (the default) is a
+    tenant present for the whole stream; ``(0.3, 1.0)`` arrives 30% in;
+    ``(0.0, 0.6)`` departs at 60%.  Arriving/departing tenants are the
+    *churn* the QoS governor must re-converge through (docs/qos.md).
+    """
     name: str
     source: src.TraceSource
     arrival: arr.ArrivalProcess
     weight: float = 1.0            # share of the composed request volume
+    window: Tuple[float, float] = (0.0, 1.0)
+
+    def __post_init__(self):
+        a, b = self.window
+        assert 0.0 <= a < b <= 1.0, \
+            f"tenant {self.name}: bad activity window {self.window}"
 
     @property
     def app(self) -> str:
@@ -75,6 +88,17 @@ class Workload:
         n = len(self.addrs)
         assert (len(self.writes) == len(self.levels) == len(self.tenant_id)
                 == len(self.t_s) == n), "column length mismatch"
+        # realized activity interval per tenant: [first, last] arrival.
+        # Windows are *placed* by compose in its own span frame; activity
+        # tests must use the realized intervals, never re-derive window
+        # fractions from the stream span — with per-tenant arrival rates
+        # (or stochastic arrivals) the two frames disagree, and a tenant
+        # would read as departed while its requests are still arriving.
+        self._activity = []
+        for k in range(len(self.tenants)):
+            ts_k = self.t_s[self.tenant_id == k]
+            self._activity.append((float(ts_k[0]), float(ts_k[-1]))
+                                  if len(ts_k) else (0.0, -1.0))
 
     # ------------------------------------------------------------ basics
     def __len__(self) -> int:
@@ -164,21 +188,68 @@ class Workload:
         counts = self.tenant_counts(lo, hi)
         return self.tenants[int(np.argmax(counts))].app
 
+    # --------------------------------------------------------------- churn
+    @property
+    def span_s(self) -> float:
+        """Wall-clock span of the composed stream (activity windows are
+        fractions of this)."""
+        return float(self.t_s[-1] - self.t_s[0]) if len(self) > 1 else 0.0
+
+    def has_churn(self) -> bool:
+        return any(t.window != (0.0, 1.0) for t in self.tenants)
+
+    def active_mask(self, lo: int, hi: Optional[int] = None) -> np.ndarray:
+        """(K,) bool: which tenants are *active* over the slice.
+
+        Activity is the tenant's realized activity interval (its first
+        to last arrival — where its window actually landed) overlapping
+        the slice's wall-clock range, not per-epoch request presence: a
+        bursty tenant silent for one mid-stream epoch does not read as
+        departed (that would flap the governor's churn detector).  The
+        interval frame guarantees the invariant EpochStream's churn
+        masks rely on — an inactive tenant has NO requests in the slice
+        — for any mix of per-tenant arrival rates.
+        """
+        hi = len(self) if hi is None else hi
+        if hi <= lo or len(self) == 0 or not self.has_churn():
+            return np.ones(len(self.tenants), bool)
+        t_lo = float(self.t_s[lo])
+        t_hi = float(self.t_s[hi - 1])
+        return np.array([a <= t_hi and t_lo <= b
+                         for a, b in self._activity], bool)
+
+    def active_signature(self, lo: int, hi: Optional[int] = None) -> int:
+        """Bitmask of the active tenants over the slice — the governor
+        keys its phase table on this, so a churn event (signature change)
+        never collides with a same-mix phase's memory."""
+        return int(np.sum(self.active_mask(lo, hi)
+                          * (1 << np.arange(len(self.tenants)))))
+
+    def epoch_active_masks(self, bounds: Sequence[Tuple[int, int]]
+                           ) -> List[np.ndarray]:
+        """Per-epoch active-tenant masks for a set of epoch bounds."""
+        return [self.active_mask(lo, hi) for lo, hi in bounds]
+
 
 def compose(tenants: Sequence[Tenant], *, length: int, n_cores: int,
             seed: int = 0, ws_scale: float = 1.0) -> Workload:
     """Materialize a composed multi-tenant ``Workload``.
 
-    Request volume is split by tenant weight (the last tenant absorbs
-    rounding); every tenant's generator and arrival process get distinct
-    derived seeds, so the composition is deterministic in ``seed`` alone.
+    Request volume is split by tenant weight scaled by activity-window
+    width (a tenant present for half the stream at weight 1 sends half
+    the requests of a full-stream weight-1 tenant — its *rate* while
+    active is what the weight fixes); every tenant's generator and
+    arrival process get distinct derived seeds, so the composition is
+    deterministic in ``seed`` alone.
     """
     tenants = list(tenants)
     assert tenants, "compose needs at least one tenant"
     assert length >= len(tenants), "fewer requests than tenants"
-    wsum = sum(max(t.weight, 0.0) for t in tenants)
+    widths = [t.window[1] - t.window[0] for t in tenants]
+    wsum = sum(max(t.weight, 0.0) * w for t, w in zip(tenants, widths))
     assert wsum > 0, "all tenant weights are zero"
-    shares = [max(t.weight, 0.0) / wsum for t in tenants]
+    shares = [max(t.weight, 0.0) * w / wsum
+              for t, w in zip(tenants, widths)]
     # largest-remainder apportionment with a 1-request floor: counts sum
     # to EXACTLY length (length >= K asserted above), so downstream
     # length-derived artifacts never mismatch len(workload)
@@ -227,6 +298,23 @@ def compose(tenants: Sequence[Tenant], *, length: int, n_cores: int,
         ts_parts.append(np.asarray(ts, np.float64))
         seq_parts.append(np.arange(n_t, dtype=np.int64))
 
+    # Activity windows: each tenant's natural span (at its own arrival
+    # rate) stretched over its window fraction implies a total stream
+    # span; the max over tenants is the span every window fits into.
+    # Shifting a tenant's clock by window_start * span moves it into its
+    # window without touching its rate or burstiness; tenants whose
+    # natural span is shorter than their window simply depart early.
+    # All-default windows shift by zero — the composition is bit-
+    # identical to a window-free one.
+    if any(t.window != (0.0, 1.0) for t in tenants):
+        spans = [float(ts[-1] - ts[0]) if len(ts) > 1 else 0.0
+                 for ts in ts_parts]
+        total_span = max((s / w for s, w in zip(spans, widths) if w > 0),
+                         default=0.0)
+        for k, t in enumerate(tenants):
+            if t.window[0] > 0.0:
+                ts_parts[k] = ts_parts[k] + t.window[0] * total_span
+
     addrs = np.concatenate(a_parts)
     writes = np.concatenate(w_parts)
     levels = np.concatenate(l_parts)
@@ -248,39 +336,75 @@ def _is_number(s: str) -> bool:
         return False
 
 
+def _parse_window(seg: str) -> Optional[Tuple[float, float]]:
+    """``"0.3:0.8"`` / ``"0.3:"`` / ``":0.6"`` -> (start, end) fractions,
+    or None when the segment is not a window spec (e.g. an arrival spec,
+    whose kind prefix is alphabetic)."""
+    head, colon, tail = seg.partition(":")
+    if not colon:
+        return None
+    head, tail = head.strip(), tail.strip()
+    if (head and not _is_number(head)) or (tail and not _is_number(tail)):
+        return None
+    if not head and not tail:
+        return None
+    return (float(head) if head else 0.0, float(tail) if tail else 1.0)
+
+
 def make_workload(spec: str, *, length: int, n_cores: int,
                   arrival: str = "det:2e6", seed: int = 0,
                   ws_scale: float = 1.0) -> Workload:
     """Build a Workload from CLI-style specs.
 
     ``spec`` is a comma-separated tenant list; each tenant is
-    ``source[*weight][@arrival]`` — the source uses the registry syntax
-    (``workloads/sources.py``), ``weight`` defaults to 1, and a per-tenant
-    ``@arrival`` overrides the shared ``arrival`` spec.  Examples:
+    ``source[*weight][@arrival][@window]`` — the source uses the registry
+    syntax (``workloads/sources.py``), ``weight`` defaults to 1, a
+    per-tenant ``@arrival`` overrides the shared ``arrival`` spec, and a
+    numeric ``@start:end`` segment is an *activity window* (fractions of
+    the stream's wall-clock span; either side may be omitted).  Examples:
 
       "cfd"                                   one tenant, shared arrival
       "cfd,kmeans*2"                          kmeans gets 2/3 of requests
       "cfd@det:2e6,kmeans@onoff:8e6,1e-3,3e-3"  per-tenant arrivals
+      "cfd@0:0.6,kmeans@0.3:"                 cfd departs at 60%, kmeans
+                                              arrives at 30% (churn)
 
-    Commas both separate tenants and appear inside mmpp/onoff arrival
-    arguments; a comma-segment that parses as a bare number is therefore
-    glued back onto the previous tenant's arrival spec.
+    A window segment is told apart from an arrival by its numeric-only
+    ``start:end`` shape (arrival kinds are alphabetic); both may be given
+    (``cfd@poisson:2e6@0:0.5``).  Commas both separate tenants and appear
+    inside mmpp/onoff arrival arguments; a comma-segment whose leading
+    ``@``-free prefix parses as a bare number is therefore glued back
+    onto the previous tenant's spec.
     """
     parts: List[str] = []
     for seg in (s.strip() for s in spec.split(",") if s.strip()):
-        if parts and _is_number(seg):
+        if parts and _is_number(seg.partition("@")[0]):
             parts[-1] += "," + seg
         else:
             parts.append(seg)
     tenants = []
     for k, part in enumerate(parts):
-        src_part, _, arr_part = part.partition("@")
-        name_part, star, weight_part = src_part.partition("*")
+        chunks = part.split("@")
+        name_part, star, weight_part = chunks[0].partition("*")
         weight = float(weight_part) if star else 1.0
+        arr_part: Optional[str] = None
+        window: Optional[Tuple[float, float]] = None
+        for seg in chunks[1:]:
+            win = _parse_window(seg.strip())
+            if win is not None:
+                assert window is None, \
+                    f"tenant {name_part!r}: two activity windows in {part!r}"
+                window = win
+            else:
+                assert arr_part is None, \
+                    f"tenant {name_part!r}: two arrival specs in {part!r}"
+                arr_part = seg.strip()
+        window = window if window is not None else (0.0, 1.0)
         source = src.make_source(name_part.strip())
-        proc = arr.make_arrival(arr_part.strip() if arr_part else arrival)
+        proc = arr.make_arrival(arr_part if arr_part else arrival)
         tenants.append(Tenant(name=f"t{k}:{name_part.strip()}",
-                              source=source, arrival=proc, weight=weight))
+                              source=source, arrival=proc, weight=weight,
+                              window=window))
     assert tenants, f"empty workload spec {spec!r}"
     return compose(tenants, length=length, n_cores=n_cores, seed=seed,
                    ws_scale=ws_scale)

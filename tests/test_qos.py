@@ -1,0 +1,458 @@
+"""QoS-layer tests (ISSUE 5): per-tenant reward objectives, tenant
+churn, the SLO round budgeter, the serving governor's idle-window EMA
+freeze, and the extended docs checks.
+
+Headline properties (acceptance):
+
+  * the per-tenant weighted reward equals the global reward when the
+    weights are uniform and K = 1 (same app, instructions, knee, Stats);
+  * churn-boundary count masks still sum to the global Stats
+    bit-identically on the jnp AND pallas engine backends;
+  * the SLO budgeter converges on a synthetic constant-latency stream;
+  * zero-lookup idle windows freeze the serving governor's reward EMA
+    (the bugfix: only observe/decide used to be skipped).
+"""
+import importlib.util
+from dataclasses import replace
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import address_separation as asep
+from repro.core import controller as ctl
+from repro.core import engine
+from repro.runtime import (EpochStream, Governor, GovernorConfig,
+                           ServingGovernor, qos_reward, simulate_online)
+from repro.serving.paged_kv import PoolStats
+from repro.workloads import tenancy
+from repro.workloads.serving import SLOBudgeter, slo_batches
+
+
+def _cfg(conv_sets=8, chips=2, sets_per_chip=4, **kw):
+    amap = asep.make_map(conv_sets=conv_sets, num_cache_chips=chips,
+                         sets_per_chip=sets_per_chip)
+    return ctl.MorpheusConfig(amap=amap, conv_ways=4, ext_ways=4, **kw)
+
+
+def _int_identical(a: ctl.Stats, b: ctl.Stats, ctx=""):
+    for f in ctl._INT_FIELDS:
+        x = int(np.asarray(getattr(a, f)))
+        y = int(np.asarray(getattr(b, f)))
+        assert x == y, f"{ctx} {f}: {x} vs {y}"
+
+
+# ----------------------------------------------------- reward objectives
+
+def test_qos_reward_uniform_single_tenant_is_identity():
+    g = GovernorConfig(objective="weighted")
+    assert qos_reward(g, [42.5], [100]) == 42.5
+
+
+def test_qos_reward_weighted_and_minf_semantics():
+    gw = GovernorConfig(objective="weighted", tenant_weights=(3.0, 1.0))
+    assert qos_reward(gw, [10.0, 50.0], [5, 5]) == \
+        pytest.approx(0.75 * 10.0 + 0.25 * 50.0)
+    gm = GovernorConfig(objective="minf")
+    assert qos_reward(gm, [10.0, 50.0], [5, 5]) == 10.0
+    # a heavier weight demands proportionally more IPC to stop binding
+    gm2 = GovernorConfig(objective="minf", tenant_weights=(1.0, 10.0))
+    assert qos_reward(gm2, [10.0, 50.0], [5, 5]) == \
+        pytest.approx(50.0)        # tenant 1 now binds: 50 / 1 vs 10 / 0.1
+
+
+def test_qos_reward_excludes_inactive_tenants():
+    g = GovernorConfig(objective="minf")
+    # tenant 1 departed (0 requests): must not pin the min to zero
+    assert qos_reward(g, [10.0, 0.0], [5, 0]) == 10.0
+    gw = GovernorConfig(objective="weighted", tenant_weights=(1.0, 9.0))
+    # weights renormalize over the active set
+    assert qos_reward(gw, [10.0, 0.0], [5, 0]) == 10.0
+    assert qos_reward(g, [0.0, 0.0], [0, 0]) == 0.0
+
+
+def test_qos_reward_minf_zero_weight_is_excluded_not_div_zero():
+    """weight 0 = no fairness claim: the tenant drops out of the min
+    instead of dividing by zero."""
+    g = GovernorConfig(objective="minf", tenant_weights=(0.0, 1.0))
+    with np.errstate(divide="raise"):
+        assert qos_reward(g, [1.0, 50.0], [5, 5]) == 50.0
+
+
+def test_qos_reward_validates_weights():
+    g = GovernorConfig(objective="weighted", tenant_weights=(1.0,))
+    with pytest.raises(AssertionError):
+        qos_reward(g, [1.0, 2.0], [1, 1])
+    with pytest.raises(AssertionError):
+        GovernorConfig(objective="no-such-objective")
+
+
+def test_single_tenant_weighted_run_equals_global_run():
+    """Acceptance: K=1 + uniform weights => the weighted objective's
+    per-epoch rewards equal the global objective's exactly."""
+    wl = tenancy.make_workload("cfd", length=6000, n_cores=8,
+                               arrival="det:2e6", ws_scale=0.125)
+    kw = dict(epoch_len=1000, fixed_split=(32, 36))
+    r_glob = simulate_online(wl, "Morpheus-ALL", **kw)
+    r_wtd = simulate_online(wl, "Morpheus-ALL",
+                            gcfg=GovernorConfig(objective="weighted"), **kw)
+    assert [r.reward for r in r_glob.records] == \
+        [r.reward for r in r_wtd.records]
+    assert all(r.tenant_ipc for r in r_wtd.records)
+
+
+# ------------------------------------------------------------ churn: data
+
+def test_window_spec_parsing():
+    wl = tenancy.make_workload("cfd@0:0.6,kmeans@0.3:", length=4000,
+                               n_cores=4, arrival="det:2e6", ws_scale=0.125)
+    assert [t.window for t in wl.tenants] == [(0.0, 0.6), (0.3, 1.0)]
+    assert wl.has_churn()
+    # arrival override AND window on one tenant; mmpp commas still glue
+    wl2 = tenancy.make_workload(
+        "cfd@poisson:2e6@0:0.5,kmeans@onoff:8e6,1e-3,3e-3@0.3:",
+        length=3000, n_cores=4)
+    assert [t.window for t in wl2.tenants] == [(0.0, 0.5), (0.3, 1.0)]
+    assert [type(t.arrival).__name__ for t in wl2.tenants] == \
+        ["Poisson", "MMPP"]
+    with pytest.raises(AssertionError):     # empty window
+        tenancy.make_workload("cfd@0.7:0.2", length=100, n_cores=2)
+    with pytest.raises(AssertionError):     # duplicate window segments
+        tenancy.make_workload("cfd@0:0.5@0.2:0.8", length=100, n_cores=2)
+
+
+def test_windows_shift_time_and_scale_volume():
+    wl = tenancy.make_workload("cfd@0:0.5,kmeans", length=8000, n_cores=4,
+                               arrival="det:2e6", ws_scale=0.125)
+    counts = wl.tenant_counts()
+    # half-window tenant sends ~half the full tenant's volume (same rate)
+    assert counts[0] == pytest.approx(counts[1] / 2, rel=0.02)
+    t = wl.t_s
+    cfd_last = t[wl.tenant_id == 0].max()
+    assert cfd_last <= 0.55 * wl.span_s       # departed by its window end
+    # no churn => all-default windows, masks constant over epochs
+    wl_none = tenancy.make_workload("cfd,kmeans", length=4000, n_cores=4)
+    assert not wl_none.has_churn()
+    assert wl_none.active_signature(0, 500) == \
+        wl_none.active_signature(3500, 4000) == 0b11
+
+
+def test_active_masks_follow_windows():
+    wl = tenancy.make_workload("cfd@0:0.6,kmeans@0.3:", length=6000,
+                               n_cores=4, arrival="det:2e6", ws_scale=0.125)
+    bounds = wl.epoch_bounds(epoch_len=600)
+    sigs = [wl.active_signature(lo, hi) for lo, hi in bounds]
+    assert sigs[0] == 0b01                    # only cfd at the start
+    assert sigs[-1] == 0b10                   # only kmeans at the end
+    assert 0b11 in sigs                       # overlap in the middle
+    masks = wl.epoch_active_masks(bounds)
+    assert all(m.shape == (2,) for m in masks)
+    # window activity, not request presence: every request's tenant is
+    # active in its epoch
+    for (lo, hi), m in zip(bounds, masks):
+        assert all(m[np.unique(wl.tenant_id[lo:hi])])
+
+
+# ------------------------------------------- churn: attribution invariant
+
+def _churn_stream_sum_check(backend):
+    cfg = _cfg(compression=True)
+    wl = tenancy.make_workload("cfd@0:0.6,kmeans@0.3:", length=4000,
+                               n_cores=4, arrival="det:2e6", ws_scale=0.125)
+    st = EpochStream(cfg, wl, epoch_len=500, backend=backend)
+    st.run()
+    assert st.churn_events, "churn schedule produced no boundary"
+    glob = engine.simulate_parallel(cfg, wl.addrs, wl.writes, wl.levels, 0,
+                                    backend="jnp")
+    import jax
+    summed = jax.tree.map(lambda *xs: sum(np.asarray(x) for x in xs),
+                          *st.tenant_stats().values())
+    _int_identical(glob, summed, f"churn-sum-{backend}")
+
+
+def test_churn_masks_sum_to_global_jnp():
+    """Acceptance: per-tenant Stats of a churn workload sum to the
+    monolithic global run bit-identically (jnp backend)."""
+    _churn_stream_sum_check("jnp")
+
+
+def test_churn_masks_exact_under_mismatched_tenant_rates():
+    """Regression: activity must follow each tenant's *realized* arrival
+    interval, not window fractions of the composed span — with
+    per-tenant arrival rates the two frames disagree, and the old
+    span-fraction mask marked a tenant departed while its requests were
+    still arriving (silently counting them toward no tenant at all)."""
+    cfg = _cfg()
+    wl = tenancy.make_workload("cfd@det:1e6@0:0.6,kmeans@det:2e6",
+                               length=4000, n_cores=4, ws_scale=0.125)
+    bounds = wl.epoch_bounds(epoch_len=400)
+    for lo, hi in bounds:    # inactive => zero requests, every epoch
+        act = wl.active_mask(lo, hi)
+        counts = wl.tenant_counts(lo, hi)
+        assert all(act[k] or counts[k] == 0 for k in range(2)), \
+            (lo, hi, act, counts)
+    st = EpochStream(cfg, wl, epoch_len=400)
+    st.run()
+    glob = engine.simulate_parallel(cfg, wl.addrs, wl.writes, wl.levels, 0)
+    import jax
+    summed = jax.tree.map(lambda *xs: sum(np.asarray(x) for x in xs),
+                          *st.tenant_stats().values())
+    _int_identical(glob, summed, "rate-mismatch-sum")
+
+
+_pallas_ok, _pallas_why = engine.backend_status("pallas")
+
+
+@pytest.mark.skipif(not _pallas_ok, reason=_pallas_why)
+def test_churn_masks_sum_to_global_pallas():
+    """Same invariant on the Pallas backend (interpret mode off-TPU)."""
+    _churn_stream_sum_check("pallas")
+
+
+# --------------------------------------------------- churn: governor side
+
+def test_governor_context_first_set_is_not_churn():
+    gov = Governor(list(range(4)), GovernorConfig(warm_epochs=0))
+    gov.set_context(0b11)
+    assert gov.churn_resets == 0
+    gov.set_context(0b11)
+    assert gov.churn_resets == 0
+    gov.set_context(0b01)
+    assert gov.churn_resets == 1
+
+
+def test_governor_context_change_resets_and_remembers():
+    cands = list(range(6))
+    gov = Governor(cands, GovernorConfig(seed=1, warm_epochs=0))
+    reward_a = lambda c: 50.0 - 5 * c          # mix A: best at 0
+    reward_b = lambda c: 30.0 + 5 * c          # mix B: best at 5
+
+    def drive(fn, ctx, n):
+        for _ in range(n):
+            gov.set_context(ctx)
+            gov.observe(fn(gov.current), hint=0)
+            gov.decide()
+
+    drive(reward_a, 0b11, 40)
+    assert gov.current <= 1, gov.est
+    est_before = dict(gov.est)
+    drive(reward_b, 0b01, 1)                   # churn: B arrives
+    assert gov.churn_resets == 1
+    assert gov.est != est_before               # estimates were cleared
+    drive(reward_b, 0b01, 50)
+    assert gov.current >= 4, gov.est
+    # re-entering mix A jumps straight to its remembered split
+    jumps = gov.phase_jumps
+    drive(reward_a, 0b11, 2)
+    assert gov.churn_resets == 2
+    assert gov.phase_jumps == jumps + 1
+    assert gov.current <= 1, (gov.current, gov.ctx_table)
+
+
+def test_governor_context_scopes_phase_table_keys():
+    """The same signature bucket under different contexts must not share
+    phase-table entries."""
+    gov = Governor(list(range(6)), GovernorConfig(seed=0, warm_epochs=0))
+    gov.set_context(0b01)
+    gov.observe(10.0, signature=0.5)
+    key1 = gov._phase_key
+    gov.set_context(0b11)
+    gov.observe(10.0, signature=0.5)
+    assert gov._phase_key != key1
+
+
+def test_simulate_online_counts_churn_resets():
+    wl = tenancy.make_workload("cfd@0:0.5,kmeans", length=12_000,
+                               n_cores=8, arrival="det:2e6", ws_scale=0.125)
+    r = simulate_online(wl, "Morpheus-ALL", epoch_len=1500,
+                        fixed_split=(32, 36))
+    assert r.churn_resets == 1
+    wl0 = tenancy.make_workload("cfd,kmeans", length=6_000, n_cores=8,
+                                arrival="det:2e6", ws_scale=0.125)
+    r0 = simulate_online(wl0, "Morpheus-ALL", epoch_len=1500,
+                         fixed_split=(32, 36))
+    assert r0.churn_resets == 0
+
+
+# ----------------------------------------------------------- SLO budgeter
+
+def test_slo_budgeter_converges_on_constant_stream():
+    """Acceptance: constant ns/lookup => the budget converges to the
+    largest SLO-compliant round size and stays there."""
+    b = SLOBudgeter(slo_ms=1.0, min_batch=1, max_batch=256,
+                    initial_batch=4)
+    ns_per_lookup, lookups_per_req = 12_500.0, 8
+    budgets = []
+    for _ in range(12):
+        n = b.next_budget()
+        budgets.append(n)
+        b.observe(ns_per_lookup, lookups=n * lookups_per_req, requests=n)
+    # 1 ms / (12.5 us * 8) = 10 requests per round
+    assert budgets[0] == 4
+    assert budgets[-1] == 10 and budgets[-2] == 10
+    assert b.ns_per_request == pytest.approx(1e5)
+
+
+def test_slo_budgeter_clips_and_freezes_on_idle():
+    b = SLOBudgeter(slo_ms=100.0, min_batch=2, max_batch=16)
+    assert b.next_budget() == 2                # no telemetry yet: min
+    b.observe(10.0, lookups=10, requests=10)   # absurdly cheap requests
+    assert b.next_budget() == 16               # clipped to max
+    before = b.ns_per_request
+    b.observe(0.0, lookups=0, requests=0)      # idle round: frozen
+    assert b.ns_per_request == before
+    assert b.rounds_observed == 1
+    with pytest.raises(AssertionError):
+        SLOBudgeter(slo_ms=0.0)
+
+
+def test_slo_batches_round_robin_across_tenants():
+    b = SLOBudgeter(slo_ms=1.0, min_batch=4, max_batch=4)
+    gen = slo_batches("a,b", b, prompt_len=8)
+    batch = next(gen)
+    assert [name for name, _ in batch] == ["a", "b", "a", "b"]
+    batch2 = next(gen)                         # rotation continues
+    assert [name for name, _ in batch2] == ["a", "b", "a", "b"]
+    assert all(len(toks) == 8 for _, toks in batch)
+
+
+# ------------------------------------- serving governor: idle EMA freeze
+
+class _FakePool:
+    """Minimal stand-in for MorpheusPagePool: scripted stats deltas."""
+
+    class _Cfg:
+        num_cache_chips = 2
+
+    def __init__(self):
+        self.cfg = self._Cfg()
+        self.stats = PoolStats.zero()
+
+    def busy(self, lookups=100, ns_per_lookup=50.0):
+        self.stats = self.stats + PoolStats(
+            conv_hits=lookups, conv_misses=0, ext_hits=0, ext_false_pos=0,
+            ext_pred_miss=0, backing_fetches=0,
+            time_ns=lookups * ns_per_lookup, energy_nJ=0.0)
+
+    def telemetry(self):
+        return {"ext_occupancy": 0.5, "pred_accuracy": 1.0}
+
+    def reconfigure(self, n):
+        self.cfg.num_cache_chips = n
+        return 0
+
+
+def test_serving_governor_idle_freezes_reward_ema():
+    """The bugfix: a long zero-lookup idle gap must leave the reward
+    EMA, the estimates and the phase detector untouched — previously
+    only observe/decide were skipped."""
+    pool = _FakePool()
+    sg = ServingGovernor(pool, chip_candidates=(0, 2, 4),
+                         gcfg=GovernorConfig(epsilon=0.0, epsilon_min=0.0,
+                                             warm_epochs=0))
+    for _ in range(4):
+        pool.busy()
+        sg.tick()
+    ema = sg.reward_ema
+    est = dict(sg.gov.est)
+    eps = sg.gov.eps
+    shifts = sg.gov.phase_shifts
+    assert ema is not None and est
+    for _ in range(50):                        # long idle gap
+        rec = sg.tick()
+        assert rec["idle"] and rec["reward_ema"] == ema
+    assert sg.reward_ema == ema
+    assert sg.gov.est == est
+    assert sg.gov.eps == eps
+    # traffic resumes at the same latency: no spurious phase change
+    pool.busy()
+    rec = sg.tick()
+    assert not rec.get("idle")
+    assert sg.gov.phase_shifts == shifts
+
+
+def test_serving_governor_ema_smooths_reward():
+    pool = _FakePool()
+    sg = ServingGovernor(pool, chip_candidates=(0, 2, 4), ema_alpha=0.5,
+                         gcfg=GovernorConfig(epsilon=0.0, epsilon_min=0.0,
+                                             warm_epochs=0))
+    pool.busy(ns_per_lookup=50.0)
+    r1 = sg.tick()
+    assert r1["reward_ema"] == pytest.approx(r1["reward"])
+    pool.busy(ns_per_lookup=150.0)
+    r2 = sg.tick()
+    assert r2["reward_ema"] == pytest.approx(
+        0.5 * r1["reward"] + 0.5 * r2["reward"])
+
+
+def test_serving_governor_ema_reseeds_after_switch():
+    """A chip reconfiguration changes the reward's chip-cost term: the
+    EMA reseeds at the new split instead of bleeding the old split's
+    reward into post-switch estimates."""
+    pool = _FakePool()
+    sg = ServingGovernor(pool, chip_candidates=(0, 2, 4),
+                         gcfg=GovernorConfig(epsilon=1.0, epsilon_min=1.0,
+                                             warm_epochs=0, seed=0))
+    for _ in range(8):
+        pool.busy()
+        rec = sg.tick()
+        if rec["switched"]:
+            assert sg.reward_ema is None
+            assert rec["reward_ema"] is not None   # the observed value
+            pool.busy()
+            r2 = sg.tick()
+            assert r2["reward_ema"] == pytest.approx(r2["reward"])
+            return
+    pytest.fail("governor never switched under full exploration")
+
+
+# ------------------------------------------------- docs checker additions
+
+def _load_check_docs():
+    p = Path(__file__).resolve().parents[1] / "tools" / "check_docs.py"
+    spec = importlib.util.spec_from_file_location("check_docs", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_docs_module_coverage_negative(tmp_path):
+    cd = _load_check_docs()
+    pkg = tmp_path / "src" / "repro" / "sub"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("")       # exempt
+    (pkg / "covered.py").write_text("")
+    (pkg / "orphan.py").write_text("")
+    doc = tmp_path / "docs"
+    doc.mkdir()
+    (doc / "x.md").write_text("see `sub/covered.py` for details")
+    errs = cd.module_coverage_errors(tmp_path, [doc / "x.md"])
+    assert len(errs) == 1 and "sub/orphan.py" in errs[0]
+    # dotted module references also count as mentions
+    (doc / "x.md").write_text("`sub/covered.py` and `repro.sub.orphan`")
+    assert cd.module_coverage_errors(tmp_path, [doc / "x.md"]) == []
+
+
+def test_check_docs_reachability_negative(tmp_path):
+    cd = _load_check_docs()
+    doc = tmp_path / "docs"
+    doc.mkdir()
+    (doc / "a.md").write_text("leads to [b](b.md)")
+    (doc / "b.md").write_text("terminal")
+    (doc / "lost.md").write_text("nobody links here")
+    errs = cd.reachability_errors(tmp_path)    # no index at all
+    assert errs == ["docs/README.md index page is missing"]
+    (doc / "README.md").write_text("start at [a](a.md)")
+    errs = cd.reachability_errors(tmp_path)
+    assert len(errs) == 1 and "lost.md" in errs[0]     # a,b transitively ok
+    (doc / "b.md").write_text("now [lost](lost.md) is linked")
+    assert cd.reachability_errors(tmp_path) == []
+
+
+def test_check_docs_repo_is_clean():
+    """The real tree passes all three checks (paths, coverage, reach)."""
+    cd = _load_check_docs()
+    root = Path(__file__).resolve().parents[1]
+    docs = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    assert cd.module_coverage_errors(root, docs) == []
+    assert cd.reachability_errors(root) == []
