@@ -75,6 +75,14 @@ def mean_std(xs: Sequence[float]) -> Tuple[float, float]:
     import numpy as np
     a = np.asarray(list(xs), float)
     return float(a.mean()), float(a.std())
+
+
+def fmt_mean_std(mean: float, std: float, prec: int = 3) -> str:
+    """CSV cell for a per-seed aggregate: ``m`` at one seed, ``m±s``
+    when --seeds turned the cell into a distribution."""
+    if SEEDS <= 1:
+        return f"{mean:.{prec}f}"
+    return f"{mean:.{prec}f}±{std:.{prec}f}"
 GRID = GRID_OF[PROFILE]
 CHEAP_GRID = GRID_OF[CHEAP_PROFILE]
 # Morpheus variants recompile per distinct cache-chip count; keep that grid

@@ -175,6 +175,40 @@ def kv_cache_specs(cfg: ArchConfig, mesh: Mesh, global_batch: int) -> Dict[str, 
     return out
 
 
+# ------------------------------------------------------------ fleet axis
+#
+# The cache-sim fleet (runtime/fleet.py) stacks N replicas' EngineState
+# rows along dim0 and advances them as one dispatch; over a multi-device
+# mesh that dim shards over the ``fleet`` axis.  Every EngineState /
+# PackedTraces leaf carries the replica-batch dim leading, so one
+# PartitionSpec prefix covers the whole pytree.
+
+FLEET_AXIS = "fleet"
+
+
+def fleet_spec() -> P:
+    """Pytree-prefix PartitionSpec for replica-stacked state: dim0
+    (the replica/tenant-row batch) shards over the fleet axis, every
+    other dim stays local to its device."""
+    return P(FLEET_AXIS)
+
+
+def fleet_padding(n_rows: int, mesh: Optional[Mesh] = None, *,
+                  bucket: bool = True) -> int:
+    """Rows of padding so a replica batch (a) buckets to a power of two
+    (bounds jit recompiles as governors diverge and replica groups churn,
+    same trick as ``engine._bucket`` on trace length) and (b) tiles the
+    fleet mesh axis exactly (shard_map requires dim0 divisible by the
+    axis size).  Padding rows are fresh ``engine.init_state`` rows fed
+    empty traces — provable no-ops that are sliced off after the step."""
+    assert n_rows > 0
+    target = n_rows if not bucket else 1 << (n_rows - 1).bit_length()
+    if mesh is not None and FLEET_AXIS in mesh.shape:
+        ax = mesh.shape[FLEET_AXIS]
+        target = ((target + ax - 1) // ax) * ax
+    return target - n_rows
+
+
 def cache_shardings(cfg: ArchConfig, caches_shape: Any, mesh: Mesh,
                     global_batch: int) -> Any:
     table = kv_cache_specs(cfg, mesh, global_batch)

@@ -14,10 +14,18 @@ be in cache mode for the work arriving *right now*?
     with hysteresis and phase-shift detection.
   * ``telemetry`` — per-epoch ring-buffer log with JSON/CSV export,
     consumed by ``tools/bench_runtime.py`` and ``benchmarks/fig_online``.
+  * ``fleet``     — N replicas per dispatch: same-config replicas batch
+    into one (optionally shard_map-sharded) engine step, with a shared
+    split-advisor for cross-replica warm starts (docs/fleet.md).
 """
+from .fleet import (FleetResult, ReplicaSpec,  # noqa: F401
+                    SplitAdvisor, build_replicas, convergence_epoch,
+                    run_serial, simulate_fleet)
 from .governor import (SERVING_GCFG, Governor,  # noqa: F401
-                       GovernorConfig, OnlineResult, ServingGovernor,
+                       GovernorConfig, GovernorState, OnlineReplica,
+                       OnlineResult, ServingGovernor,
                        candidates_for, demo_pool, describe_tick,
                        qos_reward, simulate_online, tenant_epoch_ipcs)
 from .stream import EpochStream, HandoffReport, handoff  # noqa: F401
-from .telemetry import EpochRecord, TelemetryLog  # noqa: F401
+from .telemetry import (EpochRecord, TelemetryLog,  # noqa: F401
+                        merge_logs)

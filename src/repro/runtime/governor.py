@@ -30,7 +30,7 @@ from __future__ import annotations
 
 from collections import Counter
 from dataclasses import dataclass, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -117,6 +117,45 @@ SERVING_GCFG = GovernorConfig(
     hysteresis=3, min_gain=0.08, epsilon=0.15, epsilon_min=0.03,
     phase_threshold=0.5, signature_threshold=0.35,
     hint_stale_after=40, hint_max_strikes=1)
+
+
+class GovernorState(NamedTuple):
+    """Host-side snapshot of a ``Governor``'s mutable state.
+
+    An explicit pytree (scalar/dict leaves) instead of live object
+    attributes, so a replica's governor can be exported, checkpointed,
+    shared across a fleet (the ``runtime.fleet.SplitAdvisor`` warm
+    start reads the tables out of one replica's state and seeds
+    another's) and restored bit-exactly — including the numpy RNG
+    state, so a restored governor's decision stream continues exactly
+    where the exported one stopped.  The candidate list itself is
+    configuration, not state: ``restore_state`` requires the same
+    candidates the state was exported under.
+    """
+    index: int                       # current candidate index
+    est: Dict[int, float]            # candidate -> reward estimate
+    sig: Dict[int, float]            # candidate -> last signature
+    last_visit: Dict[int, int]       # candidate -> last epoch visited
+    eps: float
+    dwell: int
+    warm_left: int
+    measured: bool
+    hint: int
+    hint_strikes: Dict[int, int]
+    probe: Optional[Tuple[int, Optional[float]]]
+    phase_table: Dict[int, int]
+    phase_key: Optional[int]
+    jumped: bool
+    ctx: Optional[int]
+    ctx_table: Dict[int, int]
+    pending_jump: Optional[int]
+    churn_resets: int
+    epoch: int
+    switches: int
+    phase_shifts: int
+    phase_jumps: int
+    last_switched: bool
+    rng_state: Dict                  # numpy bit-generator state
 
 
 class Governor:
@@ -227,6 +266,65 @@ class Governor:
     @property
     def current(self):
         return self.candidates[self._i]
+
+    def best_estimate(self) -> Optional[Tuple[object, float]]:
+        """(candidate, estimated reward) of the best-known candidate, or
+        None before any measured epoch — what the fleet's split-advisor
+        shares across replicas serving the same mix."""
+        if not self.est:
+            return None
+        j = max(self.est, key=lambda k: self.est[k])
+        return self.candidates[j], self.est[j]
+
+    # -------------------------------------------------------- state pytree
+    def export_state(self) -> GovernorState:
+        """Snapshot every mutable field (dicts copied, RNG included)."""
+        return GovernorState(
+            index=self._i, est=dict(self.est), sig=dict(self.sig),
+            last_visit=dict(self.last_visit), eps=self.eps,
+            dwell=self.dwell, warm_left=self.warm_left,
+            measured=self.measured, hint=self.hint,
+            hint_strikes=dict(self.hint_strikes), probe=self._probe,
+            phase_table=dict(self.phase_table), phase_key=self._phase_key,
+            jumped=self._jumped, ctx=self._ctx,
+            ctx_table=dict(self.ctx_table),
+            pending_jump=self._pending_jump,
+            churn_resets=self.churn_resets, epoch=self.epoch,
+            switches=self.switches, phase_shifts=self.phase_shifts,
+            phase_jumps=self.phase_jumps,
+            last_switched=self.last_switched,
+            rng_state=self.rng.bit_generator.state)
+
+    def restore_state(self, s: GovernorState) -> None:
+        """Inverse of ``export_state``.  The governor must have been
+        built over the same candidate list the state was exported
+        under (indices in the state refer into it)."""
+        assert 0 <= s.index < len(self.candidates), \
+            "state does not match this governor's candidate list"
+        self._i = s.index
+        self.est = dict(s.est)
+        self.sig = dict(s.sig)
+        self.last_visit = dict(s.last_visit)
+        self.eps = s.eps
+        self.dwell = s.dwell
+        self.warm_left = s.warm_left
+        self.measured = s.measured
+        self.hint = s.hint
+        self.hint_strikes = dict(s.hint_strikes)
+        self._probe = s.probe
+        self.phase_table = dict(s.phase_table)
+        self._phase_key = s.phase_key
+        self._jumped = s.jumped
+        self._ctx = s.ctx
+        self.ctx_table = dict(s.ctx_table)
+        self._pending_jump = s.pending_jump
+        self.churn_resets = s.churn_resets
+        self.epoch = s.epoch
+        self.switches = s.switches
+        self.phase_shifts = s.phase_shifts
+        self.phase_jumps = s.phase_jumps
+        self.last_switched = s.last_switched
+        self.rng.bit_generator.state = s.rng_state
 
     # ------------------------------------------------------------ observe
     def observe(self, reward: float, hint: int = 0,
@@ -608,12 +706,24 @@ def qos_reward(gcfg: GovernorConfig, ipcs: Sequence[float],
     return float(min(x[i] / wtil[i] for i in np.nonzero(w > 0)[0]))
 
 
-def _epoch_telemetry(cfg, state, delta: Stats) -> Tuple[float, float, float]:
-    """(ext occupancy, predictor accuracy, BDI bytes saved) of an epoch."""
+def _epoch_telemetry(cfg, state, delta: Stats, *,
+                     ext_used: Optional[np.ndarray] = None,
+                     ext_valid: Optional[np.ndarray] = None,
+                     ) -> Tuple[float, float, float]:
+    """(ext occupancy, predictor accuracy, BDI bytes saved) of an epoch.
+
+    ``ext_used``/``ext_valid`` may be pre-fetched host copies of the
+    state's extended-tier arrays: the fleet reads every replica's
+    telemetry back in ONE batched transfer per epoch and passes the
+    rows in here, so telemetry costs no per-replica host sync.  By
+    default (scalar path) they are read from the device state.
+    """
     occupancy = saved = 0.0
     if cfg.ext_enabled:
-        used = np.asarray(state.ext_used[0])
-        valid = np.asarray(state.ext_valid[0])
+        used = np.asarray(state.ext_used[0] if ext_used is None
+                          else ext_used[0])
+        valid = np.asarray(state.ext_valid[0] if ext_valid is None
+                           else ext_valid[0])
         budget = cfg.ext_budget_bytes * max(cfg.amap.ext_sets, 1)
         occupancy = float(used.sum()) / max(budget, 1)
         saved = float(int(valid.sum()) * BLOCK_BYTES - used.sum())
@@ -622,6 +732,329 @@ def _epoch_telemetry(cfg, state, delta: Stats) -> Tuple[float, float, float]:
     pm = float(np.asarray(delta.ext_pred_miss))
     acc = (h + pm) / max(h + fp + pm, 1.0)
     return occupancy, acc, saved
+
+
+class OnlineReplica:
+    """One governed (workload, stream position, governor) replica with
+    the device step factored out of the loop.
+
+    ``simulate_online``'s prologue and per-epoch epilogue as an explicit
+    object: ``epoch_inputs()`` describes the next epoch's trace slice at
+    the governor's current split (the arguments of one ``engine.pack``
+    call), the caller advances ``state`` through the engine however it
+    likes, and ``consume()`` applies the host-side epilogue — flush
+    charging, reward, governor observe/decide, warm handoff, telemetry.
+
+    The scalar path (``simulate_online``) advances ONE replica with one
+    ``engine.advance_packed`` dispatch per epoch; ``runtime.fleet``
+    stacks MANY replicas' state rows into one batched, optionally
+    shard_map-sharded dispatch and feeds each replica its row slice.
+    Both run exactly this code for everything outside the device step,
+    which is what keeps the fleet bit-identical per replica to N scalar
+    runs.
+    """
+
+    def __init__(self, phases, system: str, *,
+                 length: int = 60_000, epoch_len: int = 3_000,
+                 window_s: Optional[float] = None,
+                 target_epoch: Optional[int] = None,
+                 seed: int = 0,
+                 gcfg: GovernorConfig = GovernorConfig(),
+                 candidates: Optional[Sequence[Split]] = None,
+                 fixed_split: Optional[Split] = None,
+                 warm_handoff: bool = True,
+                 burn_in: Optional[int] = None,
+                 log: Optional[TelemetryLog] = None,
+                 initial_split: Optional[Split] = None,
+                 name: str = ""):
+        workload = phases if hasattr(phases, "tenants") else None
+        spec = cs.SYSTEMS[system]
+        ws_scale = 1.0 / cs.SIM_SCALE
+        if workload is not None:
+            wl = workload
+            length = len(wl)
+            phase_names = [t.name for t in wl.tenants]
+            primary = wl.primary_app
+            n_tenants = len(wl.tenants)
+            if window_s is None and target_epoch is None:
+                epoch_bounds = wl.epoch_bounds(epoch_len=epoch_len)
+            else:
+                epoch_bounds = wl.epoch_bounds(window_s=window_s,
+                                               target_epoch=target_epoch)
+            self.masks = wl.tenant_masks()
+            self.apps = sorted(t.app for t in wl.tenants)
+        else:
+            phases = [phases] if isinstance(phases, str) else list(phases)
+            phase_names = phases
+            primary = next((a for a in phases
+                            if tr.WORKLOADS[a].memory_bound), phases[0])
+            n_tenants = 1
+            from ..workloads.arrivals import epochs_by_count
+            epoch_bounds = epochs_by_count(length, epoch_len)
+            self.apps = sorted(phases)
+        assert gcfg.objective == "global" or workload is not None, \
+            "QoS objectives need a composed workloads.Workload"
+        if gcfg.tenant_weights is not None:
+            assert workload is not None \
+                and len(gcfg.tenant_weights) == n_tenants, \
+                (f"tenant_weights {gcfg.tenant_weights} does not match "
+                 f"the workload's {n_tenants} tenants")
+        churn = workload is not None and wl.has_churn()
+        if fixed_split is not None:
+            cands: List[Split] = [tuple(fixed_split)]        # type: ignore
+            gcfg = replace(gcfg, epsilon=0.0, epsilon_min=0.0)
+        elif candidates is not None:
+            cands = sorted(set(tuple(c)                      # type: ignore
+                               for c in candidates))
+        else:
+            cands = candidates_for(primary, system, length=length)
+        initial = None
+        if initial_split is not None and len(cands) > 1:
+            want = tuple(initial_split)
+            initial = cands.index(want) if want in cands else min(
+                range(len(cands)), key=lambda j: abs(cands[j][0] - want[0]))
+        gov = Governor(cands, gcfg, initial=initial)
+
+        if workload is None:
+            # one trace per candidate compute-core count, phase-concat
+            trace_of = {}
+            for nc in sorted({c[0] for c in cands}):
+                trace_of[nc] = tr.generate_phased(phases, n_cores=nc,
+                                                  length=length, seed=seed,
+                                                  ws_scale=ws_scale)
+            self.trace_of = trace_of
+            self.bounds = tr.phase_bounds(len(phases), length)
+
+        mean_epoch = max(length // max(len(epoch_bounds), 1), 1)
+        if burn_in is None:
+            ws_blocks = tr.WORKLOADS[primary].working_set_bytes \
+                // cs.SIM_SCALE // tr.BLOCK_BYTES
+            burn_in = max(1, int(np.ceil(ws_blocks / mean_epoch)))
+
+        self.system = system
+        self.spec = spec
+        self.workload = workload
+        self.phases = phases
+        self.phase_names = phase_names
+        self.primary = primary
+        self.n_tenants = n_tenants
+        self.epoch_bounds = epoch_bounds
+        self.churn = churn
+        self.gcfg = gcfg
+        self.fixed_split = fixed_split
+        self.warm_handoff = warm_handoff
+        self.seed = seed
+        self.burn_in = burn_in
+        self.gov = gov
+        self.name = name or f"{system}:{'+'.join(phase_names)}#{seed}"
+        self.log = log if log is not None else TelemetryLog()
+        self.records: List[EpochRecord] = []
+        self.state = engine.init_state(
+            cs.build_config(spec, gov.current[1]), n_tenants)
+        self.total_stats = None
+        self.pending_flush = None    # last transition's flush -> next epoch
+        self.epoch_i = 0
+        self.t_all = 0.0
+        self.insts_all = 0.0
+        self.t_steady = 0.0
+        self.insts_steady = 0.0
+        self._cur = None             # epoch_inputs() -> consume() handshake
+
+    @property
+    def done(self) -> bool:
+        return self.epoch_i >= len(self.epoch_bounds)
+
+    @property
+    def mix_key(self) -> Tuple:
+        """What the split-advisor considers "the same mix": system spec +
+        the (sorted) set of apps the replica serves."""
+        return (self.system, tuple(self.apps))
+
+    def epoch_inputs(self):
+        """(cfg, traces, pos0, count) for the next epoch at the
+        governor's current split — the arguments of one ``engine.pack``
+        call.  Read-only: calling it again before ``consume`` describes
+        the same epoch."""
+        assert not self.done, "replica already finished"
+        lo, hi = self.epoch_bounds[self.epoch_i]
+        nc, nk = self.gov.current
+        cfg = cs.build_config(self.spec, nk)
+        if self.workload is not None:
+            wl = self.workload
+            addrs, writes, levels = wl.addrs, wl.writes, wl.levels
+            count = [m[lo:hi] for m in self.masks] \
+                if self.n_tenants > 1 else None
+        else:
+            addrs, writes, levels = self.trace_of[nc]
+            count = None
+        traces = [(addrs[lo:hi], writes[lo:hi], levels[lo:hi], 0)] \
+            * self.n_tenants
+        self._cur = (lo, hi, nc, nk, cfg)
+        return cfg, traces, [lo] * self.n_tenants, count
+
+    def consume(self, state, delta_rows: Stats, *,
+                ext_used: Optional[np.ndarray] = None,
+                ext_valid: Optional[np.ndarray] = None) -> None:
+        """Epilogue of the epoch last described by ``epoch_inputs``.
+
+        ``state`` is the advanced ``EngineState`` (this replica's rows);
+        ``delta_rows`` the epoch's Stats delta with numpy leaves of
+        shape (n_tenants,).  ``ext_used``/``ext_valid`` are optional
+        pre-fetched host copies of the state's extended-tier telemetry
+        (rows of this replica) — the fleet passes them so telemetry
+        needs no per-replica device sync.
+        """
+        assert self._cur is not None, "consume() without epoch_inputs()"
+        lo, hi, nc, nk, cfg = self._cur
+        self._cur = None
+        gov, gcfg = self.gov, self.gcfg
+        workload = wl = self.workload
+        system, seed = self.system, self.seed
+        self.state = state
+        delta = jax.tree.map(lambda x: x.sum(axis=0), delta_rows)
+        t_counts = wl.tenant_counts(lo, hi) if workload is not None \
+            else None
+        if self.pending_flush is not None:
+            # the previous transition's flush writebacks are real
+            # traffic: charge them to this epoch so the reward, exec
+            # time and the aggregate IPC all pay for the switch (handoff
+            # also charges them on the carried state.stats)
+            delta = jax.tree.map(np.add, delta, self.pending_flush)
+            if workload is not None:
+                # the per-tenant reward rows must pay too, or a QoS
+                # objective would see switches as free and lose the
+                # thrashing disincentive; apportion by request share
+                # (reward attribution only — the carried per-tenant
+                # stats are charged exactly via _attribute_flush)
+                shares = t_counts / max(int(t_counts.sum()), 1)
+
+                def _apportion(rows, f):
+                    if np.issubdtype(rows.dtype, np.floating):
+                        return (rows + float(f) * shares).astype(rows.dtype)
+                    return rows
+                delta_rows = jax.tree.map(_apportion, delta_rows,
+                                          self.pending_flush)
+            self.pending_flush = None
+        self.total_stats = delta if self.total_stats is None else \
+            jax.tree.map(np.add, self.total_stats, delta)
+        n_req = hi - lo
+        tenant_ipc: Optional[List[float]] = None
+        if workload is not None:
+            app = wl.app_at(lo, hi)
+            insts = wl.instructions(lo, hi)
+            rr = cs._finalize(cs.RunPoint(app, system, nc, nk, n_req,
+                                          seed),
+                              nc, nk, n_req, delta, insts=insts,
+                              knee=wl.contention_knee(lo, hi))
+            tenant_ipc = tenant_epoch_ipcs(wl, system, nc, nk, lo, hi,
+                                           delta_rows, seed,
+                                           counts=t_counts)
+        else:
+            app = self.phases[int(np.searchsorted(self.bounds, lo,
+                                                  side="right"))]
+            insts = tr.instructions_for(app, n_req)
+            rr = cs._finalize(cs.RunPoint(app, system, nc, nk, n_req,
+                                          seed),
+                              nc, nk, n_req, delta)
+        if workload is not None and gcfg.objective != "global":
+            reward = qos_reward(gcfg, tenant_ipc, t_counts)
+        else:
+            reward = rr.ipc
+        self.t_all += rr.exec_time_s
+        self.insts_all += insts
+        if self.epoch_i >= self.burn_in:
+            self.t_steady += rr.exec_time_s
+            self.insts_steady += insts
+
+        occ, acc, saved = _epoch_telemetry(cfg, state, delta,
+                                           ext_used=ext_used,
+                                           ext_valid=ext_valid)
+        # bottleneck direction: the runtime sees which term binds (stall
+        # counters in a real system; the roofline terms here).  Compute-
+        # bound => more compute cores can help (+1); a full extended
+        # tier on a memory-bound epoch => more cache capacity (-1).
+        t_comp = insts / (nc * cs.IPC_PER_CORE * cs.FREQ_GHZ * 1e9)
+        if t_comp >= 0.99 * rr.exec_time_s:
+            hint = +1
+        elif occ > 0.9:
+            hint = -1
+        else:
+            hint = 0
+        if self.churn:
+            # churn boundary = active-tenant signature change: context
+            # reset (estimates describe a departed mix) + phase keys
+            # scoped to the new mix; a remembered mix is jumped to on
+            # the next decide()
+            gov.set_context(wl.active_signature(lo, hi))
+        gov.observe(reward, hint, signature=rr.llc_hit_rate)
+        eps = gov.eps
+        new_split = gov.decide() if self.fixed_split is None \
+            else gov.current
+        flush_wbs = 0
+        if new_split != (nc, nk):
+            new_cfg = cs.build_config(self.spec, new_split[1])
+            if new_cfg != cfg:
+                state, rep = rt_stream.handoff(cfg, state, new_cfg,
+                                               migrate=self.warm_handoff)
+                state = _attribute_flush(state, rep, workload, cfg)
+                self.state = state
+                flush_wbs = rep.flush_writebacks // self.n_tenants
+                if flush_wbs:
+                    e_dram = rt_stream.flush_energy_nJ_per_block(cfg)
+                    z = jax.tree.map(
+                        lambda x: np.zeros((), np.asarray(x).dtype), delta)
+                    self.pending_flush = z._replace(
+                        writebacks=np.int32(flush_wbs),
+                        dram_bytes=np.float32(flush_wbs * tr.BLOCK_BYTES),
+                        energy_nJ=np.float32(flush_wbs * e_dram))
+        rec = EpochRecord(
+            epoch=self.epoch_i, pos=lo, app=app, n_compute=nc,
+            n_cache=nk, requests=n_req,
+            hit_rate=rr.llc_hit_rate, ext_occupancy=occ,
+            pred_accuracy=acc, bytes_saved=saved, ipc=rr.ipc,
+            exec_time_s=rr.exec_time_s,
+            reward=reward, switched=gov.last_switched,
+            flush_writebacks=flush_wbs, epsilon=eps,
+            tenants="" if workload is None else "|".join(
+                f"{t.name}:{c}" for t, c in zip(wl.tenants, t_counts)),
+            tenant_ipc="" if tenant_ipc is None else "|".join(
+                f"{t.name}:{x:.4f}"
+                for t, x in zip(wl.tenants, tenant_ipc)))
+        self.records.append(rec)
+        self.log.append(rec)
+        self.epoch_i += 1
+
+    def result(self) -> OnlineResult:
+        """Aggregate the finished run (callable once ``done``)."""
+        gov, records, workload = self.gov, self.records, self.workload
+        freq = cs.FREQ_GHZ * 1e9
+        ipc = self.insts_all / (self.t_all * freq) if self.t_all > 0 \
+            else 0.0
+        steady = self.insts_steady / (self.t_steady * freq) \
+            if self.t_steady > 0 else ipc
+        post = records[self.burn_in:] or records
+        dwelt = Counter((r.n_compute, r.n_cache) for r in post)
+        converged_split = max(dwelt, key=lambda s: dwelt[s])
+        conv_recs = [r for r in post
+                     if (r.n_compute, r.n_cache) == converged_split]
+        t_conv = sum(r.exec_time_s for r in conv_recs)
+        # per-epoch ipc = insts / (t * freq), so insts = ipc * t * freq:
+        # exact for both the phased and mixed-tenant reward paths
+        insts_conv = sum(r.ipc * r.exec_time_s for r in conv_recs) * freq
+        converged = insts_conv / (t_conv * freq) if t_conv > 0 else steady
+        tenant_stats = None
+        if workload is not None:
+            tenant_stats = {
+                t.name: jax.tree.map(lambda x, k=k: np.asarray(x[k]),
+                                     self.state.stats)
+                for k, t in enumerate(workload.tenants)}
+        return OnlineResult(
+            system=self.system, phases=self.phase_names, records=records,
+            log=self.log, stats=self.total_stats, ipc=ipc,
+            steady_ipc=steady, converged_ipc=converged,
+            exec_time_s=self.t_all, switches=gov.switches,
+            final_split=gov.current, converged_split=converged_split,
+            churn_resets=gov.churn_resets, tenant_stats=tenant_stats)
 
 
 def simulate_online(phases, system: str, *,
@@ -661,217 +1094,23 @@ def simulate_online(phases, system: str, *,
     ``fixed_split`` disables the governor (static-baseline mode).
     Aggregate IPC is time-weighted over epochs; ``steady_ipc`` skips the
     first ``burn_in`` epochs (default: one working-set fill).
+
+    This is the scalar driver over ``OnlineReplica`` — one engine
+    dispatch per epoch; ``runtime.fleet.simulate_fleet`` advances many
+    replicas per dispatch.
     """
-    workload = phases if hasattr(phases, "tenants") else None
-    spec = cs.SYSTEMS[system]
-    ws_scale = 1.0 / cs.SIM_SCALE
-    if workload is not None:
-        wl = workload
-        length = len(wl)
-        phase_names = [t.name for t in wl.tenants]
-        primary = wl.primary_app
-        n_tenants = len(wl.tenants)
-        if window_s is None and target_epoch is None:
-            epoch_bounds = wl.epoch_bounds(epoch_len=epoch_len)
-        else:
-            epoch_bounds = wl.epoch_bounds(window_s=window_s,
-                                           target_epoch=target_epoch)
-        masks = wl.tenant_masks()
-    else:
-        phases = [phases] if isinstance(phases, str) else list(phases)
-        phase_names = phases
-        primary = next((a for a in phases if tr.WORKLOADS[a].memory_bound),
-                       phases[0])
-        n_tenants = 1
-        from ..workloads.arrivals import epochs_by_count
-        epoch_bounds = epochs_by_count(length, epoch_len)
-    assert gcfg.objective == "global" or workload is not None, \
-        "QoS objectives need a composed workloads.Workload"
-    if gcfg.tenant_weights is not None:
-        assert workload is not None \
-            and len(gcfg.tenant_weights) == n_tenants, \
-            (f"tenant_weights {gcfg.tenant_weights} does not match the "
-             f"workload's {n_tenants} tenants")
-    churn = workload is not None and wl.has_churn()
-    if fixed_split is not None:
-        cands: List[Split] = [tuple(fixed_split)]        # type: ignore
-        gcfg = replace(gcfg, epsilon=0.0, epsilon_min=0.0)
-    elif candidates is not None:
-        cands = sorted(set(tuple(c) for c in candidates))  # type: ignore
-    else:
-        cands = candidates_for(primary, system, length=length)
-    gov = Governor(cands, gcfg)
-
-    if workload is None:
-        # one trace per candidate compute-core count, phase-concatenated
-        trace_of = {}
-        for nc in sorted({c[0] for c in cands}):
-            trace_of[nc] = tr.generate_phased(phases, n_cores=nc,
-                                              length=length, seed=seed,
-                                              ws_scale=ws_scale)
-        bounds = tr.phase_bounds(len(phases), length)
-
-    log = log if log is not None else TelemetryLog()
-    records: List[EpochRecord] = []
-    nc, nk = gov.current
-    cfg = cs.build_config(spec, nk)
-    state = engine.init_state(cfg, n_tenants)
-    total_stats = None
-    pending_flush = None     # last transition's flush cost -> next epoch
-    epoch_i = 0
-    t_all = 0.0
-    insts_all = 0.0
-    t_steady = 0.0
-    insts_steady = 0.0
-    mean_epoch = max(length // max(len(epoch_bounds), 1), 1)
-    if burn_in is None:
-        ws_blocks = tr.WORKLOADS[primary].working_set_bytes \
-            // cs.SIM_SCALE // tr.BLOCK_BYTES
-        burn_in = max(1, int(np.ceil(ws_blocks / mean_epoch)))
-
-    for lo, hi in epoch_bounds:
-        nc, nk = gov.current
-        cfg = cs.build_config(spec, nk)
-        if workload is not None:
-            addrs, writes, levels = wl.addrs, wl.writes, wl.levels
-            count = [m[lo:hi] for m in masks] if n_tenants > 1 else None
-        else:
-            addrs, writes, levels = trace_of[nc]
-            count = None
-        pt = engine.pack(cfg, [(addrs[lo:hi], writes[lo:hi],
-                                levels[lo:hi], 0)] * n_tenants,
-                         pos0=[lo] * n_tenants, count=count)
-        state, delta_b = engine.advance_packed(cfg, pt, state, backend)
-        delta_rows = jax.tree.map(np.asarray, delta_b)
-        delta = jax.tree.map(lambda x: x.sum(axis=0), delta_rows)
-        t_counts = wl.tenant_counts(lo, hi) if workload is not None else None
-        if pending_flush is not None:
-            # the previous transition's flush writebacks are real traffic:
-            # charge them to this epoch so the reward, exec time and the
-            # aggregate IPC all pay for the switch (handoff also charges
-            # them on the carried state.stats)
-            delta = jax.tree.map(np.add, delta, pending_flush)
-            if workload is not None:
-                # the per-tenant reward rows must pay too, or a QoS
-                # objective would see switches as free and lose the
-                # thrashing disincentive; apportion by request share
-                # (reward attribution only — the carried per-tenant
-                # stats are charged exactly via _attribute_flush)
-                shares = t_counts / max(int(t_counts.sum()), 1)
-
-                def _apportion(rows, f):
-                    if np.issubdtype(rows.dtype, np.floating):
-                        return (rows + float(f) * shares).astype(rows.dtype)
-                    return rows
-                delta_rows = jax.tree.map(_apportion, delta_rows,
-                                          pending_flush)
-            pending_flush = None
-        total_stats = delta if total_stats is None else \
-            jax.tree.map(np.add, total_stats, delta)
-        n_req = hi - lo
-        tenant_ipc: Optional[List[float]] = None
-        if workload is not None:
-            app = wl.app_at(lo, hi)
-            insts = wl.instructions(lo, hi)
-            rr = cs._finalize(cs.RunPoint(app, system, nc, nk, n_req, seed),
-                              nc, nk, n_req, delta, insts=insts,
-                              knee=wl.contention_knee(lo, hi))
-            tenant_ipc = tenant_epoch_ipcs(wl, system, nc, nk, lo, hi,
-                                           delta_rows, seed,
-                                           counts=t_counts)
-        else:
-            app = phases[int(np.searchsorted(bounds, lo, side="right"))]
-            insts = tr.instructions_for(app, n_req)
-            rr = cs._finalize(cs.RunPoint(app, system, nc, nk, n_req, seed),
-                              nc, nk, n_req, delta)
-        if workload is not None and gcfg.objective != "global":
-            reward = qos_reward(gcfg, tenant_ipc, t_counts)
-        else:
-            reward = rr.ipc
-        t_all += rr.exec_time_s
-        insts_all += insts
-        if epoch_i >= burn_in:
-            t_steady += rr.exec_time_s
-            insts_steady += insts
-
-        occ, acc, saved = _epoch_telemetry(cfg, state, delta)
-        # bottleneck direction: the runtime sees which term binds (stall
-        # counters in a real system; the roofline terms here).  Compute-
-        # bound => more compute cores can help (+1); a full extended tier
-        # on a memory-bound epoch => more cache capacity can help (-1).
-        t_comp = insts / (nc * cs.IPC_PER_CORE * cs.FREQ_GHZ * 1e9)
-        if t_comp >= 0.99 * rr.exec_time_s:
-            hint = +1
-        elif occ > 0.9:
-            hint = -1
-        else:
-            hint = 0
-        if churn:
-            # churn boundary = active-tenant signature change: context
-            # reset (estimates describe a departed mix) + phase keys
-            # scoped to the new mix; a remembered mix is jumped to on
-            # the next decide()
-            gov.set_context(wl.active_signature(lo, hi))
-        gov.observe(reward, hint, signature=rr.llc_hit_rate)
-        eps = gov.eps
-        new_split = gov.decide() if fixed_split is None else gov.current
-        flush_wbs = 0
-        if new_split != (nc, nk):
-            new_cfg = cs.build_config(spec, new_split[1])
-            if new_cfg != cfg:
-                state, rep = rt_stream.handoff(cfg, state, new_cfg,
-                                               migrate=warm_handoff)
-                state = _attribute_flush(state, rep, workload, cfg)
-                flush_wbs = rep.flush_writebacks // n_tenants
-                if flush_wbs:
-                    e_dram = rt_stream.flush_energy_nJ_per_block(cfg)
-                    z = jax.tree.map(
-                        lambda x: np.zeros((), np.asarray(x).dtype), delta)
-                    pending_flush = z._replace(
-                        writebacks=np.int32(flush_wbs),
-                        dram_bytes=np.float32(flush_wbs * tr.BLOCK_BYTES),
-                        energy_nJ=np.float32(flush_wbs * e_dram))
-        rec = EpochRecord(
-            epoch=epoch_i, pos=lo, app=app, n_compute=nc, n_cache=nk,
-            requests=n_req,
-            hit_rate=rr.llc_hit_rate, ext_occupancy=occ, pred_accuracy=acc,
-            bytes_saved=saved, ipc=rr.ipc, exec_time_s=rr.exec_time_s,
-            reward=reward, switched=gov.last_switched,
-            flush_writebacks=flush_wbs, epsilon=eps,
-            tenants="" if workload is None else "|".join(
-                f"{t.name}:{c}" for t, c in zip(wl.tenants, t_counts)),
-            tenant_ipc="" if tenant_ipc is None else "|".join(
-                f"{t.name}:{x:.4f}"
-                for t, x in zip(wl.tenants, tenant_ipc)))
-        records.append(rec)
-        log.append(rec)
-        epoch_i += 1
-
-    freq = cs.FREQ_GHZ * 1e9
-    ipc = insts_all / (t_all * freq) if t_all > 0 else 0.0
-    steady = insts_steady / (t_steady * freq) if t_steady > 0 else ipc
-    post = records[burn_in:] or records
-    dwelt = Counter((r.n_compute, r.n_cache) for r in post)
-    converged_split = max(dwelt, key=lambda s: dwelt[s])
-    conv_recs = [r for r in post
-                 if (r.n_compute, r.n_cache) == converged_split]
-    t_conv = sum(r.exec_time_s for r in conv_recs)
-    # per-epoch ipc = insts / (t * freq), so insts = ipc * t * freq: exact
-    # for both the phased and the mixed-tenant reward paths
-    insts_conv = sum(r.ipc * r.exec_time_s for r in conv_recs) * freq
-    converged = insts_conv / (t_conv * freq) if t_conv > 0 else steady
-    tenant_stats = None
-    if workload is not None:
-        tenant_stats = {t.name: jax.tree.map(lambda x, k=k: np.asarray(x[k]),
-                                             state.stats)
-                        for k, t in enumerate(wl.tenants)}
-    return OnlineResult(
-        system=system, phases=phase_names, records=records, log=log,
-        stats=total_stats, ipc=ipc, steady_ipc=steady,
-        converged_ipc=converged, exec_time_s=t_all,
-        switches=gov.switches, final_split=gov.current,
-        converged_split=converged_split, churn_resets=gov.churn_resets,
-        tenant_stats=tenant_stats)
+    rep = OnlineReplica(phases, system, length=length,
+                        epoch_len=epoch_len, window_s=window_s,
+                        target_epoch=target_epoch, seed=seed, gcfg=gcfg,
+                        candidates=candidates, fixed_split=fixed_split,
+                        warm_handoff=warm_handoff, burn_in=burn_in,
+                        log=log)
+    while not rep.done:
+        cfg, traces, pos0, count = rep.epoch_inputs()
+        pt = engine.pack(cfg, traces, pos0=pos0, count=count)
+        state, delta_b = engine.advance_packed(cfg, pt, rep.state, backend)
+        rep.consume(state, jax.tree.map(np.asarray, delta_b))
+    return rep.result()
 
 
 def _attribute_flush(state, rep: rt_stream.HandoffReport, workload,

@@ -36,7 +36,7 @@ import csv
 import json
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 
 @dataclass
@@ -119,6 +119,10 @@ class TelemetryLog:
                 w.writerow([d[k] for k in FIELDS])
         return path
 
+    def extend(self, recs: Sequence[EpochRecord]) -> None:
+        for r in recs:
+            self.append(r)
+
     # ------------------------------------------------------------ summary
     def summary(self) -> Dict:
         recs = self.records()
@@ -137,3 +141,18 @@ class TelemetryLog:
             "flush_writebacks": sum(r.flush_writebacks for r in recs),
             "final_split": (recs[-1].n_compute, recs[-1].n_cache),
         }
+
+
+def merge_logs(logs: Sequence[TelemetryLog],
+               capacity: Optional[int] = None) -> TelemetryLog:
+    """One log holding every replica's records (the fleet's aggregate
+    export path).  Records interleave by epoch index — epoch 0 of every
+    replica, then epoch 1, ... — with ties kept in input (replica)
+    order, so exporting the merged log reads as the fleet's timeline.
+    The source logs are not modified."""
+    recs = [r for log in logs for r in log.records()]
+    recs.sort(key=lambda r: r.epoch)     # stable: ties keep replica order
+    out = TelemetryLog(capacity if capacity is not None
+                       else max(len(recs), 1))
+    out.extend(recs)
+    return out

@@ -1,0 +1,62 @@
+"""Bench result schema + compare gate (tools/bench_schema.py,
+tools/bench_compare.py — the BENCH_*.json contract CI validates)."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+
+import bench_compare  # noqa: E402
+import bench_schema as bs  # noqa: E402
+
+
+def test_write_load_roundtrip(tmp_path):
+    p = bs.write_bench("unit", "quick", {"step warm": 1.234567},
+                       extra={"k": 1}, path=tmp_path / "BENCH_unit.json")
+    doc = bs.load_bench(p)
+    assert doc["bench"] == "unit" and doc["schema"] == bs.SCHEMA
+    assert doc["timings"]["step warm"] == 1.2346  # rounded
+    assert doc["extra"] == {"k": 1}
+    assert doc["machine"]["cpu_count"] >= 1
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda d: d.pop("timings"),
+    lambda d: d.update(schema=99),
+    lambda d: d.update(timings={}),
+    lambda d: d.update(timings={"x": "fast"}),
+    lambda d: d.update(timings={"x": -1.0}),
+])
+def test_validate_rejects(tmp_path, mutate):
+    p = bs.write_bench("unit", "quick", {"a warm": 1.0},
+                       path=tmp_path / "b.json")
+    doc = bs.load_bench(p)
+    mutate(doc)
+    with pytest.raises(AssertionError):
+        bs.validate(doc)
+
+
+def _pair(tmp_path, base_t, new_t):
+    a = bs.write_bench("unit", "quick", base_t, path=tmp_path / "a.json")
+    b = bs.write_bench("unit", "quick", new_t, path=tmp_path / "b.json")
+    return a, b
+
+
+def test_compare_flags_warm_regression(tmp_path, capsys):
+    a, b = _pair(tmp_path, {"step warm": 1.0, "jit cold": 1.0},
+                 {"step warm": 1.2, "jit cold": 5.0})
+    assert bench_compare.compare(a, b, 0.10) == 1  # warm +20% gates
+    capsys.readouterr()
+    a, b = _pair(tmp_path, {"step warm": 1.0, "jit cold": 1.0},
+                 {"step warm": 1.05, "jit cold": 5.0})
+    # warm +5% under threshold; cold is never gated however slow
+    assert bench_compare.compare(a, b, 0.10) == 0
+
+
+def test_compare_rejects_mismatched_bench(tmp_path, capsys):
+    a = bs.write_bench("unit", "quick", {"a warm": 1.0},
+                       path=tmp_path / "a.json")
+    b = bs.write_bench("other", "quick", {"a warm": 1.0},
+                       path=tmp_path / "b.json")
+    assert bench_compare.compare(a, b, 0.10) == 2

@@ -1,0 +1,336 @@
+"""Fleet runtime tests: batched/sharded replica stepping, advisor,
+governor state pytree.
+
+The headline property (ISSUE 6 acceptance): an N-replica fleet run —
+one batched, optionally shard_map-sharded engine dispatch per (config
+group, epoch) — is **bit-identical per replica** to N serial
+``simulate_online`` runs: integer Stats exactly, and the governors make
+the same decision sequence.  The CI ``fleet`` job runs this module
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the
+mesh tests exercise a real 4-way shard_map; on a single device the same
+tests cover the batched (unsharded) path.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import controller as ctl
+from repro.core import engine
+from repro.distributed.sharding import fleet_padding
+from repro.launch.mesh import make_fleet_mesh
+from repro.runtime import (Governor, GovernorConfig, ReplicaSpec,
+                           SplitAdvisor, build_replicas, convergence_epoch,
+                           merge_logs, run_serial, simulate_fleet,
+                           simulate_online)
+from repro.runtime.telemetry import EpochRecord, TelemetryLog
+from repro.workloads import tenancy
+
+needs_pallas = pytest.mark.skipif(
+    not engine.backend_status("pallas")[0],
+    reason=engine.backend_status("pallas")[1])
+
+
+def _ints(stats: ctl.Stats):
+    return {f: np.asarray(getattr(stats, f)).tolist()
+            for f in ctl._INT_FIELDS}
+
+
+def _splits(result):
+    return [(r.n_compute, r.n_cache) for r in result.records]
+
+
+def _assert_replica_identical(serial, fleet, ctx=""):
+    """Integer Stats exact, decision sequence exact, floats tight."""
+    assert _ints(serial.stats) == _ints(fleet.stats), f"{ctx}: stats"
+    assert _splits(serial) == _splits(fleet), f"{ctx}: decisions"
+    assert serial.switches == fleet.switches, f"{ctx}: switches"
+    assert abs(serial.ipc - fleet.ipc) <= 1e-9 * max(abs(serial.ipc), 1.0)
+    for a, b in zip(serial.records, fleet.records):
+        assert abs(a.reward - b.reward) <= 1e-9 * max(abs(a.reward), 1.0)
+        assert abs(a.ext_occupancy - b.ext_occupancy) <= 1e-9
+
+
+# ------------------------------------------------------ N=1 == scalar
+
+def test_fleet_n1_bit_identical_to_simulate_online():
+    """A 1-replica fleet IS the scalar path: same integers, same
+    decisions, same telemetry."""
+    kw = dict(length=12_000, epoch_len=2_000, seed=0)
+    scalar = simulate_online("cfd", "Morpheus-Basic", **kw)
+    fr = simulate_fleet([ReplicaSpec("cfd", "Morpheus-Basic", **kw)])
+    assert fr.n_replicas == 1
+    _assert_replica_identical(scalar, fr.results[0], "n1")
+
+
+# ------------------------------------------- N=4 == 4 serial, backends
+
+def _specs4(length=8_000):
+    return [ReplicaSpec(app, "Morpheus-ALL", length=length,
+                        epoch_len=2_000, seed=s)
+            for app, s in (("cfd", 0), ("stencil", 1),
+                           ("cfd", 2), ("kmeans", 3))]
+
+
+def test_fleet_n4_bit_identical_to_serial_jnp():
+    specs = _specs4()
+    serial = run_serial(specs, backend="jnp")
+    fr = simulate_fleet(specs, backend="jnp")
+    assert fr.n_replicas == 4
+    for i, (a, b) in enumerate(zip(serial, fr.results)):
+        _assert_replica_identical(a, b, f"replica{i}")
+
+
+@needs_pallas
+def test_fleet_n4_bit_identical_to_serial_pallas():
+    """Same 4-replica identity with the engine's Pallas kernel
+    (interpret mode on CPU) on both sides of the comparison."""
+    specs = [ReplicaSpec(app, "Morpheus-Basic", length=4_000,
+                         epoch_len=2_000, seed=s,
+                         candidates=[(32, 36), (48, 20)])
+             for app, s in (("cfd", 0), ("stencil", 1),
+                            ("cfd", 2), ("kmeans", 3))]
+    serial = run_serial(specs, backend="pallas")
+    fr = simulate_fleet(specs, backend="pallas")
+    for i, (a, b) in enumerate(zip(serial, fr.results)):
+        _assert_replica_identical(a, b, f"replica{i}")
+
+
+# -------------------------------------------------------- sharded mesh
+
+def test_fleet_sharded_over_mesh():
+    """Identity holds with the group step shard_mapped over the fleet
+    mesh.  Under the CI job's forced 4 host devices this is a real
+    4-way sharding; on one device the mesh degenerates (still
+    exercised end to end)."""
+    mesh = make_fleet_mesh()
+    specs = _specs4()
+    serial = run_serial(specs)
+    fr = simulate_fleet(specs, mesh=mesh)
+    n = len(jax.devices())
+    assert fr.mesh_devices == 1 << (n.bit_length() - 1)
+    for i, (a, b) in enumerate(zip(serial, fr.results)):
+        _assert_replica_identical(a, b, f"replica{i}")
+
+
+def test_fleet_mixed_configs_padding_and_lengths():
+    """Replicas on different systems and lengths: groups form per
+    config, non-pow2 group sizes pad with no-op rows, replicas finish
+    at different steps — identity still holds per replica."""
+    mesh = make_fleet_mesh()
+    specs = [ReplicaSpec("cfd", "Morpheus-ALL", length=6_000,
+                         epoch_len=2_000, seed=7),
+             ReplicaSpec("stencil", "Morpheus-ALL", length=8_000,
+                         epoch_len=2_000, seed=8),
+             ReplicaSpec("kmeans", "Morpheus-Basic", length=6_000,
+                         epoch_len=2_000, seed=9)]
+    serial = run_serial(specs)
+    fr = simulate_fleet(specs, mesh=mesh)
+    for i, (a, b) in enumerate(zip(serial, fr.results)):
+        _assert_replica_identical(a, b, f"replica{i}")
+    # mixed systems can never share a group: one dispatch per config
+    # per step, and the 8k replica runs one step alone
+    assert fr.dispatches > fr.epochs
+
+
+def test_fleet_workload_replicas_per_tenant_stats():
+    """Multi-tenant workload replicas contribute one state row per
+    tenant; per-tenant Stats come back bit-identical to serial."""
+    wls = [tenancy.make_workload("cfd,kmeans", length=6_000, n_cores=8,
+                                 seed=s) for s in (0, 1)]
+    specs = [ReplicaSpec(wl, "Morpheus-ALL", epoch_len=2_000, seed=s,
+                         fixed_split=(48, 20))
+             for s, wl in enumerate(wls)]
+    serial = run_serial(specs)
+    fr = simulate_fleet(specs)
+    for i, (a, b) in enumerate(zip(serial, fr.results)):
+        _assert_replica_identical(a, b, f"replica{i}")
+        assert a.tenant_stats and b.tenant_stats
+        for name in a.tenant_stats:
+            assert _ints(a.tenant_stats[name]) == \
+                _ints(b.tenant_stats[name]), f"replica{i} tenant {name}"
+
+
+# ------------------------------------------------------ governor state
+
+def test_governor_state_roundtrip_continues_identically():
+    """export_state/restore_state: a restored governor's decision
+    stream (including RNG draws) continues exactly where the exported
+    one left off."""
+    rng = np.random.default_rng(5)
+    cands = [(18, 50), (32, 36), (48, 20), (68, 0)]
+    rewards = rng.normal(20.0, 3.0, size=40)
+    gov = Governor(cands, GovernorConfig(seed=11))
+    for r in rewards[:20]:
+        gov.observe(float(r), signature=0.5)
+        gov.decide()
+    snap = gov.export_state()
+
+    clone = Governor(cands, GovernorConfig(seed=999))  # different RNG seed
+    clone.restore_state(snap)
+    tail_a, tail_b = [], []
+    for r in rewards[20:]:
+        gov.observe(float(r), signature=0.5)
+        tail_a.append(gov.decide())
+        clone.observe(float(r), signature=0.5)
+        tail_b.append(clone.decide())
+    assert tail_a == tail_b
+    assert gov.export_state() == clone.export_state()
+
+
+def test_governor_state_is_a_snapshot():
+    """The export is decoupled from the live governor: later mutations
+    don't leak into the snapshot."""
+    gov = Governor([(32, 36), (48, 20)], GovernorConfig())
+    for _ in range(4):
+        gov.observe(10.0, signature=0.5)
+        gov.decide()
+    snap = gov.export_state()
+    est_before = dict(snap.est)
+    for _ in range(4):
+        gov.observe(25.0, signature=0.9)
+        gov.decide()
+    assert snap.est == est_before
+
+
+# ------------------------------------------------------- split advisor
+
+def test_split_advisor_warm_start():
+    """A replica serving a mix the advisor knows starts AT the advised
+    split (and inherits the phase tables when the ladders match)
+    instead of the ladder midpoint."""
+    cands = [(18, 50), (32, 36), (48, 20), (68, 0)]
+    advisor = SplitAdvisor()
+    teacher = ReplicaSpec("cfd", "Morpheus-Basic", length=6_000,
+                          epoch_len=2_000, seed=0,
+                          candidates=cands).build()
+    # simulate a converged teacher without running the engine
+    teacher.gov._i = 3
+    teacher.gov.est = {3: 30.0, 2: 25.0}
+    teacher.gov.measured = True
+    teacher.gov.phase_table[4] = 3
+    advisor.report(teacher)
+    assert advisor.reports == 1
+
+    cold = ReplicaSpec("cfd", "Morpheus-Basic", length=6_000,
+                       epoch_len=2_000, seed=1, candidates=cands).build()
+    assert cold.gov.current == cands[len(cands) // 2]  # ladder midpoint
+    warm, = build_replicas(
+        [ReplicaSpec("cfd", "Morpheus-Basic", length=6_000,
+                     epoch_len=2_000, seed=1, candidates=cands)], advisor)
+    assert warm.gov.current == (68, 0)
+    assert warm.gov.phase_table == {4: 3}
+    assert advisor.warm_starts == 1
+    # a different mix gets no advice
+    other = build_replicas(
+        [ReplicaSpec("stencil", "Morpheus-Basic", length=6_000,
+                     epoch_len=2_000, seed=2, candidates=cands)],
+        advisor)[0]
+    assert other.gov.current == cands[len(cands) // 2]
+
+
+def test_split_advisor_mismatched_ladder_nearest_split():
+    """Advice transfers across candidate ladders by nearest compute
+    count, but the phase tables (index-keyed) do not."""
+    advisor = SplitAdvisor()
+    t = ReplicaSpec("cfd", "Morpheus-Basic", length=6_000,
+                    epoch_len=2_000,
+                    candidates=[(18, 50), (48, 20)]).build()
+    t.gov._i = 1
+    t.gov.est = {1: 30.0}
+    t.gov.measured = True
+    t.gov.phase_table[2] = 1
+    advisor.report(t)
+    w = ReplicaSpec("cfd", "Morpheus-Basic", length=6_000,
+                    epoch_len=2_000,
+                    candidates=[(18, 50), (32, 36), (68, 0)]).build()
+    assert advisor.warm_start(w)
+    assert w.gov.current == (32, 36)      # nearest n_compute to 48
+    assert w.gov.phase_table == {}        # ladder mismatch: not inherited
+
+
+def test_fleet_advisor_end_to_end():
+    """Wave 1 populates the advisor; wave 2 warm-starts from it and
+    never converges later than the cold control."""
+    cands = [(18, 50), (24, 44), (32, 36), (48, 20)]
+    kw = dict(length=10_000, epoch_len=2_000, candidates=cands)
+    advisor = SplitAdvisor()
+    simulate_fleet([ReplicaSpec("cfd", "Morpheus-ALL", seed=s, **kw)
+                    for s in (0, 1)], advisor=advisor)
+    assert advisor.reports > 0 and advisor.table
+
+    advised = advisor.table[("Morpheus-ALL", ("cfd",))]["split"]
+    warm = simulate_fleet([ReplicaSpec("cfd", "Morpheus-ALL",
+                                       seed=5, **kw)], advisor=advisor)
+    assert advisor.warm_starts == 1
+    # epoch 0 already runs at the advised split, not the ladder midpoint
+    first = warm.results[0].records[0]
+    assert (first.n_compute, first.n_cache) == advised
+
+
+def test_fleet_warm_start_off_midpoint_rebuilds_state():
+    """A warm start AWAY from the ladder midpoint must rebuild the
+    replica's EngineState for the advised config (state shapes are
+    per-config); regression for the advised-split/initial-state
+    mismatch."""
+    cands = [(18, 50), (24, 44), (32, 36), (48, 20)]
+    kw = dict(length=4_000, epoch_len=2_000, candidates=cands)
+    advisor = SplitAdvisor()
+    teacher = ReplicaSpec("cfd", "Morpheus-ALL", **kw).build()
+    teacher.gov._i = 3                      # converged off-midpoint
+    teacher.gov.est = {3: 9.9}
+    teacher.gov.measured = True
+    advisor.report(teacher)
+    assert advisor.table[("Morpheus-ALL", ("cfd",))]["split"] == (48, 20)
+    fr = simulate_fleet([ReplicaSpec("cfd", "Morpheus-ALL",
+                                     seed=7, **kw)], advisor=advisor)
+    assert advisor.warm_starts == 1
+    first = fr.results[0].records[0]
+    assert (first.n_compute, first.n_cache) == (48, 20)
+
+
+# ------------------------------------------------------------ plumbing
+
+def test_fleet_padding_buckets_and_tiles():
+    assert fleet_padding(1) == 0
+    assert fleet_padding(2) == 0
+    assert fleet_padding(3) == 1
+    assert fleet_padding(5) == 3
+    assert fleet_padding(5, bucket=False) == 0
+    mesh = make_fleet_mesh()
+    n_dev = np.prod(list(dict(mesh.shape).values()))
+    for b in (1, 3, 5, 16):
+        padded = b + fleet_padding(b, mesh)
+        assert padded % n_dev == 0
+        assert padded & (padded - 1) == 0  # pow2
+
+
+def test_convergence_epoch():
+    def rec(i, nc):
+        return EpochRecord(epoch=i, pos=0, app="a", n_compute=nc,
+                           n_cache=68 - nc, requests=1, hit_rate=0.5,
+                           ext_occupancy=0.0, pred_accuracy=1.0,
+                           bytes_saved=0.0, ipc=1.0, exec_time_s=1.0,
+                           reward=1.0)
+    assert convergence_epoch([]) == 0
+    assert convergence_epoch([rec(0, 32), rec(1, 32)]) == 0
+    assert convergence_epoch([rec(0, 32), rec(1, 48), rec(2, 48)]) == 1
+    assert convergence_epoch([rec(0, 48), rec(1, 32), rec(2, 48)]) == 2
+
+
+def test_merge_logs_interleaves_by_epoch():
+    def rec(i, app):
+        return EpochRecord(epoch=i, pos=0, app=app, n_compute=32,
+                           n_cache=36, requests=1, hit_rate=0.5,
+                           ext_occupancy=0.0, pred_accuracy=1.0,
+                           bytes_saved=0.0, ipc=1.0, exec_time_s=1.0,
+                           reward=1.0)
+    a, b = TelemetryLog(), TelemetryLog()
+    for i in range(3):
+        a.append(rec(i, "a"))
+    for i in range(2):
+        b.append(rec(i, "b"))
+    merged = merge_logs([a, b])
+    assert [(r.epoch, r.app) for r in merged.records()] == [
+        (0, "a"), (0, "b"), (1, "a"), (1, "b"), (2, "a")]
+    assert len(a) == 3 and len(b) == 2  # sources untouched

@@ -1,0 +1,92 @@
+"""Diff two ``BENCH_*.json`` files; flag warm-path regressions.
+
+  PYTHONPATH=src python tools/bench_compare.py BASE.json NEW.json
+  PYTHONPATH=src python tools/bench_compare.py --validate BENCH_*.json
+
+Compare mode prints every shared timing label with its delta and exits
+1 when any **warm** label (label contains "warm" — steady-state, no
+compilation) regressed by more than ``--threshold`` (default 10%).
+Cold/jit labels are reported but never gate: they time compilation and
+are too machine-noisy to diff.  Validate mode schema-checks each file
+(the CI gate for the committed baselines) and exits 2 on the first
+invalid one.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import bench_schema as bs  # noqa: E402
+
+
+def compare(base_p: Path, new_p: Path, threshold: float) -> int:
+    base, new = bs.load_bench(base_p), bs.load_bench(new_p)
+    if base["bench"] != new["bench"]:
+        print(f"error: comparing different benches "
+              f"({base['bench']} vs {new['bench']})", file=sys.stderr)
+        return 2
+    if base["profile"] != new["profile"]:
+        print(f"note: profiles differ ({base['profile']} vs "
+              f"{new['profile']}) — deltas are not like-for-like")
+    bt, nt = base["timings"], new["timings"]
+    shared = [k for k in bt if k in nt]
+    only = sorted(set(bt) ^ set(nt))
+    if only:
+        print(f"note: labels not in both files (skipped): {only}")
+    print(f"{'label':42s} {'base':>9s} {'new':>9s} {'delta':>8s}")
+    regressed = []
+    for k in shared:
+        b, n = bt[k], nt[k]
+        delta = (n - b) / b if b > 0 else 0.0
+        warm = "warm" in k
+        flag = ""
+        if warm and delta > threshold:
+            regressed.append((k, delta))
+            flag = "  << REGRESSED"
+        print(f"{k:42s} {b:8.3f}s {n:8.3f}s {delta:+7.1%}"
+              f"{flag if flag else ('' if warm else '  (not gated)')}")
+    if regressed:
+        print(f"\n{len(regressed)} warm timing(s) regressed "
+              f"> {threshold:.0%}:")
+        for k, d in regressed:
+            print(f"  {k}: {d:+.1%}")
+        return 1
+    print(f"\nno warm regression > {threshold:.0%} "
+          f"({len(shared)} shared labels)")
+    return 0
+
+
+def validate(paths) -> int:
+    for p in paths:
+        try:
+            doc = bs.load_bench(p)
+        except (AssertionError, ValueError, OSError) as e:
+            print(f"INVALID {p}: {e}", file=sys.stderr)
+            return 2
+        print(f"ok {p}: bench={doc['bench']} profile={doc['profile']} "
+              f"timings={len(doc['timings'])} created={doc['created']}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+",
+                    help="compare: BASE NEW; validate: any number")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check files instead of diffing")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="warm regression gate as a fraction (0.10 = 10%%)")
+    args = ap.parse_args()
+    if args.validate:
+        return validate(args.files)
+    if len(args.files) != 2:
+        ap.error("compare mode takes exactly two files (BASE NEW)")
+    return compare(Path(args.files[0]), Path(args.files[1]),
+                   args.threshold)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -28,6 +28,7 @@ from pathlib import Path
 _ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(_ROOT / "src"))
 sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "tools"))
 
 _args = sys.argv[1:]
 PROFILE = _args[0] if _args and _args[0] in ("quick", "std", "full") \
@@ -42,6 +43,8 @@ from repro.core import policy                    # noqa: E402
 from repro.core import traces as tr              # noqa: E402
 
 from benchmarks import common as C               # noqa: E402
+
+import bench_schema as bs                        # noqa: E402
 
 SYSTEMS = ("IBL", "Morpheus-Basic", "Morpheus-ALL")
 
@@ -131,15 +134,24 @@ def main():
 
     # sanity: every path must agree on every best split
     ref = best_splits(pts, rs)
+    agreement = {}
     for label, (_, rb) in timings.items():
         got = best_splits(pts, rb)
         agree = sum(got[k][0] == ref[k][0] for k in ref)
+        agreement[label] = f"{agree}/{len(ref)}"
         print(f"best-split agreement serial vs {label}: {agree}/{len(ref)}")
 
     print(f"{'path':26s} {'wall-clock':>12s} {'speedup':>9s}")
     print(f"{'serial lax.scan':26s} {t_serial:11.1f}s {1.0:8.1f}x")
     for label, (secs, _) in timings.items():
         print(f"{label:26s} {secs:11.1f}s {t_serial / secs:8.1f}x")
+
+    flat = {"serial lax.scan": t_serial}
+    flat.update({label: secs for label, (secs, _) in timings.items()})
+    out = bs.write_bench("engine", PROFILE, flat, extra={
+        "points": len(pts), "trace_len": C.TRACE_LEN,
+        "backends": backends, "best_split_agreement": agreement})
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,116 @@
+"""Warm fleet-step throughput vs. the serial replica loop.
+
+  PYTHONPATH=src python tools/bench_fleet.py [quick|std] [--backend jnp]
+
+The fleet runtime's performance claim: advancing N same-config replicas
+as ONE batched engine dispatch per epoch beats the serial Python loop
+(one dispatch per replica per epoch) by >= 4x at 16 replicas on a
+multi-core CPU.  Replicas are fixed-split — identical config means one
+batch group and no governor transitions — so the measurement isolates
+the dispatch mechanics: the serial loop pays N pack + dispatch +
+device-sync round-trips per epoch where the fleet pays one, and the
+engine's per-set scan does the same number of scan steps either way
+(each step just widens from (S,) to (N,S) lanes).
+
+**The speedup is parallelism + overhead amortization, not less work.**
+The per-epoch scan step is ALU-bound (measured ~0.7 ms per scan step
+for the Morpheus-ALL config, linear in batch rows), so on a host with
+ONE visible core — ``os.cpu_count() == 1``, common in CI containers —
+the batched step executes the same total work serially and the honest
+ceiling is ~1x; the bench detects that case and gates on "batching
+costs nothing" (>= 0.9x) instead of the 4x multi-core target.  XLA
+spreads the widened per-step vector work across cores when they exist;
+``--xla_force_host_platform_device_count`` + the shard_map path add
+device-level parallelism on top (CI exercises it for correctness).
+
+Each fleet size runs twice — cold (compiles that batch shape), then
+warm (timed).  Single-device batched path (no mesh): sharding is about
+scale-out, not single-host throughput.  Writes ``BENCH_fleet.json``
+(see tools/bench_schema.py).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT / "tools"))
+
+import bench_schema as bs                                   # noqa: E402
+
+from repro.core import engine                               # noqa: E402
+from repro.runtime import ReplicaSpec, run_serial, simulate_fleet  # noqa: E402
+
+PROFILES = {
+    "quick": dict(length=6_000, epoch=3_000, counts=(1, 4, 16)),
+    "std": dict(length=24_000, epoch=3_000, counts=(1, 4, 16)),
+}
+
+
+def make_specs(n: int, length: int, epoch: int):
+    return [ReplicaSpec("cfd", "Morpheus-ALL", length=length,
+                        epoch_len=epoch, seed=i, fixed_split=(32, 36),
+                        name=f"r{i}") for i in range(n)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("profile", nargs="?", default="std",
+                    choices=sorted(PROFILES))
+    ap.add_argument("--backend", default="",
+                    help="engine backend (jnp|pallas; default session)")
+    args = ap.parse_args()
+    try:
+        backend = engine.resolve_backend(args.backend or None)
+    except engine.BackendError as e:
+        print(f"error: {e}")
+        raise SystemExit(2)
+    p = PROFILES[args.profile]
+    length, epoch, counts = p["length"], p["epoch"], p["counts"]
+    epochs = length // epoch
+    print(f"profile={args.profile} backend={backend} "
+          f"length={length} epoch_len={epoch} ({epochs} epochs/replica)")
+
+    timings, speedups, rates = {}, {}, {}
+    print(f"{'replicas':>8s} {'serial':>9s} {'fleet':>9s} {'speedup':>8s} "
+          f"{'fleet Mreq/s':>13s}")
+    for n in counts:
+        sp = make_specs(n, length, epoch)
+        run_serial(sp, backend=backend)                 # cold / compile
+        t0 = time.time()
+        run_serial(sp, backend=backend)
+        t_serial = time.time() - t0
+        simulate_fleet(sp, backend=backend)             # cold / compile
+        t0 = time.time()
+        simulate_fleet(sp, backend=backend)
+        t_fleet = time.time() - t0
+        timings[f"serial[{n}] warm"] = t_serial
+        timings[f"fleet[{n}] warm"] = t_fleet
+        speedups[str(n)] = round(t_serial / t_fleet, 2)
+        rates[str(n)] = round(n * length / t_fleet / 1e6, 3)
+        print(f"{n:8d} {t_serial:8.2f}s {t_fleet:8.2f}s "
+              f"{speedups[str(n)]:7.2f}x {rates[str(n)]:13.3f}")
+
+    top = str(max(counts))
+    cores = os.cpu_count() or 1
+    target = 4.0 if cores > 1 else 0.9
+    ok = speedups[top] >= target
+    note = (f">=4x expected on {cores} cores" if cores > 1 else
+            "single visible core: ALU-bound step, ceiling ~1x; "
+            ">=0.9x expected (batching must cost nothing)")
+    print(f"  [{'PASS' if ok else 'WARN'}] bench_fleet.speedup: fleet vs "
+          f"serial at {top} replicas = {speedups[top]:.2f}x ({note})")
+    out = bs.write_bench("fleet", args.profile, timings, extra={
+        "backend": backend, "length": length, "epoch_len": epoch,
+        "epochs_per_replica": epochs, "speedup": speedups,
+        "fleet_mreq_per_s": rates, "speedup_target": target,
+        "note": note})
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,9 @@ from pathlib import Path
 import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import bench_schema as bs                                   # noqa: E402
 
 from repro.core import cache_sim as cs                      # noqa: E402
 from repro.core import controller as ctl                    # noqa: E402
@@ -41,7 +44,7 @@ PROFILES = {
 }
 
 
-def bench_stream(length: int, epoch_lens, backend: str) -> None:
+def bench_stream(length: int, epoch_lens, backend: str) -> dict:
     spec = cs.SYSTEMS["Morpheus-ALL"]
     cfg = cs.build_config(spec, 36)
     addrs, writes, levels = tr.generate("cfd", n_cores=32, length=length,
@@ -63,6 +66,8 @@ def bench_stream(length: int, epoch_lens, backend: str) -> None:
     t_mono = time.time() - t0
     print(f"monolithic [{backend}]: cold {t_mono_cold:.2f}s / "
           f"warm {t_mono:.2f}s ({length} reqs)")
+    timings = {f"monolithic[{backend}] cold+jit": t_mono_cold,
+               f"monolithic[{backend}] warm": t_mono}
 
     for elen in epoch_lens:
         # compile this epoch shape once so neither variant pays it
@@ -81,14 +86,17 @@ def bench_stream(length: int, epoch_lens, backend: str) -> None:
                     f"bit-identity violated at epoch_len={elen} "
                     f"ring={ring}: {got} vs {mono_ints}")
         saved = times[0] - times[8]
+        timings[f"stream[{backend}] epoch{elen} ring0 warm"] = times[0]
+        timings[f"stream[{backend}] epoch{elen} ring8 warm"] = times[8]
         print(f"epoch_len {elen:>6}: {stream.epoch:>3} epochs | "
               f"host-pack-per-epoch {times[0]:6.2f}s -> prepacked ring "
               f"{times[8]:6.2f}s (saves {saved:+5.2f}s, "
               f"{times[8] / max(t_mono, 1e-9):4.1f}x warm monolithic) | "
               f"int-stats identical: True")
+    return timings
 
 
-def bench_governor(phased_len: int, backend: str) -> None:
+def bench_governor(phased_len: int, backend: str) -> dict:
     phases = ("kmeans", "lib")
     t0 = time.time()
     r = simulate_online(phases, "Morpheus-ALL", length=phased_len,
@@ -102,6 +110,7 @@ def bench_governor(phased_len: int, backend: str) -> None:
     csv_p = r.log.to_csv(RESULTS / "runtime_telemetry.csv")
     r.log.to_json(RESULTS / "runtime_telemetry.json")
     print(f"telemetry exported to {csv_p} (+ .json)")
+    return {f"governor[{backend}] cold+jit": dt}
 
 
 def main() -> None:
@@ -118,8 +127,13 @@ def main() -> None:
         raise SystemExit(2)
     p = PROFILES[args.profile]
     print(f"profile={args.profile} backend={backend}")
-    bench_stream(p["length"], p["epochs"], backend)
-    bench_governor(p["phased"], backend)
+    timings = bench_stream(p["length"], p["epochs"], backend)
+    timings.update(bench_governor(p["phased"], backend))
+    out = bs.write_bench("runtime", args.profile, timings,
+                         extra={"backend": backend,
+                                "length": p["length"],
+                                "phased_len": p["phased"]})
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

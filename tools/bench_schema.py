@@ -1,0 +1,84 @@
+"""Schema-versioned benchmark result files (``BENCH_*.json`` at repo root).
+
+Every ``tools/bench_*`` script records its wall-clock timings through
+``write_bench`` so performance is diffable across commits:
+
+  * the committed files are the current baselines;
+  * ``tools/bench_compare.py`` diffs a baseline against a fresh run and
+    flags warm-path regressions (>10% by default);
+  * CI validates every committed ``BENCH_*.json`` against this schema
+    (``bench_compare.py --validate``).
+
+Timing labels are free-form, but labels containing ``"warm"`` mark
+steady-state measurements — those are the regression-gated ones
+(cold/jit labels include compilation and are machine-noisy).
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+from pathlib import Path
+from typing import Dict, Optional
+
+SCHEMA = 1
+ROOT = Path(__file__).resolve().parents[1]
+REQUIRED = ("schema", "bench", "profile", "created", "machine", "timings")
+
+
+def bench_path(name: str) -> Path:
+    return ROOT / f"BENCH_{name}.json"
+
+
+def machine_info() -> Dict:
+    import jax
+    import numpy
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "numpy": numpy.__version__,
+        "cpu_count": os.cpu_count() or 1,
+        "jax_backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+    }
+
+
+def write_bench(name: str, profile: str, timings: Dict[str, float], *,
+                extra: Optional[Dict] = None,
+                path: Optional[Path] = None) -> Path:
+    """Write one bench document; ``timings`` maps label -> seconds."""
+    import time
+    doc = {
+        "schema": SCHEMA,
+        "bench": name,
+        "profile": profile,
+        "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "machine": machine_info(),
+        "timings": {k: round(float(v), 4) for k, v in timings.items()},
+    }
+    if extra:
+        doc["extra"] = extra
+    validate(doc, name)
+    p = Path(path) if path is not None else bench_path(name)
+    p.write_text(json.dumps(doc, indent=1) + "\n")
+    return p
+
+
+def load_bench(path) -> Dict:
+    doc = json.loads(Path(path).read_text())
+    validate(doc, str(path))
+    return doc
+
+
+def validate(doc: Dict, ctx: str = "bench file") -> None:
+    """Raise AssertionError unless ``doc`` is a valid bench document."""
+    missing = [k for k in REQUIRED if k not in doc]
+    assert not missing, f"{ctx}: missing keys {missing}"
+    assert doc["schema"] == SCHEMA, \
+        f"{ctx}: schema {doc['schema']!r} != {SCHEMA} (regenerate the file)"
+    t = doc["timings"]
+    assert isinstance(t, dict) and t, f"{ctx}: timings empty or not a dict"
+    bad = [k for k, v in t.items()
+           if not isinstance(v, (int, float)) or v < 0]
+    assert not bad, f"{ctx}: non-numeric/negative timings {bad}"
