@@ -28,11 +28,10 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import cache_sim as cs
 from repro.runtime import simulate_online
 from repro.runtime.governor import SERVING_GCFG, candidates_for
 from repro.workloads import arrivals as arrlib
-from repro.workloads import tenancy
+from repro.workloads.serving import bursty_workload
 
 from . import common as C
 
@@ -81,9 +80,11 @@ def run() -> Dict[str, float]:
 
     for mix in _MIXES[C.PROFILE]:
         for arr_name, arr_spec in _ARRIVALS[C.PROFILE]:
-            wl = tenancy.make_workload(mix, length=length, n_cores=N_CORES,
-                                       arrival=arr_spec, seed=0,
-                                       ws_scale=1.0 / cs.SIM_SCALE)
+            # the shared corpus cell — the autotuner's governor objective
+            # (repro.autotune.objectives) scores candidates on exactly
+            # this construction
+            wl = bursty_workload(mix, arr_spec, length=length,
+                                 n_cores=N_CORES, seed=0)
             cv = arrlib.burstiness(wl.t_s)
             ladder = candidates_for(wl.primary_app, SYSTEM,
                                     grid=LADDER_GRID, length=length)

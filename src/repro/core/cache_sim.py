@@ -153,6 +153,15 @@ class RunPoint:
     "pallas"; "" = session default, see ``engine.default_backend``) and is
     part of the batching key: points on different backends dispatch
     separately even under the same simulator config.
+
+    ``overrides`` is the design-space hook for the autotuner: a sorted
+    tuple of ``(field, value)`` pairs applied to the ``MorpheusConfig``
+    after ``build_config`` (e.g. ``(("compression", True), ("ext_ways",
+    16))``).  Overridable fields: ``conv_ways``, ``ext_ways``,
+    ``compression``, ``predictor`` (the enum or its string value),
+    ``indirect_mov``.  Points with different overrides produce different
+    configs and therefore batch into different dispatch groups, exactly
+    like points on different systems.
     """
     app: str
     system: str
@@ -161,6 +170,36 @@ class RunPoint:
     length: int = 120_000
     seed: int = 0
     backend: str = ""
+    overrides: Tuple[Tuple[str, object], ...] = ()
+
+
+_OVERRIDABLE = ("conv_ways", "ext_ways", "compression", "predictor",
+                "indirect_mov")
+
+
+def apply_overrides(cfg: MorpheusConfig,
+                    overrides: Tuple[Tuple[str, object], ...]
+                    ) -> MorpheusConfig:
+    """Apply a ``RunPoint.overrides`` tuple to a built config.
+
+    Unknown fields fail loudly — a typo in a search-space knob must not
+    silently search nothing.  ``predictor`` accepts the ``Predictor``
+    enum or its string value (search spaces serialize to JSON)."""
+    if not overrides:
+        return cfg
+    kw = {}
+    for field_name, value in overrides:
+        if field_name not in _OVERRIDABLE:
+            raise ValueError(f"override of {field_name!r} not supported "
+                             f"(allowed: {_OVERRIDABLE})")
+        if field_name == "predictor" and not isinstance(value, Predictor):
+            value = Predictor(value)
+        if field_name in ("conv_ways", "ext_ways"):
+            value = int(value)
+        if field_name in ("compression", "indirect_mov"):
+            value = bool(value)
+        kw[field_name] = value
+    return replace(cfg, **kw)
 
 
 def _prepare(pt: RunPoint):
@@ -182,7 +221,7 @@ def _prepare(pt: RunPoint):
         addrs, writes, levels = _unified_filter(addrs, writes, levels,
                                                 n_compute,
                                                 spec.unified_extra_bytes)
-    cfg = build_config(spec, n_cache)
+    cfg = apply_overrides(build_config(spec, n_cache), pt.overrides)
     # exclude the compulsory-miss warmup (one pass over the working set,
     # capped at half the trace) so stats reflect steady state
     ws_blocks = w.working_set_bytes // SIM_SCALE // tr.BLOCK_BYTES

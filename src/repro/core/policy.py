@@ -28,15 +28,18 @@ DEFAULT_GRID: Sequence[int] = (10, 14, 18, 24, 32, 40, 48, 56, 62, 68)
 
 
 def grid_points(app: str, system: str, *, grid: Sequence[int],
-                length: int, seed: int = 0,
-                backend: str = "") -> List[cs.RunPoint]:
+                length: int, seed: int = 0, backend: str = "",
+                overrides: Sequence[tuple] = ()) -> List[cs.RunPoint]:
     """The sweep points of one (app, system): each compute-core count in
     the grid, cache mode getting the rest (Morpheus) or power-gating
     (IBL).  Grid entries whose Morpheus cache side would be empty are
-    dropped.  ``backend`` (engine inner-scan implementation) is carried on
-    every point."""
+    dropped.  ``backend`` (engine inner-scan implementation) and
+    ``overrides`` (config-field overrides, see ``cs.RunPoint``) are
+    carried on every point — the autotuner sweeps overridden design
+    points through exactly this path."""
     spec = cs.SYSTEMS[system]
     w = tr.WORKLOADS[app]
+    ov = tuple(sorted(tuple(o) for o in overrides))
     pts = []
     for n_compute in grid:
         n_cache = 0
@@ -46,7 +49,7 @@ def grid_points(app: str, system: str, *, grid: Sequence[int],
             if n_cache <= 0:
                 continue
         pts.append(cs.RunPoint(app, system, n_compute, n_cache, length,
-                               seed, backend))
+                               seed, backend, ov))
     return pts
 
 

@@ -20,12 +20,13 @@ be in cache mode for the work arriving *right now*?
 """
 from .fleet import (FleetResult, ReplicaSpec,  # noqa: F401
                     SplitAdvisor, build_replicas, convergence_epoch,
-                    run_serial, simulate_fleet)
+                    evaluate_governors, run_serial, simulate_fleet)
 from .governor import (SERVING_GCFG, Governor,  # noqa: F401
                        GovernorConfig, GovernorState, OnlineReplica,
                        OnlineResult, ServingGovernor,
                        candidates_for, demo_pool, describe_tick,
-                       qos_reward, simulate_online, tenant_epoch_ipcs)
+                       gcfg_from_dict, qos_reward, simulate_online,
+                       tenant_epoch_ipcs)
 from .stream import EpochStream, HandoffReport, handoff  # noqa: F401
 from .telemetry import (EpochRecord, TelemetryLog,  # noqa: F401
                         merge_logs)

@@ -357,6 +357,44 @@ def simulate_fleet(specs, *, backend: Optional[str] = None,
                        backend=backend, advisor=advisor)
 
 
+def evaluate_governors(cells, gcfgs, *, system: str = "Morpheus-ALL",
+                       candidates=None, target_epoch: Optional[int] = None,
+                       epoch_len: int = 3_000,
+                       backend: Optional[str] = None, mesh=None
+                       ) -> List[List[OnlineResult]]:
+    """Score K governor configs over M workload cells as ONE fleet run.
+
+    The autotuner's batched governor-evaluation hook: every (config,
+    cell) pair becomes one ``OnlineReplica`` replaying the SAME recorded
+    workload under its own governor, and the whole K x M population
+    advances through ``simulate_fleet`` — replicas whose governors sit
+    at the same split share a dispatch group, so evaluating a
+    generation costs one fleet run, not K x M serial ones.
+
+    ``cells`` is a sequence of composed ``workloads.Workload`` (or
+    anything ``OnlineReplica`` accepts as phases); ``candidates`` is one
+    shared transition ladder or a per-cell sequence of ladders.
+    Returns ``results[k][m]`` — config ``gcfgs[k]`` on ``cells[m]`` —
+    bit-identical per replica to K x M ``simulate_online`` calls.
+    """
+    cells = list(cells)
+    if candidates is None or (candidates and
+                              isinstance(candidates[0], tuple)):
+        ladders = [candidates] * len(cells)
+    else:
+        ladders = list(candidates)
+        assert len(ladders) == len(cells), \
+            f"{len(ladders)} ladders for {len(cells)} cells"
+    specs = [ReplicaSpec(cell, system, epoch_len=epoch_len,
+                         target_epoch=target_epoch, gcfg=gcfg,
+                         candidates=ladders[m], name=f"g{k}/c{m}")
+             for k, gcfg in enumerate(gcfgs)
+             for m, cell in enumerate(cells)]
+    fr = simulate_fleet(specs, backend=backend, mesh=mesh)
+    m = len(cells)
+    return [fr.results[k * m:(k + 1) * m] for k in range(len(gcfgs))]
+
+
 def run_serial(specs, *, backend: Optional[str] = None
                ) -> List[OnlineResult]:
     """The Python-loop baseline: every replica advanced one at a time,

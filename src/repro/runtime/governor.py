@@ -29,8 +29,9 @@ IPC comparable with the offline policy's.
 from __future__ import annotations
 
 from collections import Counter
-from dataclasses import dataclass, replace
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from dataclasses import dataclass, fields, replace
+from typing import (Dict, List, Mapping, NamedTuple, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -117,6 +118,43 @@ SERVING_GCFG = GovernorConfig(
     hysteresis=3, min_gain=0.08, epsilon=0.15, epsilon_min=0.03,
     phase_threshold=0.5, signature_threshold=0.35,
     hint_stale_after=40, hint_max_strikes=1)
+
+
+_GCFG_FIELDS = {f.name: f.type for f in fields(GovernorConfig)}
+_GCFG_INT = ("hysteresis", "hint_stale_after", "hint_max_strikes",
+             "warm_epochs", "phase_bins", "seed")
+_GCFG_FLOAT = ("min_gain", "epsilon", "epsilon_decay", "epsilon_min",
+               "epsilon_hint", "ema_up", "ema_down", "phase_threshold",
+               "signature_threshold")
+
+
+def gcfg_from_dict(d: Mapping, base: GovernorConfig = SERVING_GCFG
+                   ) -> GovernorConfig:
+    """Build a ``GovernorConfig`` from plain (JSON-decodable) values.
+
+    The autotuner's decode hook: a search space samples flat dicts of
+    hyperparameters, this turns one into a config by overlaying it on
+    ``base`` (default: the serving preset, so a search varies only the
+    knobs it declares).  Unknown keys fail loudly — a typo in a knob
+    name must not silently tune nothing.  Numeric fields are coerced so
+    JSON round-trips (which turn ints into floats and vice versa) cannot
+    change governor behaviour.
+    """
+    kw = {}
+    for k, v in d.items():
+        if k not in _GCFG_FIELDS:
+            raise ValueError(f"unknown GovernorConfig field {k!r} "
+                             f"(known: {sorted(_GCFG_FIELDS)})")
+        if k in _GCFG_INT:
+            v = int(v)
+        elif k in _GCFG_FLOAT:
+            v = float(v)
+        elif k == "phase_memory":
+            v = bool(v)
+        elif k == "tenant_weights" and v is not None:
+            v = tuple(float(x) for x in v)
+        kw[k] = v
+    return replace(base, **kw)
 
 
 class GovernorState(NamedTuple):

@@ -51,6 +51,7 @@ _EXPORTS = {
     "round_sizes": "serving", "tenant_prompts": "serving",
     "round_requests": "serving", "SLOBudgeter": "serving",
     "slo_batches": "serving", "batch_mix": "serving",
+    "bursty_workload": "serving",
 }
 
 _SUBMODULES = ("arrivals", "corpus", "serving", "sources", "synthetic",

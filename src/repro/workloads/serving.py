@@ -164,3 +164,22 @@ def round_requests(workload: str, arrival: str, rounds: int,
             k += 1
         sched.append(batch)
     return sched
+
+
+def bursty_workload(mix: str, arrival: str, *, length: int,
+                    n_cores: int = 32, seed: int = 0):
+    """One cell of the bursty serving corpus (the fig_serving grid).
+
+    K tenants' traces merged by arrival time at simulator working-set
+    scale — the canonical (mix, arrival) evaluation cell shared by
+    ``benchmarks/fig_serving`` and the autotuner's governor objective
+    (``repro.autotune.objectives``), so a searched ``GovernorConfig`` is
+    scored on exactly the corpus the hand-tuned preset was judged on.
+    Imports stay inside the function: this module's scheduling helpers
+    are numpy-only and the serving launchers import it without jax.
+    """
+    from ..core import cache_sim as cs
+    from . import tenancy
+    return tenancy.make_workload(mix, length=length, n_cores=n_cores,
+                                 arrival=arrival, seed=seed,
+                                 ws_scale=1.0 / cs.SIM_SCALE)

@@ -1,0 +1,349 @@
+"""Autotuner tests: space/agents/tuner mechanics, batched-dispatch
+accounting, decoders, and the golden trajectory-determinism pin.
+
+The two load-bearing guarantees (ISSUE 7 acceptance):
+
+  * one generation of K candidates costs ONE ``cache_sim.run_batch``
+    dispatch (hw objective) / ONE ``simulate_fleet`` run (governor
+    objective) — asserted by counting wrappers, not benched;
+  * same seed => byte-identical trajectory JSONL across two fresh
+    processes, crc32-pinned (mirroring the PR 4 process-stability fix,
+    so the search can never regress into per-process hash salting).
+"""
+import json
+import subprocess
+import sys
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.autotune import (AGENTS, GovernorObjective, HardwareObjective,
+                            Knob, SearchSpace, TrajectoryError, Tuner,
+                            gov_space, hw_space, make_agent,
+                            read_trajectory, replay_agent, to_gcfg,
+                            to_run_points, trajectory_crc,
+                            write_best_configs)
+from repro.core import cache_sim as cs
+from repro.runtime import fleet as fleet_mod
+from repro.runtime.governor import SERVING_GCFG, gcfg_from_dict
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _space():
+    return SearchSpace([Knob("a", (1, 2, 3)), Knob("b", (0.1, 0.2)),
+                        Knob("c", ("x", "y", "z"))])
+
+
+class SynthObjective:
+    """Deterministic, separable score over index vectors."""
+    name = "synth"
+
+    def __init__(self, space):
+        self.space = space
+        self.dispatches = 0
+
+    def evaluate(self, configs):
+        self.dispatches += 1
+        return [-sum((2 * i - 3) ** 2 for i in self.space.encode(c))
+                for c in configs]
+
+    def describe(self):
+        return {"objective": "synth"}
+
+
+# ------------------------------------------------------------------ space
+
+def test_space_encode_decode_roundtrip():
+    s = _space()
+    assert s.size == 18
+    for cfg in s.enumerate():
+        assert s.decode(s.encode(cfg)) == cfg
+
+
+def test_space_neighbors_are_single_steps():
+    s = _space()
+    cfg = s.decode((1, 0, 2))
+    for nb in s.neighbors(cfg):
+        diff = [abs(i - j) for i, j in zip(s.encode(nb), (1, 0, 2))]
+        assert sum(diff) == 1
+    # interior knob a contributes 2 moves, edge knobs fewer
+    assert len(s.neighbors(cfg)) == 2 + 1 + 1
+
+
+def test_space_sample_and_mutate_deterministic():
+    s = _space()
+    r1, r2 = np.random.default_rng(7), np.random.default_rng(7)
+    a, b = s.sample(r1), s.sample(r2)
+    assert a == b
+    assert s.mutate(a, r1) == s.mutate(b, r2)
+    m = s.mutate(a, np.random.default_rng(0))
+    assert m != a, "mutate must never be the identity"
+
+
+def test_space_description_roundtrip_preserves_order():
+    s = gov_space()
+    j = json.loads(json.dumps(s.describe(), sort_keys=True))
+    s2 = SearchSpace.from_description(j)
+    assert s2.names == s.names
+    r1, r2 = np.random.default_rng(3), np.random.default_rng(3)
+    assert s.encode(s.sample(r1)) == s2.encode(s2.sample(r2))
+
+
+def test_knob_rejects_duplicates():
+    with pytest.raises(AssertionError):
+        Knob("k", (1, 1, 2))
+
+
+# ----------------------------------------------------------------- agents
+
+@pytest.mark.parametrize("name", sorted(AGENTS))
+def test_agent_proposals_deterministic_and_in_space(name):
+    s = _space()
+    a1 = make_agent(name, s, seed=11, pop=4)
+    a2 = make_agent(name, s, seed=11, pop=4)
+    obj = SynthObjective(s)
+    for _ in range(4):
+        p1, p2 = a1.propose(), a2.propose()
+        assert p1 == p2, "same seed+history must propose identically"
+        assert len(p1) == 4
+        for c in p1:
+            s.encode(c)  # raises if out of space
+        scores = obj.evaluate(p1)
+        a1.observe(p1, scores)
+        a2.observe(p2, scores)
+    assert a1.best == a2.best and a1.best_score == a2.best_score
+
+
+@pytest.mark.parametrize("name", sorted(AGENTS))
+def test_agent_finds_synthetic_optimum(name):
+    s = _space()
+    agent = make_agent(name, s, seed=0, pop=5)
+    res = Tuner(s, SynthObjective(s), agent).run(6)
+    # separable landscape, optimum = closest index to 1.5 per knob
+    assert res.best_score == -(1 + 1 + 1)
+
+
+def test_make_agent_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown agent"):
+        make_agent("simulated-annealing", _space())
+
+
+# ------------------------------------------------------------------ tuner
+
+def test_tuner_logs_trajectory_and_counts_dispatches(tmp_path):
+    s = _space()
+    obj = SynthObjective(s)
+    agent = make_agent("hill", s, seed=0, pop=4)
+    traj = tmp_path / "t.jsonl"
+    res = Tuner(s, obj, agent, trajectory_path=traj).run(5)
+    assert obj.dispatches == 5, "one batched evaluate per generation"
+    assert res.evaluations == 20
+    doc = read_trajectory(traj)
+    assert doc["header"]["agent"] == "hill"
+    assert len(doc["generations"]) == 5
+    best = [g["best_score"] for g in doc["generations"]]
+    assert best == sorted(best), "best-so-far curve must be monotone"
+
+
+def test_tuner_resume_is_byte_identical(tmp_path):
+    s = _space()
+    full, part = tmp_path / "full.jsonl", tmp_path / "part.jsonl"
+    Tuner(s, SynthObjective(s), make_agent("ga", s, seed=5, pop=4),
+          trajectory_path=full).run(6)
+    Tuner(s, SynthObjective(s), make_agent("ga", s, seed=5, pop=4),
+          trajectory_path=part).run(3)
+    obj = SynthObjective(s)
+    res = Tuner(s, obj, make_agent("ga", s, seed=5, pop=4),
+                trajectory_path=part).run(6, resume=True)
+    assert res.replayed == 3
+    assert obj.dispatches == 3, "replayed generations cost no dispatches"
+    assert part.read_bytes() == full.read_bytes()
+
+
+def test_tuner_resume_rejects_foreign_trajectory(tmp_path):
+    s = _space()
+    traj = tmp_path / "t.jsonl"
+    Tuner(s, SynthObjective(s), make_agent("hill", s, seed=0, pop=4),
+          trajectory_path=traj).run(2)
+    with pytest.raises(TrajectoryError, match="header mismatch"):
+        Tuner(s, SynthObjective(s), make_agent("hill", s, seed=1, pop=4),
+              trajectory_path=traj).run(4, resume=True)
+
+
+def test_replay_agent_detects_tampering(tmp_path):
+    s = _space()
+    traj = tmp_path / "t.jsonl"
+    Tuner(s, SynthObjective(s), make_agent("random", s, seed=0, pop=3),
+          trajectory_path=traj).run(3)
+    assert replay_agent(traj).generation == 3
+    lines = traj.read_text().splitlines()
+    rec = json.loads(lines[1])
+    rec["keys"][0][0] = (rec["keys"][0][0] + 1) % 3
+    lines[1] = json.dumps(rec, sort_keys=True, separators=(",", ":"))
+    traj.write_text("\n".join(lines) + "\n")
+    with pytest.raises(TrajectoryError, match="verify failed"):
+        replay_agent(traj)
+
+
+def test_write_best_configs_artifact(tmp_path):
+    s = _space()
+    p = write_best_configs(tmp_path / "best.json", "unit", s, [
+        {"agent": "a", "best_config": {"a": 1}, "best_score": 0.5},
+        {"agent": "b", "best_config": {"a": 2}, "best_score": 0.9}])
+    doc = json.loads(p.read_text())
+    assert doc["target"] == "unit"
+    assert [r["agent"] for r in doc["results"]] == ["b", "a"]
+
+
+# ----------------------------------------------- golden byte determinism
+
+_GOLDEN = r"""
+import sys
+from repro.autotune import Tuner, gov_space, make_agent
+
+class Synth:
+    name = "synth"
+    def evaluate(self, configs):
+        return [-sum((2 * i - 3) ** 2 for i in SPACE.encode(c))
+                for c in configs]
+    def describe(self):
+        return {"objective": "synth"}
+
+SPACE = gov_space()
+Tuner(SPACE, Synth(), make_agent("ga", SPACE, seed=0, pop=5),
+      trajectory_path=sys.argv[1]).run(6)
+"""
+
+# crc32 of the trajectory bytes the script above must always produce.
+# If an intentional format change lands, regenerate with:
+#   PYTHONPATH=src python -m pytest tests/test_autotune.py -k golden -s
+GOLDEN_CRC = 4171697855
+
+
+def test_trajectory_golden_two_fresh_processes(tmp_path):
+    """Same seed => byte-identical JSONL across process boundaries."""
+    outs = []
+    for i in range(2):
+        path = tmp_path / f"run{i}.jsonl"
+        subprocess.run([sys.executable, "-c", _GOLDEN, str(path)],
+                       check=True, env={"PYTHONPATH": str(ROOT / "src"),
+                                        "PATH": "/usr/bin:/bin"},
+                       cwd=tmp_path)
+        outs.append(path.read_bytes())
+    assert outs[0] == outs[1], "trajectory differs across processes"
+    crc = zlib.crc32(outs[0])
+    print(f"\ntrajectory crc32 = {crc}")
+    assert crc == GOLDEN_CRC, \
+        (f"trajectory bytes drifted (crc {crc} != pinned {GOLDEN_CRC}); "
+         f"per-process salting or an unintended format change")
+
+
+# ------------------------------------------- decoders + dispatch budget
+
+def test_to_run_points_and_overrides():
+    cfgd = {"n_compute": 32, "ext_ways": 16, "compression": True}
+    (pt,) = to_run_points(cfgd, app="cfd", system="Morpheus-ALL",
+                          length=8_000)
+    assert pt.n_compute == 32 and pt.n_cache > 0
+    assert pt.overrides == (("compression", True), ("ext_ways", 16))
+    # infeasible split: cache side empty -> no points
+    assert to_run_points({"n_compute": 68, "ext_ways": 16,
+                          "compression": False}, app="cfd",
+                         system="Morpheus-ALL", length=8_000) == []
+
+
+def test_apply_overrides_rejects_unknown_field():
+    cfg = cs.build_config(cs.SYSTEMS["Morpheus-Basic"], 8)
+    with pytest.raises(ValueError, match="not supported"):
+        cs.apply_overrides(cfg, (("bloom_words", 16),))
+
+
+def test_apply_overrides_coerces_predictor_string():
+    cfg = cs.build_config(cs.SYSTEMS["Morpheus-Basic"], 8)
+    out = cs.apply_overrides(cfg, (("predictor", "perfect"),))
+    from repro.core.controller import Predictor
+    assert out.predictor is Predictor.PERFECT
+
+
+def test_override_matches_dedicated_system():
+    """compression override on Morpheus-Basic == Morpheus-Compression."""
+    a = cs.run_batch([cs.RunPoint("cfd", "Morpheus-Basic", 32, 24, 6_000,
+                                  0, "", (("compression", True),))])[0]
+    b = cs.run_batch([cs.RunPoint("cfd", "Morpheus-Compression", 32, 24,
+                                  6_000, 0)])[0]
+    for f in ("conv_hits", "conv_misses", "ext_hits", "ext_true_miss"):
+        assert int(np.asarray(getattr(a.stats, f))) == \
+            int(np.asarray(getattr(b.stats, f)))
+    assert a.ipc == b.ipc
+
+
+def test_gcfg_from_dict_overlay_and_coercion():
+    g = gcfg_from_dict({"hysteresis": 4.0, "epsilon": 1,
+                        "phase_threshold": 0.8})
+    assert g.hysteresis == 4 and isinstance(g.hysteresis, int)
+    assert g.epsilon == 1.0 and isinstance(g.epsilon, float)
+    assert g.phase_threshold == 0.8
+    # untouched knobs come from the SERVING_GCFG base
+    assert g.min_gain == SERVING_GCFG.min_gain
+    with pytest.raises(ValueError, match="unknown GovernorConfig"):
+        gcfg_from_dict({"hysterisis": 3})
+
+
+def test_to_gcfg_uses_serving_base():
+    g = to_gcfg({"epsilon": 0.05})
+    assert g.epsilon == 0.05
+    assert g.hint_stale_after == SERVING_GCFG.hint_stale_after
+
+
+def test_hw_generation_is_one_run_batch_dispatch(monkeypatch):
+    """K candidates, one ``run_batch`` call per generation — the whole
+    point of searching over the batched engine."""
+    calls = []
+    real = cs.run_batch
+
+    def counting(points):
+        calls.append(len(points))
+        return real(points)
+
+    monkeypatch.setattr(cs, "run_batch", counting)
+    space = hw_space(splits=(32, 48), ext_ways=(16, 32))
+    obj = HardwareObjective("cfd", length=4_000)
+    agent = make_agent("random", space, seed=0, pop=3)
+    Tuner(space, obj, agent).run(2)
+    assert len(calls) == 2, f"expected 1 run_batch/generation: {calls}"
+    assert obj.dispatches == 2
+    assert all(n <= 3 for n in calls), "dedup must not grow the sweep"
+
+
+def test_gov_generation_is_one_fleet_run(monkeypatch):
+    """K governor configs x M cells, one ``simulate_fleet`` per
+    generation (plus exactly one for the static-baseline sweep)."""
+    calls = []
+    real = fleet_mod.simulate_fleet
+
+    def counting(specs, **kw):
+        calls.append(len(list(specs)))
+        return real(specs, **kw)
+
+    monkeypatch.setattr(fleet_mod, "simulate_fleet", counting)
+    obj = GovernorObjective([("cfd", "det:2e6")], length=9_000,
+                            target_epoch=3_000, ladder_grid=(32, 48))
+    space = gov_space()
+    agent = make_agent("random", space, seed=0, pop=2)
+    Tuner(space, obj, agent).run(2)
+    # 1 static sweep (3 ladder rungs) + 2 generations of 2 configs each
+    assert calls == [3, 2, 2], calls
+    assert obj.dispatches == 2
+
+
+def test_evaluate_governors_matrix_shape():
+    from repro.workloads.serving import bursty_workload
+    res = fleet_mod.evaluate_governors(
+        [bursty_workload("cfd", "det:2e6", length=9_000)],
+        [SERVING_GCFG, gcfg_from_dict({"epsilon": 0.05})],
+        target_epoch=3_000, candidates=[(32, 36), (48, 20)])
+    assert len(res) == 2 and len(res[0]) == 1
+    assert all(r.ipc > 0 for row in res for r in row)

@@ -1,0 +1,73 @@
+"""bench_compare warn-and-skip contract for one-sided timing labels.
+
+A bench revision may add or retire timings (tools/bench_autotune.py is
+the first bench to land after baselines were committed); the compare
+gate must warn and keep diffing the shared labels — never error — while
+still flagging warm regressions among what both files have.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+
+import bench_compare  # noqa: E402
+import bench_schema as bs  # noqa: E402
+
+
+def _pair(tmp_path, base_t, new_t):
+    a = bs.write_bench("unit", "quick", base_t, path=tmp_path / "a.json")
+    b = bs.write_bench("unit", "quick", new_t, path=tmp_path / "b.json")
+    return a, b
+
+
+def test_one_sided_labels_warn_and_pass(tmp_path, capsys):
+    """New-only and base-only labels are skipped with a warning, and the
+    shared label (no regression) keeps the exit code at 0."""
+    a, b = _pair(tmp_path, {"step warm": 1.0, "retired warm": 9.0},
+                 {"step warm": 1.01, "added warm": 0.5})
+    assert bench_compare.compare(a, b, 0.10) == 0
+    cap = capsys.readouterr()
+    assert "warning:" in cap.err and "skipped, not gated" in cap.err
+    assert "added warm" in cap.err and "retired warm" in cap.err
+    assert "retired warm" not in cap.out, "skipped labels are not diffed"
+
+
+def test_one_sided_labels_do_not_mask_shared_regression(tmp_path, capsys):
+    """Skipping one-sided labels must not swallow a real warm regression
+    on a label both files have."""
+    a, b = _pair(tmp_path, {"step warm": 1.0},
+                 {"step warm": 1.5, "added warm": 0.1})
+    assert bench_compare.compare(a, b, 0.10) == 1
+    cap = capsys.readouterr()
+    assert "warning:" in cap.err
+    assert "REGRESSED" in cap.out
+
+
+def test_fully_disjoint_timings_warn_and_pass(tmp_path, capsys):
+    """Zero shared labels: nothing to gate on, warn-and-pass (the old
+    behaviour a hard error here would break: comparing across bench
+    revisions that renamed every label)."""
+    a, b = _pair(tmp_path, {"old warm": 1.0}, {"new warm": 2.0})
+    assert bench_compare.compare(a, b, 0.10) == 0
+    cap = capsys.readouterr()
+    assert "warning: 2 timing label(s)" in cap.err
+    assert "no warm regression" in cap.out
+
+
+def test_cold_only_one_sided_labels_still_warn(tmp_path, capsys):
+    a, b = _pair(tmp_path, {"step warm": 1.0, "jit cold": 3.0},
+                 {"step warm": 1.0})
+    assert bench_compare.compare(a, b, 0.10) == 0
+    assert "jit cold" in capsys.readouterr().err
+
+
+def test_mismatched_bench_still_errors(tmp_path):
+    """Warn-and-skip is for labels; comparing two different benches is
+    still a usage error (exit 2)."""
+    a = bs.write_bench("unit", "quick", {"x warm": 1.0},
+                       path=tmp_path / "a.json")
+    b = bs.write_bench("other", "quick", {"x warm": 1.0},
+                       path=tmp_path / "b.json")
+    assert bench_compare.compare(a, b, 0.10) == 2

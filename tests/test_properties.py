@@ -1,0 +1,164 @@
+"""Property tests for the engine invariants the autotuner leans on.
+
+The fixed-grid cases in test_runtime.py / test_workloads.py pin these
+for hand-picked epoch lengths and tenant layouts; here hypothesis draws
+the trace, the epoch partition, the config (predictor x compression)
+and the tenant masks, because the search layer (repro.autotune) visits
+config/partition combinations no fixed grid anticipates:
+
+  * resumability: any epoch partition of a trace, streamed through an
+    explicit ``EngineState`` carry, accumulates integer Stats
+    bit-identical to one monolithic dispatch;
+  * per-tenant attribution: count-masked replays whose masks partition
+    the request stream sum to the unmasked run's integer Stats exactly;
+  * both at once (the fleet/churn path): masked epoch streaming.
+
+Guarded by ``importorskip`` like tests/test_bloom.py so tier-1 passes
+without the hypothesis package.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import address_separation as asep  # noqa: E402
+from repro.core import controller as ctl  # noqa: E402
+from repro.core import engine  # noqa: E402
+
+# Small config family: tiny set counts keep each compile cheap; the
+# drawn axes are the ones the autotuner overrides on real configs.
+_PREDS = (ctl.Predictor.BLOOM, ctl.Predictor.NONE, ctl.Predictor.PERFECT)
+
+
+def _cfg(pred: ctl.Predictor, comp: bool) -> ctl.MorpheusConfig:
+    amap = asep.make_map(conv_sets=8, num_cache_chips=2, sets_per_chip=4)
+    return ctl.MorpheusConfig(amap=amap, conv_ways=4, ext_ways=4,
+                              predictor=pred, compression=comp)
+
+
+def _trace(n: int, span: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, span, size=n).astype(np.uint32),
+            rng.random(n) < 0.3,
+            rng.integers(0, 3, size=n).astype(np.int32))
+
+
+def _sum_rows(stats: ctl.Stats) -> ctl.Stats:
+    return type(stats)(*[np.asarray(x).sum(axis=0) for x in stats])
+
+
+def _assert_int_identical(a: ctl.Stats, b: ctl.Stats, ctx=""):
+    for f in ctl.Stats._fields:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        if f in ctl._INT_FIELDS:
+            assert int(x) == int(y), f"{ctx} {f}: {x} vs {y}"
+        else:
+            tol = 1e-3 * max(abs(float(x)), 1.0)
+            assert abs(float(x) - float(y)) <= tol, \
+                f"{ctx} {f}: {x} vs {y}"
+
+
+# A drawn scenario: trace shape/seed, config axes, partition cuts and
+# tenant assignment all come from one strategy so every property sees
+# the same distribution.  Lengths are drawn coarse (multiples of 100)
+# to bound the number of distinct padded shapes XLA has to compile.
+_scenario = st.fixed_dictionaries({
+    "n": st.integers(6, 14).map(lambda k: k * 100),
+    "span": st.sampled_from([512, 2048]),
+    "seed": st.integers(0, 2 ** 16),
+    "pred": st.sampled_from(_PREDS),
+    "comp": st.booleans(),
+    "cuts": st.lists(st.integers(1, 99), min_size=0, max_size=4,
+                     unique=True),
+    "n_tenants": st.integers(2, 4),
+})
+
+
+def _bounds(n: int, cuts) -> list:
+    """Turn percentage cut points into epoch [start, end) bounds."""
+    edges = sorted({0, n} | {max(1, min(n - 1, c * n // 100))
+                             for c in cuts})
+    return list(zip(edges[:-1], edges[1:]))
+
+
+def _monolithic(cfg, trace, warmup) -> ctl.Stats:
+    addrs, writes, levels = trace
+    return engine.simulate_parallel(cfg, addrs, writes, levels, warmup)
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(_scenario)
+def test_epoch_partition_bit_identity(sc):
+    """Any partition, streamed with pos0 offsets, == one dispatch."""
+    cfg = _cfg(sc["pred"], sc["comp"])
+    addrs, writes, levels = _trace(sc["n"], sc["span"], sc["seed"])
+    warmup = sc["n"] // 4
+    state = engine.init_state(cfg, 1)
+    total = None
+    for a, b in _bounds(sc["n"], sc["cuts"]):
+        pt = engine.pack(cfg, [(addrs[a:b], writes[a:b], levels[a:b],
+                                warmup)], pos0=[a])
+        state, delta = engine.advance_packed(cfg, pt, state)
+        delta = ctl.Stats(*[np.asarray(x)[0] for x in delta])
+        total = delta if total is None else \
+            ctl.Stats(*[x + y for x, y in zip(total, delta)])
+    mono = _monolithic(cfg, (addrs, writes, levels), warmup)
+    _assert_int_identical(total, mono,
+                          f"partition {sc['cuts']} pred={sc['pred']}")
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(_scenario)
+def test_tenant_masks_sum_to_global(sc):
+    """Count-masked replays over a mask partition sum bit-identically."""
+    cfg = _cfg(sc["pred"], sc["comp"])
+    addrs, writes, levels = _trace(sc["n"], sc["span"], sc["seed"])
+    warmup = sc["n"] // 4
+    k = sc["n_tenants"]
+    rng = np.random.default_rng(sc["seed"] + 1)
+    tenant = rng.integers(0, k, size=sc["n"])
+    masks = [tenant == t for t in range(k)]
+    pt = engine.pack(cfg, [(addrs, writes, levels, warmup)] * k,
+                     count=masks)
+    per_tenant = engine._run_packed(cfg, pt, engine.resolve_backend(None))
+    mono = _monolithic(cfg, (addrs, writes, levels), warmup)
+    summed = _sum_rows(per_tenant)
+    for f in ctl._INT_FIELDS:
+        assert int(np.asarray(getattr(summed, f))) == \
+            int(np.asarray(getattr(mono, f))), \
+            f"{f}: masked sum != global (k={k}, pred={sc['pred']})"
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(_scenario)
+def test_masked_epoch_streaming_sums_to_global(sc):
+    """The fleet/churn path: per-tenant masks x epoch partition at once.
+
+    K state rows advance through every epoch slice with count masks;
+    the K x E deltas summed over both axes must equal the monolithic
+    unmasked run on every integer counter.
+    """
+    cfg = _cfg(sc["pred"], sc["comp"])
+    addrs, writes, levels = _trace(sc["n"], sc["span"], sc["seed"])
+    warmup = sc["n"] // 4
+    k = sc["n_tenants"]
+    rng = np.random.default_rng(sc["seed"] + 2)
+    tenant = rng.integers(0, k, size=sc["n"])
+    state = engine.init_state(cfg, k)
+    total = None
+    for a, b in _bounds(sc["n"], sc["cuts"]):
+        masks = [(tenant == t)[a:b] for t in range(k)]
+        pt = engine.pack(cfg, [(addrs[a:b], writes[a:b], levels[a:b],
+                                warmup)] * k, pos0=[a] * k, count=masks)
+        state, delta = engine.advance_packed(cfg, pt, state)
+        delta = _sum_rows(delta)
+        total = delta if total is None else \
+            ctl.Stats(*[x + y for x, y in zip(total, delta)])
+    mono = _monolithic(cfg, (addrs, writes, levels), warmup)
+    for f in ctl._INT_FIELDS:
+        assert int(np.asarray(getattr(total, f))) == \
+            int(np.asarray(getattr(mono, f))), \
+            f"{f}: masked stream != global (k={k}, cuts={sc['cuts']})"

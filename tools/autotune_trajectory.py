@@ -1,0 +1,73 @@
+"""Inspect / pin / replay-verify autotuner trajectory files.
+
+  PYTHONPATH=src python tools/autotune_trajectory.py info TRAJ.jsonl
+  PYTHONPATH=src python tools/autotune_trajectory.py crc TRAJ.jsonl ...
+  PYTHONPATH=src python tools/autotune_trajectory.py verify TRAJ.jsonl ...
+
+``info`` prints the header and per-generation best curve.  ``crc``
+prints the crc32 of the raw bytes (the golden-pin primitive — byte
+determinism, not just value determinism).  ``verify`` rebuilds the
+(space, agent, seed) from the header and replays every logged
+generation through the agent, exiting 1 if any proposal diverges from
+the log — the CI check that no agent regresses into per-process
+salting (the PR 4 incident, but for search).  Replay feeds the logged
+scores back, so verification costs zero simulator dispatches.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.autotune import (TrajectoryError, read_trajectory,  # noqa: E402
+                            replay_agent, trajectory_crc)
+
+
+def cmd_info(paths) -> int:
+    for p in paths:
+        doc = read_trajectory(p)
+        h = doc["header"]
+        gens = doc["generations"]
+        space = {name: len(vals) for name, vals in h["space"]}
+        print(f"{p}: agent={h['agent']} seed={h['seed']} pop={h['pop']} "
+              f"objective={h['objective']}")
+        print(f"  space: {space} "
+              f"({'x'.join(str(n) for n in space.values())} points)")
+        curve = " ".join(f"{g['best_score']:.4f}" for g in gens)
+        print(f"  {len(gens)} generations, best-so-far: {curve}")
+    return 0
+
+
+def cmd_crc(paths) -> int:
+    for p in paths:
+        print(f"{trajectory_crc(p):10d}  {p}")
+    return 0
+
+
+def cmd_verify(paths) -> int:
+    bad = 0
+    for p in paths:
+        try:
+            agent = replay_agent(p)
+        except TrajectoryError as e:
+            print(f"FAIL {p}: {e}", file=sys.stderr)
+            bad += 1
+            continue
+        print(f"ok {p}: {agent.generation} generations replayed "
+              f"bit-identically (best {agent.best_score:.4f})")
+    return 1 if bad else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("command", choices=("info", "crc", "verify"))
+    ap.add_argument("files", nargs="+")
+    args = ap.parse_args()
+    return {"info": cmd_info, "crc": cmd_crc,
+            "verify": cmd_verify}[args.command](args.files)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

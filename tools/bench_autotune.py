@@ -1,0 +1,97 @@
+"""Autotuner throughput: batched generation eval vs. the serial loop.
+
+  PYTHONPATH=src python tools/bench_autotune.py [quick|std]
+
+The autotuner's performance claim: scoring a generation of K design
+points costs ONE ``run_batch`` sweep (points grouped by config, vmapped
+per group) instead of K single-point dispatches.  The bench times a
+fixed representative generation — every (ext ways x compression) config
+at one split, so the batched sweep still has to span several compile
+groups — warm (cold pass first), reports generations/sec and the
+batched-vs-serial speedup, and writes ``BENCH_autotune.json``
+(tools/bench_schema.py; validated by CI next to the other baselines).
+
+Like tools/bench_fleet.py, the honest ceiling depends on visible cores:
+the per-point engine work is identical either way, so on a single-core
+host the gate is "batching costs nothing" (>=0.9x) and the speedup
+headroom (dispatch overhead amortization + cross-group XLA parallelism)
+shows up on multi-core hosts.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT / "tools"))
+
+import bench_schema as bs                                   # noqa: E402
+
+from repro.autotune import HardwareObjective, hw_space      # noqa: E402
+from repro.core import cache_sim as cs                      # noqa: E402
+
+PROFILES = {
+    "quick": dict(length=12_000, splits=(32, 48)),
+    "std": dict(length=30_000, splits=(18, 32, 40, 48)),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("profile", nargs="?", default="std",
+                    choices=sorted(PROFILES))
+    args = ap.parse_args()
+    p = PROFILES[args.profile]
+    space = hw_space(splits=p["splits"])
+    configs = space.enumerate()
+    obj = HardwareObjective("cfd", length=p["length"])
+    points = [obj._points(c)[0] for c in configs]
+    k = len(points)
+    print(f"profile={args.profile} length={p['length']} "
+          f"generation size K={k}")
+
+    def batched():
+        return obj.evaluate(configs)
+
+    def serial():
+        return [float(cs.run_batch([pt])[0].ipc) for pt in points]
+
+    batched()                                   # cold / compile
+    t0 = time.time()
+    sb = batched()
+    t_batched = time.time() - t0
+    serial()                                    # cold (shapes differ)
+    t0 = time.time()
+    ss = serial()
+    t_serial = time.time() - t0
+    assert sb == ss, "batched and serial eval disagree"
+
+    speedup = t_serial / t_batched
+    gen_rate = 1.0 / t_batched
+    cores = os.cpu_count() or 1
+    target = 2.0 if cores > 1 else 0.9
+    ok = speedup >= target
+    note = (f">=2x expected on {cores} cores" if cores > 1 else
+            "single visible core: same engine work either way, "
+            ">=0.9x expected (batching must cost nothing)")
+    print(f"batched eval[{k}] warm: {t_batched:.2f}s  "
+          f"serial: {t_serial:.2f}s  speedup {speedup:.2f}x  "
+          f"({gen_rate:.2f} generations/s)")
+    print(f"  [{'PASS' if ok else 'WARN'}] bench_autotune.speedup: "
+          f"batched vs serial at K={k} = {speedup:.2f}x ({note})")
+    out = bs.write_bench("autotune", args.profile, {
+        f"batched eval[{k}] warm": t_batched,
+        f"serial eval[{k}] warm": t_serial,
+    }, extra={"generation_size": k, "length": p["length"],
+              "speedup": round(speedup, 2),
+              "generations_per_s": round(gen_rate, 3),
+              "speedup_target": target, "note": note})
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()
