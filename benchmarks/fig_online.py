@@ -14,6 +14,13 @@ made *online* by ``repro.runtime.governor``:
 Outputs ``benchmarks/out/fig_online.csv`` (one row per run) and
 ``benchmarks/out/fig_online_epochs.csv`` (the per-epoch telemetry of the
 phased governor runs, exported through ``runtime.telemetry``).
+
+``--trace-out``/``--metrics-out`` enable the observability layer
+(``repro.obs``) and export the run's span trace + metrics — the bundle
+``tools/obs_report.py`` renders (docs/observability.md).
+
+  PYTHONPATH=src python -m benchmarks.fig_online --quick \\
+      --trace-out out/obs/trace.json --metrics-out out/obs/metrics.json
 """
 from __future__ import annotations
 
@@ -126,5 +133,30 @@ def run() -> Dict[str, float]:
 
 
 if __name__ == "__main__":
-    with C.Timer("fig_online governor vs static"):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default=None,
+                    choices=("quick", "std", "full"))
+    ap.add_argument("--quick", action="store_true",
+                    help="shorthand for --profile quick")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable observability and write a Chrome/"
+                         "Perfetto trace-event JSON here")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable observability and write the metrics "
+                         "registry here (.json = snapshot, else "
+                         "Prometheus text)")
+    args = ap.parse_args()
+    if args.quick:
+        C.set_profile("quick")
+    elif args.profile:
+        C.set_profile(args.profile)
+    from repro import obs
+    if args.trace_out or args.metrics_out:
+        obs.enable(trace=args.trace_out is not None)
+    with C.Timer(f"fig_online governor vs static ({C.PROFILE})"):
         run()
+    if args.trace_out:
+        print("trace-out:", obs.tracer().save(args.trace_out))
+    if args.metrics_out:
+        print("metrics-out:", obs.metrics_registry().save(args.metrics_out))

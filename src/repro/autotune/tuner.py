@@ -28,6 +28,7 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
+from .. import obs
 from .agents import SearchAgent, make_agent
 from .space import Config, SearchSpace
 
@@ -143,17 +144,22 @@ class Tuner:
         evaluations = 0
         try:
             for g in range(len(history), generations):
-                configs = self.agent.propose()
-                scores = [float(s) for s in
-                          self.objective.evaluate(configs)]
-                evaluations += len(configs)
-                self.agent.observe(configs, scores)
-                gen = Generation(
-                    gen=g,
-                    keys=[self.space.encode(c) for c in configs],
-                    scores=scores,
-                    best_key=self.space.encode(self.agent.best),
-                    best_score=float(self.agent.best_score))
+                with obs.span("tuner.generation", gen=g,
+                              agent=self.agent.name) as sp:
+                    configs = self.agent.propose()
+                    scores = [float(s) for s in
+                              self.objective.evaluate(configs)]
+                    evaluations += len(configs)
+                    self.agent.observe(configs, scores)
+                    gen = Generation(
+                        gen=g,
+                        keys=[self.space.encode(c) for c in configs],
+                        scores=scores,
+                        best_key=self.space.encode(self.agent.best),
+                        best_score=float(self.agent.best_score))
+                    sp.set(evaluated=len(configs),
+                           best_score=gen.best_score)
+                obs.count("tuner_evaluations", len(configs))
                 history.append(gen)
                 if fh is not None:
                     fh.write(_dumps(gen.record()))

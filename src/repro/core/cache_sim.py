@@ -26,6 +26,7 @@ import numpy as np
 
 from . import address_separation as asep
 from . import engine
+from .. import obs
 from . import traces as tr
 from .controller import MorpheusConfig, Predictor, Stats
 from .energy import PaperGPU
@@ -330,20 +331,22 @@ def run_batch(points: Sequence[RunPoint]) -> List[RunResult]:
         groups.setdefault((cfg, backend), []).append(i)
 
     results: List[RunResult] = [None] * len(points)  # type: ignore
-    for (cfg, backend), idxs in groups.items():
-        done = 0
-        for blen in _chunk_lengths(len(idxs)):
-            chunk = idxs[done:done + blen]
-            done += len(chunk)
-            traces = [prepped[i][1] for i in chunk]
-            while len(traces) < blen:         # pad to the compiled shape
-                traces.append(traces[-1])
-            stats_b = engine.simulate_batch(cfg, traces, backend)
-            for j, i in enumerate(chunk):
-                stats = Stats(*[np.asarray(x[j]) for x in stats_b])
-                _, _, n_compute, n_cache, n_acc = prepped[i]
-                results[i] = _finalize(points[i], n_compute, n_cache,
-                                       n_acc, stats)
+    with obs.span("cache_sim.run_batch", points=len(points),
+                  groups=len(groups)):
+        for (cfg, backend), idxs in groups.items():
+            done = 0
+            for blen in _chunk_lengths(len(idxs)):
+                chunk = idxs[done:done + blen]
+                done += len(chunk)
+                traces = [prepped[i][1] for i in chunk]
+                while len(traces) < blen:     # pad to the compiled shape
+                    traces.append(traces[-1])
+                stats_b = engine.simulate_batch(cfg, traces, backend)
+                for j, i in enumerate(chunk):
+                    stats = Stats(*[np.asarray(x[j]) for x in stats_b])
+                    _, _, n_compute, n_cache, n_acc = prepped[i]
+                    results[i] = _finalize(points[i], n_compute, n_cache,
+                                           n_acc, stats)
     return results
 
 

@@ -63,6 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import controller as ctl
+from .. import obs
 from .controller import MorpheusConfig, Stats
 
 BACKENDS = ("jnp", "pallas")
@@ -433,6 +434,7 @@ def advance_packed(cfg: MorpheusConfig, pt: PackedTraces, state: EngineState,
     integer Stats accumulated over any epoch partition are bit-identical
     to a single monolithic ``simulate_batch`` of the concatenated trace.
     """
+    obs.count("engine_dispatches", 1, path="epoch")
     return _run_packed_state(cfg, pt, state, resolve_backend(backend))
 
 
@@ -447,6 +449,7 @@ def simulate_batch(cfg: MorpheusConfig,
     configs (different set counts / flags) compile separately.  ``backend``
     picks the inner-scan implementation (None -> ``default_backend()``).
     """
+    obs.count("engine_dispatches", 1, path="batch")
     return _run_packed(cfg, pack(cfg, traces), resolve_backend(backend))
 
 

@@ -72,7 +72,19 @@ def main() -> None:
                     default="host")
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable observability and write a Chrome/"
+                         "Perfetto trace-event JSON here on exit "
+                         "(docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable observability and write the metrics "
+                         "registry here on exit (.json = snapshot, "
+                         "anything else = Prometheus text)")
     args = ap.parse_args()
+
+    from repro import obs
+    if args.trace_out or args.metrics_out:
+        obs.enable(trace=args.trace_out is not None)
 
     if args.mesh != "host":
         if "xla_force_host_platform_device_count" not in \
@@ -90,6 +102,7 @@ def main() -> None:
         if not args.dry_run:
             print("NOTE: production-mesh serving requires real hosts; the "
                   "sharded serve_step compiled successfully.")
+        _save_obs(args)
         return
 
     import jax
@@ -140,6 +153,7 @@ def main() -> None:
         sched = [[("demo", prompt)] * args.batch for _ in range(rounds)]
     rid = 0
     pool_last = eng.pool.stats
+    tenant_slo = {}          # tenant -> [rounds met, rounds seen]
     for rnd in range(rounds):
         # SLO mode re-sizes each round from the latest telemetry; the
         # pre-built schedule is only consulted in the fixed modes
@@ -158,7 +172,9 @@ def main() -> None:
         from repro.workloads.serving import batch_mix
         mix = batch_mix(batch)
         t0 = time.time()
-        rep = eng.run(reqs)
+        with obs.span("serve.round", round=rnd, requests=len(reqs),
+                      tenants=len(mix)):
+            rep = eng.run(reqs)
         dt = time.time() - t0
         tenant_note = "" if len(mix) == 1 and "demo" in mix else \
             " | tenants " + "+".join(f"{k}:{v}" for k, v in mix.items())
@@ -176,12 +192,37 @@ def main() -> None:
                   f"(target {args.slo_ms:g}) | {est / 1e3:.1f} us/req | "
                   f"next budget {budgeter.next_budget()} | per tenant "
                   + " ".join(f"{k}:{v}" for k, v in mix.items()))
+            if obs.metrics_on():
+                # every tenant in the round shares its SLO outcome
+                round_ms = (d.time_ns / 1e6) if d.lookups else 0.0
+                met = round_ms <= args.slo_ms
+                for tenant, n in mix.items():
+                    t = tenant_slo.setdefault(tenant, [0, 0])
+                    t[0] += met
+                    t[1] += 1
+                    obs.set_gauge("tenant_slo_attainment",
+                                  t[0] / t[1], tenant=tenant)
+                    obs.count("tenant_requests", n, tenant=tenant)
         if governor is not None:
             from repro.runtime import describe_tick
             print("  " + describe_tick(governor.tick()))
     s = eng.pool.stats
     print(f"pool: conv {s.conv_hits} hits | ext {s.ext_hits} hits | "
           f"pred-miss {s.ext_pred_miss} | false-pos {s.ext_false_pos}")
+    if budgeter is not None and tenant_slo:
+        print("slo attainment: " + " ".join(
+            f"{k}:{met}/{n}" for k, (met, n) in tenant_slo.items()))
+    _save_obs(args)
+
+
+def _save_obs(args) -> None:
+    from repro import obs
+    if args.trace_out and obs.tracing():
+        p = obs.tracer().save(args.trace_out)
+        print(f"trace-out: {p}")
+    if args.metrics_out and obs.metrics_on():
+        p = obs.metrics_registry().save(args.metrics_out)
+        print(f"metrics-out: {p}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,93 @@
+"""Unified observability: spans, metrics, and decision provenance.
+
+Zero-overhead-when-disabled instrumentation for the whole runtime
+(docs/observability.md).  Three side channels, all strictly additive —
+enabling them changes no simulator number, no governor decision, no
+deterministic artifact byte (tests/test_obs.py pins bit-identity):
+
+  * ``trace``    — nestable spans -> Chrome/Perfetto trace-event JSON
+    (``obs.span("stream.step", ...)``; null-object fast path when off);
+  * ``metrics``  — process-global counters/gauges/histograms with
+    Prometheus text + JSON snapshot export, including a jax compile-hook
+    probe counting real XLA compiles;
+  * ``decision`` — structured ``DecisionEvent`` provenance for every
+    governor decision path (always recorded — pure bookkeeping — and
+    additionally emitted as trace instant events when tracing is on).
+
+Activation: ``obs.enable()`` (both), ``obs.enable(trace=False)``
+(counters only — what the bench tools use, cheap enough to keep on), or
+environment ``REPRO_OBS=1`` at import.  ``obs.disable()`` drops both;
+the tracer/registry objects stay readable by whoever holds them.
+
+This package imports nothing from the rest of ``repro`` (and jax only
+lazily, inside the compile hook), so every layer — core, runtime,
+workloads, autotune, tools — can instrument itself without cycles.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from . import metrics as _metrics
+from .decision import TRIGGERS, DecisionEvent  # noqa: F401
+from .metrics import (Registry, bench_counters,  # noqa: F401
+                      count, observe, set_gauge)
+from .trace import NULL_SPAN, Span, Tracer  # noqa: F401
+
+_TRACER: Optional[Tracer] = None
+
+
+def enable(*, trace: bool = True, metrics: bool = True,
+           clock=None) -> None:
+    """Activate observability (idempotent: live collectors are kept)."""
+    global _TRACER
+    if trace and _TRACER is None:
+        _TRACER = Tracer(clock=clock)
+    if metrics:
+        _metrics.activate()
+
+
+def disable() -> None:
+    global _TRACER
+    _TRACER = None
+    _metrics.deactivate()
+
+
+def enabled() -> bool:
+    return _TRACER is not None or _metrics.active() is not None
+
+
+def tracing() -> bool:
+    return _TRACER is not None
+
+
+def metrics_on() -> bool:
+    """Guard for sites whose metric *value* costs something to compute
+    (e.g. summing device_get byte counts over a pytree)."""
+    return _metrics.active() is not None
+
+
+def tracer() -> Optional[Tracer]:
+    return _TRACER
+
+
+def metrics_registry() -> Optional[Registry]:
+    return _metrics.active()
+
+
+def span(name: str, **tags):
+    """A span on the active tracer, or the shared no-op when disabled."""
+    t = _TRACER
+    if t is None:
+        return NULL_SPAN
+    return t.span(name, **tags)
+
+
+def instant(name: str, **args) -> None:
+    t = _TRACER
+    if t is not None:
+        t.instant(name, **args)
+
+
+if os.environ.get("REPRO_OBS", "") not in ("", "0"):
+    enable()

@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import cache_sim as cs
 from ..core import engine
 from ..distributed.context import shard_map
@@ -227,29 +228,41 @@ def _advance_group(cfg, group, backend: str, mesh) -> None:
         count.extend(m if m is not None else [None] * len(t))
     b = len(traces)
     pad = fleet_padding(b, mesh)
-    if pad:
-        traces.extend([_EMPTY_TRACE] * pad)
-        pos0.extend([0] * pad)
-        count.extend([None] * pad)
-    pt = engine.pack(cfg, traces, pos0=pos0, count=count)
-    states = [rep.state for rep, _ in rows]
-    if pad:
-        states.append(_pad_state(cfg, pad))
-    step = _group_step(cfg, backend, mesh,
-                       tuple(k for _, k in rows), pad)
-    new_states, delta, ext_used, ext_valid = step(tuple(states), pt)
-    # ONE batched host readback for the whole group: the Stats delta the
-    # epilogues consume plus the extended-tier telemetry arrays (on the
-    # scalar path _epoch_telemetry reads those from the device state,
-    # one extra sync per replica per epoch)
-    host_delta, host_used, host_valid = jax.device_get(
-        (delta, ext_used, ext_valid))
-    o = 0
-    for (rep, k), st in zip(rows, new_states):
-        sl = slice(o, o + k)
-        rep.consume(st, jax.tree.map(lambda x: x[sl], host_delta),
-                    ext_used=host_used[sl], ext_valid=host_valid[sl])
-        o += k
+    with obs.span("fleet.group_step", replicas=len(group), rows=b,
+                  pad=pad,
+                  config=f"conv{cfg.amap.conv_sets}/"
+                         f"ext{cfg.amap.ext_sets}"):
+        if pad:
+            traces.extend([_EMPTY_TRACE] * pad)
+            pos0.extend([0] * pad)
+            count.extend([None] * pad)
+        pt = engine.pack(cfg, traces, pos0=pos0, count=count)
+        states = [rep.state for rep, _ in rows]
+        if pad:
+            states.append(_pad_state(cfg, pad))
+        step = _group_step(cfg, backend, mesh,
+                           tuple(k for _, k in rows), pad)
+        new_states, delta, ext_used, ext_valid = step(tuple(states), pt)
+        # the fleet path dispatches via _run_packed_state, bypassing the
+        # advance_packed counter site
+        obs.count("engine_dispatches", 1, path="fleet")
+        # ONE batched host readback for the whole group: the Stats delta
+        # the epilogues consume plus the extended-tier telemetry arrays
+        # (on the scalar path _epoch_telemetry reads those from the
+        # device state, one extra sync per replica per epoch)
+        host_delta, host_used, host_valid = jax.device_get(
+            (delta, ext_used, ext_valid))
+        if obs.metrics_on():
+            obs.count("device_get_bytes",
+                      sum(np.asarray(x).nbytes for x in
+                          jax.tree.leaves((host_delta, host_used,
+                                           host_valid))))
+        o = 0
+        for (rep, k), st in zip(rows, new_states):
+            sl = slice(o, o + k)
+            rep.consume(st, jax.tree.map(lambda x: x[sl], host_delta),
+                        ext_used=host_used[sl], ext_valid=host_valid[sl])
+            o += k
 
 
 # ---------------------------------------------------------------- drivers
@@ -409,5 +422,9 @@ def run_serial(specs, *, backend: Optional[str] = None
             pt = engine.pack(cfg, traces, pos0=pos0, count=count)
             state, delta_b = engine.advance_packed(cfg, pt, rep.state,
                                                    backend)
-            rep.consume(state, jax.tree.map(np.asarray, delta_b))
+            host = jax.tree.map(np.asarray, delta_b)
+            if obs.metrics_on():
+                obs.count("device_get_bytes",
+                          sum(x.nbytes for x in jax.tree.leaves(host)))
+            rep.consume(state, host)
     return [rep.result() for rep in reps]

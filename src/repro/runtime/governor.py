@@ -37,10 +37,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import cache_sim as cs
 from ..core import engine
 from ..core import policy
 from ..core import traces as tr
+from ..obs.decision import DecisionEvent
 from ..core.compression import BLOCK_BYTES
 from ..core.controller import Stats
 from . import stream as rt_stream
@@ -242,6 +244,11 @@ class Governor:
         self.phase_shifts = 0
         self.phase_jumps = 0                     # re-entries served by memory
         self.last_switched = False
+        # decision provenance: one DecisionEvent per fired decision path
+        # (docs/observability.md).  Recording is pure bookkeeping — no
+        # RNG draw, no estimate change — so the decision stream is
+        # bit-identical with observability on or off.
+        self.decisions: List[DecisionEvent] = []
 
     def _sig_bucket(self, signature: float) -> int:
         b = self.cfg.phase_bins
@@ -254,9 +261,23 @@ class Governor:
         ctx = self._ctx if self._ctx is not None else 0
         return ctx * self.cfg.phase_bins + self._sig_bucket(signature)
 
-    def _jump_to(self, j: int) -> None:
+    def _record(self, trigger: str, to: int) -> DecisionEvent:
+        """Append one provenance event (call BEFORE mutating ``_i``)."""
+        ev = DecisionEvent(
+            epoch=self.epoch, trigger=trigger,
+            from_split=self.candidates[self._i],
+            to_split=self.candidates[to],
+            epsilon=self.eps, hint=self.hint,
+            estimates={str(self.candidates[j]): float(v)
+                       for j, v in sorted(self.est.items())},
+            ctx=self._ctx)
+        self.decisions.append(ev)
+        return ev
+
+    def _jump_to(self, j: int, trigger: str = "phase_jump") -> None:
         """Adopt a remembered split: an ordinary transition (flush +
         warm-up) whose estimates restart fresh."""
+        self._record(trigger, j)
         self._i = j
         self.dwell = 0
         self.warm_left = self.cfg.warm_epochs
@@ -286,6 +307,9 @@ class Governor:
             self.ctx_table[self._ctx] = best
             if self._phase_key is not None:
                 self.phase_table[self._phase_key] = best
+        # provenance: the reset itself changes no split (a remembered
+        # mix's jump is deferred and recorded as ctx_reentry in decide())
+        self._record("churn_reset", self._i)
         self._ctx = tag
         self.est = {}
         self.sig = {}
@@ -413,6 +437,9 @@ class Governor:
                     and self.est:
                 self.phase_table[self._phase_key] = \
                     max(self.est, key=lambda j: self.est[j])
+            # provenance: capture the estimates being discarded; a
+            # remembered bucket's jump is recorded separately below
+            self._record("phase_shift", self._i)
             self.est = {}
             self.sig = {}
             self.hint_strikes = {}
@@ -441,10 +468,14 @@ class Governor:
 
     def decide(self):
         """Choose the split for the next epoch (may equal ``current``)."""
+        with obs.span("governor.decide", epoch=self.epoch):
+            return self._decide()
+
+    def _decide(self):
         if self._pending_jump is not None:   # churn re-entry (set_context)
             j, self._pending_jump = self._pending_jump, None
             if j != self._i:
-                self._jump_to(j)
+                self._jump_to(j, "ctx_reentry")
         self.last_switched = self._jumped   # phase-memory/churn jump
         self._jumped = False
         self.dwell += 1
@@ -457,6 +488,7 @@ class Governor:
         nbrs = self._neighbors()
         target = None
         probe = None
+        trigger = ""
         hinted = self._i + self.hint
         hint_ok = bool(self.hint) and hinted in nbrs and \
             self.hint_strikes.get(self.hint, 0) < self.cfg.hint_max_strikes \
@@ -476,10 +508,12 @@ class Governor:
                         self.hint, 0) < self.cfg.hint_max_strikes:
                     target = hinted
                     probe = (self.hint, self.est.get(self._i))
+                    trigger = "hint"
             else:
                 target = min(nbrs,
                              key=lambda j: (self.last_visit.get(j, -1),
                                             self.rng.random()))
+                trigger = "explore"
         else:
             known = [j for j in nbrs if j in self.est]
             if known:
@@ -489,8 +523,10 @@ class Governor:
                 # e.g. -latency in the serving governor)
                 if self.est[best] - cur > self.cfg.min_gain * abs(cur):
                     target = best
+                    trigger = "greedy"
         self.eps = max(self.cfg.epsilon_min, self.eps * self.cfg.epsilon_decay)
         if target is not None and target != self._i:
+            self._record(trigger, target)
             self._i = target
             self.dwell = 0
             self.warm_left = self.cfg.warm_epochs
@@ -539,6 +575,7 @@ class ServingGovernor:
         self.reward_ema: Optional[float] = None
         self.epoch = 0
         self.history: List[Dict] = []
+        self._dec_seen = 0      # provenance events already attributed
 
     def tick(self) -> Dict:
         """Consume the interval since the last tick; maybe reconfigure.
@@ -593,6 +630,12 @@ class ServingGovernor:
             # chip-cost term, different latencies): reseed it at the new
             # split so post-switch estimates aren't cross-contaminated
             self.reward_ema = None
+        for ev in self.gov.decisions[self._dec_seen:]:
+            ev.replica = "serving"
+            if flushed and ev.switched:
+                ev.flush_writebacks = flushed
+            obs.instant("governor.decision", **ev.to_dict())
+        self._dec_seen = len(self.gov.decisions)
         rec = {"epoch": self.epoch, "chips": chips, "lookups": int(
             delta.lookups), "ns_per_lookup": ns_per,
             "hit_rate_interval": hit / lookups, "ext_occupancy": ext_occ,
@@ -665,6 +708,9 @@ class OnlineResult:
     # integer counters sum to ``stats`` up to the flush charges, which are
     # attributed to the tenant owning each flushed block)
     tenant_stats: Optional[Dict[str, Stats]] = None
+    # governor decision provenance, in decision order: one DecisionEvent
+    # per fired decision path, flush-cost-attributed (docs/observability.md)
+    decisions: List[DecisionEvent] = None  # type: ignore[assignment]
 
     def tenant_hit_rates(self) -> Dict[str, float]:
         """Per-tenant LLC hit rates (multi-tenant replay only)."""
@@ -897,6 +943,7 @@ class OnlineReplica:
         self.t_steady = 0.0
         self.insts_steady = 0.0
         self._cur = None             # epoch_inputs() -> consume() handshake
+        self._dec_seen = 0           # gov.decisions already attributed
 
     @property
     def done(self) -> bool:
@@ -1045,6 +1092,18 @@ class OnlineReplica:
                         writebacks=np.int32(flush_wbs),
                         dram_bytes=np.float32(flush_wbs * tr.BLOCK_BYTES),
                         energy_nJ=np.float32(flush_wbs * e_dram))
+        # decision provenance epilogue: attribute this epoch's events to
+        # the replica, charge the switch event its flush cost, and emit
+        # them as trace instants when tracing is on (obs side channel —
+        # none of this feeds back into the governor)
+        new_events = gov.decisions[self._dec_seen:]
+        self._dec_seen = len(gov.decisions)
+        for ev in new_events:
+            ev.replica = self.name
+            if flush_wbs and ev.switched:
+                ev.flush_writebacks = flush_wbs
+            obs.instant("governor.decision", **ev.to_dict())
+        obs.count("epochs", 1, path="online")
         rec = EpochRecord(
             epoch=self.epoch_i, pos=lo, app=app, n_compute=nc,
             n_cache=nk, requests=n_req,
@@ -1057,7 +1116,8 @@ class OnlineReplica:
                 f"{t.name}:{c}" for t, c in zip(wl.tenants, t_counts)),
             tenant_ipc="" if tenant_ipc is None else "|".join(
                 f"{t.name}:{x:.4f}"
-                for t, x in zip(wl.tenants, tenant_ipc)))
+                for t, x in zip(wl.tenants, tenant_ipc)),
+            decision=";".join(ev.compact() for ev in new_events))
         self.records.append(rec)
         self.log.append(rec)
         self.epoch_i += 1
@@ -1092,7 +1152,8 @@ class OnlineReplica:
             steady_ipc=steady, converged_ipc=converged,
             exec_time_s=self.t_all, switches=gov.switches,
             final_split=gov.current, converged_split=converged_split,
-            churn_resets=gov.churn_resets, tenant_stats=tenant_stats)
+            churn_resets=gov.churn_resets, tenant_stats=tenant_stats,
+            decisions=list(gov.decisions))
 
 
 def simulate_online(phases, system: str, *,
@@ -1147,7 +1208,11 @@ def simulate_online(phases, system: str, *,
         cfg, traces, pos0, count = rep.epoch_inputs()
         pt = engine.pack(cfg, traces, pos0=pos0, count=count)
         state, delta_b = engine.advance_packed(cfg, pt, rep.state, backend)
-        rep.consume(state, jax.tree.map(np.asarray, delta_b))
+        host = jax.tree.map(np.asarray, delta_b)
+        if obs.metrics_on():
+            obs.count("device_get_bytes",
+                      sum(x.nbytes for x in jax.tree.leaves(host)))
+        rep.consume(state, host)
     return rep.result()
 
 

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import bloom as bloomlib
 from ..core import controller as ctl
 from ..core import engine
@@ -153,6 +154,10 @@ class EpochStream:
         return len(self.addrs)
 
     def _pack_epoch(self, lo: int, hi: int) -> PackedTraces:
+        with obs.span("stream.pack", lo=lo, hi=hi):
+            return self._pack_epoch_inner(lo, hi)
+
+    def _pack_epoch_inner(self, lo: int, hi: int) -> PackedTraces:
         k = len(self._masks)
         sl = slice(lo, hi)
         traces = [(self.addrs[sl], self.writes[sl], self.levels[sl],
@@ -183,32 +188,39 @@ class EpochStream:
                 self._packed_to < len(self.addrs):
             lo = self._packed_to
             hi = self._next_bound(lo)
-            pt = jax.tree.map(jnp.asarray, self._pack_epoch(lo, hi))
+            with obs.span("stream.ring_fill", lo=lo, hi=hi,
+                          depth=len(self._ring)):
+                pt = jax.tree.map(jnp.asarray, self._pack_epoch(lo, hi))
             self._ring.append((lo, hi, pt))
             self._packed_to = hi
 
     def step(self) -> Stats:
         """Advance one epoch; returns this epoch's global Stats delta."""
-        lo = self._host_pos
-        assert lo < len(self.addrs), "stream exhausted"
-        if self.ring:
-            self._fill_ring()
-            lo, hi, pt = self._ring.popleft()
-        else:
-            hi = self._next_bound(lo)
-            pt = self._pack_epoch(lo, hi)
-        if self.workload is not None:
-            sig = self.workload.active_signature(lo, hi)
-            if self._sig is not None and sig != self._sig:
-                self.churn_events.append((self.epoch, self._sig, sig))
-            self._sig = sig
-        self.state, delta = engine.advance_packed(self.cfg, pt, self.state,
-                                                  self.backend)
-        self.epoch += 1
-        self._host_pos = hi
-        if len(self._masks) == 1:
-            return jax.tree.map(lambda x: x[0], delta)
-        return jax.tree.map(lambda x: x.sum(axis=0), delta)
+        with obs.span("stream.step", epoch=self.epoch,
+                      ring=self.ring) as sp:
+            lo = self._host_pos
+            assert lo < len(self.addrs), "stream exhausted"
+            if self.ring:
+                self._fill_ring()
+                lo, hi, pt = self._ring.popleft()
+            else:
+                hi = self._next_bound(lo)
+                pt = self._pack_epoch(lo, hi)
+            sp.set(lo=lo, hi=hi)
+            if self.workload is not None:
+                sig = self.workload.active_signature(lo, hi)
+                if self._sig is not None and sig != self._sig:
+                    self.churn_events.append((self.epoch, self._sig, sig))
+                self._sig = sig
+            self.state, delta = engine.advance_packed(self.cfg, pt,
+                                                      self.state,
+                                                      self.backend)
+            obs.count("epochs", 1, path="stream")
+            self.epoch += 1
+            self._host_pos = hi
+            if len(self._masks) == 1:
+                return jax.tree.map(lambda x: x[0], delta)
+            return jax.tree.map(lambda x: x.sum(axis=0), delta)
 
     def run(self) -> Stats:
         """Drain the remaining epochs; returns the accumulated Stats."""
@@ -352,6 +364,18 @@ def handoff(old_cfg: MorpheusConfig, state: EngineState,
 
     Accumulated Stats and the stream position always carry over.
     """
+    with obs.span("stream.handoff", migrate=migrate,
+                  rows=int(state.pos.shape[0])) as sp:
+        new, rep = _handoff(old_cfg, state, new_cfg, migrate=migrate)
+        sp.set(resident=rep.resident_before, migrated=rep.migrated,
+               dropped=rep.dropped, flush_writebacks=rep.flush_writebacks)
+        obs.count("flush_writebacks", rep.flush_writebacks)
+        return new, rep
+
+
+def _handoff(old_cfg: MorpheusConfig, state: EngineState,
+             new_cfg: MorpheusConfig, *, migrate: bool = True
+             ) -> Tuple[EngineState, HandoffReport]:
     b = state.pos.shape[0]
     new = engine.init_state(new_cfg, b)
     host = jax.tree.map(lambda x: np.array(x), new)   # writable copies

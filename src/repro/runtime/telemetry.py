@@ -29,6 +29,15 @@ Schema (one row per epoch, documented in docs/runtime.md):
   tenant_ipc   multi-tenant replay: per-tenant modeled IPC terms
                ("name:ipc|name:ipc") — the inputs to the QoS reward
                objectives (docs/qos.md)
+  decision     governor decision provenance this epoch: the compact
+               rendering of every ``repro.obs.DecisionEvent`` the
+               decision recorded (";"-joined, e.g.
+               "hint:(32|36)->(28|40)"; empty when the governor held
+               still) — docs/observability.md
+
+Export rows are always oldest -> newest, including after the ring has
+wrapped (``records()`` starts at the write head; pinned by
+tests/test_obs.py against a wrapped log).
 """
 from __future__ import annotations
 
@@ -63,6 +72,10 @@ class EpochRecord:
     # multi-tenant replay: per-tenant modeled IPC terms this epoch
     # ("name:ipc|name:ipc"; what the QoS objectives weigh — docs/qos.md)
     tenant_ipc: str = ""
+    # governor decision provenance: compact DecisionEvent renderings,
+    # ";"-joined (empty when the governor held still) —
+    # docs/observability.md
+    decision: str = ""
 
     def to_dict(self) -> Dict:
         return asdict(self)
@@ -99,7 +112,8 @@ class TelemetryLog:
         return self._buf[head:] + self._buf[:head]  # type: ignore
 
     def tail(self, n: int) -> List[EpochRecord]:
-        return self.records()[-n:]
+        # [-0:] would return everything — an empty tail must be empty
+        return self.records()[-n:] if n > 0 else []
 
     # ------------------------------------------------------------- export
     def to_json(self, path: str | Path | None = None) -> str:

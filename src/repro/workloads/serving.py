@@ -26,6 +26,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from . import arrivals as arrlib
 
 
@@ -97,6 +98,7 @@ class SLOBudgeter:
     initial_batch: Optional[int] = None    # first round (default: min)
     ns_per_request: Optional[float] = field(default=None, init=False)
     rounds_observed: int = field(default=0, init=False)
+    rounds_met: int = field(default=0, init=False)   # rounds within SLO
 
     def __post_init__(self):
         assert self.slo_ms > 0 and 0 < self.alpha <= 1
@@ -111,6 +113,19 @@ class SLOBudgeter:
         self.ns_per_request = per_req if self.ns_per_request is None else \
             (1.0 - self.alpha) * self.ns_per_request + self.alpha * per_req
         self.rounds_observed += 1
+        round_ms = float(ns_per_lookup) * lookups / 1e6
+        if round_ms <= self.slo_ms:
+            self.rounds_met += 1
+        if obs.metrics_on():
+            obs.set_gauge("slo_round_ms", round_ms)
+            obs.set_gauge("slo_attainment", self.attainment())
+
+    def attainment(self) -> float:
+        """Fraction of observed rounds whose modeled service time met
+        the SLO (1.0 before anything is observed: no violations yet)."""
+        if self.rounds_observed == 0:
+            return 1.0
+        return self.rounds_met / self.rounds_observed
 
     def next_budget(self) -> int:
         """Request budget for the next round."""

@@ -1,0 +1,450 @@
+"""Observability layer tests (ISSUE 8): spans, metrics, decision
+provenance, and the guarantees around them.
+
+Headline properties (acceptance):
+
+  * disabled observability is a true no-op: ``obs.span`` returns the
+    shared null singleton, and an obs-enabled ``simulate_online`` run is
+    bit-identical (telemetry rows, decision sequence, Stats) to a
+    disabled one on the jnp AND pallas engine backends;
+  * every governor decision path — greedy, explore, hint, phase_jump,
+    ctx_reentry, churn_reset, phase_shift — emits exactly one correctly
+    typed ``DecisionEvent``, and every split switch in an online run has
+    exactly one attributed switch event (the audit invariant);
+  * the autotuner's trajectory bytes don't change with obs enabled
+    (the golden CRC guarantee extends under instrumentation);
+  * ``TelemetryLog`` exports oldest -> newest even after the ring wraps;
+  * bench documents round-trip schema v2 (optional ``counters``) while
+    v1 files stay valid; ``tools/obs_report.py`` renders a bundle.
+"""
+import json
+import subprocess
+import sys
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.autotune import Tuner, gov_space, make_agent
+from repro.core import engine
+from repro.obs.decision import TRIGGERS, DecisionEvent
+from repro.obs.metrics import Registry
+from repro.obs.trace import NULL_SPAN, Tracer
+from repro.runtime import Governor, GovernorConfig, simulate_online
+from repro.runtime.telemetry import FIELDS, EpochRecord, TelemetryLog
+from repro.workloads.serving import SLOBudgeter
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+import bench_compare  # noqa: E402
+import bench_schema as bs  # noqa: E402
+
+_pallas_ok, _pallas_why = engine.backend_status("pallas")
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    """Every test starts and ends with observability disabled."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def _record(epoch, **kw):
+    base = dict(epoch=epoch, pos=epoch * 100, app="x", n_compute=32,
+                n_cache=36, requests=100, hit_rate=0.5,
+                ext_occupancy=0.5, pred_accuracy=0.9, bytes_saved=0.0,
+                ipc=1.0, exec_time_s=1e-4, reward=1.0)
+    base.update(kw)
+    return EpochRecord(**base)
+
+
+# ------------------------------------------------------------------ spans
+
+def test_disabled_span_is_shared_null_singleton():
+    assert not obs.enabled()
+    assert obs.span("a", k=1) is NULL_SPAN
+    assert obs.span("b") is NULL_SPAN
+    with obs.span("c", x=2) as sp:
+        sp.set(y=3)          # must be a silent no-op
+    obs.instant("d", v=1)    # likewise
+    obs.count("nothing", 5)
+    assert obs.tracer() is None and obs.metrics_registry() is None
+
+
+def test_tracer_deterministic_with_injected_clock():
+    ticks = iter(range(0, 100_000, 1_000))   # ns
+    t = Tracer(clock=lambda: next(ticks))
+    with t.span("outer", layer="runtime"):
+        with t.span("inner") as sp:
+            sp.set(rows=4)
+    doc = json.loads(t.to_json())
+    assert doc["displayTimeUnit"] == "ms"
+    inner, outer = doc["traceEvents"]        # inner completes first
+    assert inner["name"] == "inner" and outer["name"] == "outer"
+    assert inner["ph"] == outer["ph"] == "X"
+    # clock ticks: outer t0=0, inner t0=1000, inner t1=2000, outer
+    # t1=3000 ns -> microseconds
+    assert (inner["ts"], inner["dur"]) == (1.0, 1.0)
+    assert (outer["ts"], outer["dur"]) == (0.0, 3.0)
+    assert inner["args"] == {"rows": 4}
+    assert outer["args"] == {"layer": "runtime"}
+
+
+def test_tracer_instant_and_summary(tmp_path):
+    ticks = iter(range(0, 100_000, 1_000))
+    t = Tracer(clock=lambda: next(ticks))
+    with t.span("s"):
+        pass
+    t.instant("mark", why="because")
+    ev = t.events[-1]
+    assert ev["ph"] == "i" and ev["s"] == "g" and ev["name"] == "mark"
+    s = t.summary()
+    assert s["s"]["count"] == 1 and s["s"]["total_us"] == 1.0
+    p = t.save(tmp_path / "trace.json")
+    assert "traceEvents" in json.loads(p.read_text())
+
+
+# ---------------------------------------------------------------- metrics
+
+def test_registry_counter_gauge_histogram_exposition():
+    r = Registry()
+    r.counter("engine_dispatches", "dispatches issued").inc(
+        3, path="epoch")
+    r.counter("engine_dispatches").inc(2, path="fleet")
+    r.gauge("slo_attainment").set(0.75, tenant="a")
+    h = r.histogram("span_ns", buckets=(10, 100))
+    h.observe(5)
+    h.observe(50)
+    h.observe(5000)
+    text = r.to_prometheus()
+    assert 'morpheus_engine_dispatches_total{path="epoch"} 3' in text
+    assert 'morpheus_engine_dispatches_total{path="fleet"} 2' in text
+    assert 'morpheus_slo_attainment{tenant="a"} 0.75' in text
+    assert 'morpheus_span_ns_bucket{le="10"} 1' in text
+    assert 'morpheus_span_ns_bucket{le="100"} 2' in text
+    assert 'morpheus_span_ns_bucket{le="+Inf"} 3' in text
+    assert "morpheus_span_ns_count 3" in text
+    snap = r.snapshot()
+    names = {m["name"] for m in snap["metrics"]}
+    assert {"engine_dispatches", "slo_attainment", "span_ns"} <= names
+    json.dumps(snap)    # JSON-clean
+
+
+def test_registry_save_formats(tmp_path):
+    r = Registry()
+    r.counter("epochs").inc(7)
+    j = r.save(tmp_path / "m.json")
+    assert json.loads(j.read_text())["metrics"][0]["name"] == "epochs"
+    p = r.save(tmp_path / "m.prom")
+    assert "morpheus_epochs_total 7" in p.read_text()
+
+
+def test_module_helpers_route_to_active_registry():
+    obs.enable(trace=False)
+    obs.count("engine_dispatches", 2, path="epoch")
+    obs.set_gauge("slo_attainment", 0.5)
+    obs.observe("span_ns", 42.0)
+    c = obs.bench_counters()
+    assert c["dispatches"] == 2
+    assert c["compiles"] >= 0 and c["epochs"] == 0
+    obs.disable()
+    # helpers silently drop once deactivated
+    obs.count("engine_dispatches", 99)
+    assert obs.metrics_registry() is None
+
+
+def test_compile_hook_counts_real_xla_compiles():
+    import jax
+    import jax.numpy as jnp
+    obs.enable(trace=False)
+    f = jax.jit(lambda x: x * 3 + 1)
+    x = jnp.arange(7)
+    f(x).block_until_ready()
+    n1 = obs.bench_counters()["compiles"]
+    assert n1 >= 1, "compile hook missed a fresh XLA build"
+    f(x).block_until_ready()    # cached: no new executable
+    assert obs.bench_counters()["compiles"] == n1
+
+
+# -------------------------------------------------------------- telemetry
+
+def test_telemetry_export_is_oldest_first_after_wrap(tmp_path):
+    log = TelemetryLog(capacity=8)
+    for i in range(20):
+        log.append(_record(i))
+    assert len(log) == 8 and log.total == 20
+    epochs = [r.epoch for r in log.records()]
+    assert epochs == list(range(12, 20)), \
+        "wrapped export must start at the oldest held record"
+    rows = log.to_csv(tmp_path / "t.csv").read_text().splitlines()
+    assert rows[0].split(",")[0] == "epoch"
+    assert [int(r.split(",")[0]) for r in rows[1:]] == epochs
+    assert [r["epoch"] for r in json.loads(log.to_json())] == epochs
+
+
+def test_telemetry_tail_zero_is_empty():
+    log = TelemetryLog(capacity=4)
+    for i in range(3):
+        log.append(_record(i))
+    assert log.tail(0) == []
+    assert [r.epoch for r in log.tail(2)] == [1, 2]
+    assert len(log.tail(99)) == 3
+
+
+def test_epoch_record_has_decision_column():
+    assert FIELDS[-1] == "decision"
+    assert _record(0).decision == ""
+
+
+# ----------------------------------------------------- decision provenance
+
+def test_decision_event_contract():
+    ev = DecisionEvent(epoch=3, trigger="hint", from_split=(32, 36),
+                       to_split=(28, 40), epsilon=0.2, hint=1)
+    assert ev.switched and ev.compact() == "hint:(32|36)->(28|40)"
+    held = DecisionEvent(epoch=3, trigger="churn_reset",
+                         from_split=(32, 36), to_split=(32, 36),
+                         epsilon=0.2)
+    assert not held.switched and held.compact() == "churn_reset"
+    json.dumps(ev.to_dict())
+    assert ev.to_dict()["from_split"] == [32, 36]
+    with pytest.raises(AssertionError):
+        DecisionEvent(epoch=0, trigger="vibes", from_split=0,
+                      to_split=1, epsilon=0.0)
+
+
+def _drive(gov, reward_fn, epochs, hint=0, sig=None, ctx=None):
+    for _ in range(epochs):
+        if ctx is not None:
+            gov.set_context(ctx)
+        kw = {} if sig is None else {"signature": sig}
+        gov.observe(reward_fn(gov.current), hint=hint, **kw)
+        gov.decide()
+
+
+def _triggers(gov):
+    return [e.trigger for e in gov.decisions]
+
+
+def test_greedy_and_explore_paths_emit_typed_events():
+    cands = [(n, 68 - n) for n in (10, 20, 30, 40, 50, 60)]
+    peak = {c: 100.0 - abs(c[0] - 40) for c in cands}
+    gov = Governor(cands, GovernorConfig(seed=3, warm_epochs=0))
+    _drive(gov, lambda c: peak[c], 60)
+    assert gov.current == (40, 28)
+    trig = _triggers(gov)
+    assert "greedy" in trig, trig
+    assert "explore" in trig, trig     # epsilon draws fired along the way
+    # audit invariant: one attributed switch event per switch
+    switch_events = [e for e in gov.decisions if e.switched]
+    assert len(switch_events) == gov.switches
+    assert all(e.trigger in ("greedy", "explore", "hint", "phase_jump",
+                             "ctx_reentry") for e in switch_events)
+    # estimates consulted at decision time ride along
+    assert any(e.estimates for e in switch_events)
+
+
+def test_hint_path_emits_hint_event():
+    gov = Governor(list(range(5)),
+                   GovernorConfig(seed=0, warm_epochs=0), initial=2)
+    _drive(gov, lambda c: 10.0, 12, hint=+1)
+    hints = [e for e in gov.decisions if e.trigger == "hint"]
+    assert hints and all(e.hint == +1 and e.switched for e in hints)
+
+
+def test_phase_shift_and_phase_jump_events():
+    gov = Governor(list(range(6)), GovernorConfig(seed=2, warm_epochs=0))
+    _drive(gov, lambda c: 50.0 - 5 * c, 40, sig=0.15)
+    _drive(gov, lambda c: 30.0 + 5 * c, 60, sig=0.90)
+    _drive(gov, lambda c: 50.0 - 5 * c, 3, sig=0.15)   # revisit phase A
+    trig = _triggers(gov)
+    # a re-entry records the reset (phase_shift) AND the jump it served
+    assert trig.count("phase_shift") == gov.phase_shifts
+    jumps = [e for e in gov.decisions if e.trigger == "phase_jump"]
+    assert jumps, "phase-memory re-entry recorded no phase_jump event"
+    assert all(e.switched for e in jumps)
+    shifts = [e for e in gov.decisions if e.trigger == "phase_shift"]
+    assert shifts and all(not e.switched for e in shifts)
+
+
+def test_churn_reset_and_ctx_reentry_events():
+    gov = Governor(list(range(6)), GovernorConfig(seed=1, warm_epochs=0))
+    _drive(gov, lambda c: 50.0 - 5 * c, 40, ctx=0b11)
+    _drive(gov, lambda c: 30.0 + 5 * c, 50, ctx=0b01)  # churn 1
+    _drive(gov, lambda c: 50.0 - 5 * c, 2, ctx=0b11)   # churn 2 + re-entry
+    resets = [e for e in gov.decisions if e.trigger == "churn_reset"]
+    assert len(resets) == gov.churn_resets == 2
+    assert all(not e.switched and e.ctx is not None for e in resets)
+    re = [e for e in gov.decisions if e.trigger == "ctx_reentry"]
+    assert len(re) == 1 and re[0].switched and re[0].ctx == 0b11
+
+
+def test_every_trigger_name_is_exercised_above():
+    """The taxonomy is closed: tests above cover every member, so a new
+    trigger string must come with a test."""
+    covered = {"greedy", "explore", "hint", "phase_jump", "ctx_reentry",
+               "churn_reset", "phase_shift"}
+    assert covered == set(TRIGGERS)
+
+
+# ------------------------------------------------- online run provenance
+
+def _online(**kw):
+    return simulate_online(("p-bfs", "spmv", "p-bfs"), "Morpheus-ALL",
+                           length=12_000, epoch_len=1_500, seed=3, **kw)
+
+
+def test_online_run_attributes_every_switch():
+    r = _online()
+    assert r.decisions, "online run recorded no decision events"
+    switch_events = [e for e in r.decisions if e.switched]
+    assert len(switch_events) == r.switches
+    assert all(e.replica for e in r.decisions)
+    # flush cost paid by each switch is attributed to its event
+    assert sum(e.flush_writebacks for e in r.decisions) == \
+        sum(rec.flush_writebacks for rec in r.records)
+    # the telemetry decision column compacts the same events
+    recs_with_switch = [rec for rec in r.records if rec.switched]
+    for rec in recs_with_switch:
+        assert "->" in rec.decision, rec
+    assert sum("->" in (rec.decision or "") for rec in r.records) == \
+        len(switch_events)
+
+
+@pytest.mark.parametrize("backend", [
+    "jnp",
+    pytest.param("pallas", marks=pytest.mark.skipif(
+        not _pallas_ok, reason=_pallas_why)),
+])
+def test_enabled_obs_is_bit_identical(backend):
+    base = _online(backend=backend)
+    obs.enable()
+    on = _online(backend=backend)
+    obs.disable()
+    assert [rec.to_dict() for rec in base.records] == \
+        [rec.to_dict() for rec in on.records]
+    assert [e.to_dict() for e in base.decisions] == \
+        [e.to_dict() for e in on.decisions]
+    assert (base.ipc, base.switches, base.converged_split) == \
+        (on.ipc, on.switches, on.converged_split)
+
+
+def test_online_run_emits_trace_instants_and_counters():
+    obs.enable()
+    r = _online()
+    t = obs.tracer()
+    instants = [e for e in t.events if e["name"] == "governor.decision"]
+    assert len(instants) == len(r.decisions)
+    names = {e["name"] for e in t.events}
+    assert "governor.decide" in names
+    c = obs.bench_counters()
+    assert c["dispatches"] == len(r.records) == c["epochs"]
+    assert c["device_get_bytes"] > 0
+    assert c["flush_writebacks"] == \
+        sum(rec.flush_writebacks for rec in r.records)
+
+
+# -------------------------------------------- trajectory byte-determinism
+
+class _SynthObjective:
+    def __init__(self, space):
+        self.space = space
+
+    def evaluate(self, configs):
+        return [-sum((2 * i - 3) ** 2 for i in self.space.encode(c))
+                for c in configs]
+
+    def describe(self):
+        return {"objective": "synth"}
+
+
+def _run_tuner(path):
+    space = gov_space()
+    Tuner(space, _SynthObjective(space),
+          make_agent("ga", space, seed=0, pop=5),
+          trajectory_path=path).run(4)
+    return Path(path).read_bytes()
+
+
+def test_tuner_trajectory_bytes_identical_under_obs(tmp_path):
+    off = _run_tuner(tmp_path / "off.jsonl")
+    obs.enable()
+    on = _run_tuner(tmp_path / "on.jsonl")
+    spans = [e for e in obs.tracer().events
+             if e["name"] == "tuner.generation"]
+    obs.disable()
+    assert zlib.crc32(off) == zlib.crc32(on) and off == on
+    assert len(spans) == 4
+    assert spans[0]["args"]["agent"] == "ga"
+
+
+# ----------------------------------------------------------- SLO budgeter
+
+def test_slo_budgeter_tracks_attainment():
+    b = SLOBudgeter(slo_ms=1.0)
+    assert b.attainment() == 1.0
+    b.observe(ns_per_lookup=100.0, lookups=5_000, requests=10)   # 0.5 ms
+    b.observe(ns_per_lookup=100.0, lookups=20_000, requests=10)  # 2.0 ms
+    assert b.rounds_observed == 2 and b.rounds_met == 1
+    assert b.attainment() == 0.5
+    b.observe(ns_per_lookup=100.0, lookups=0, requests=0)        # idle
+    assert b.rounds_observed == 2
+
+
+# --------------------------------------------------------- bench schema v2
+
+def test_bench_schema_v2_counters_roundtrip(tmp_path):
+    p = bs.write_bench("unit", "quick", {"step warm": 1.0},
+                       counters={"dispatches": 12, "epochs": 4},
+                       path=tmp_path / "b.json")
+    doc = bs.load_bench(p)
+    assert doc["schema"] == 2
+    assert doc["counters"] == {"dispatches": 12, "epochs": 4}
+    assert bench_compare.validate([p]) == 0
+
+
+def test_bench_schema_v1_still_valid(tmp_path):
+    p = bs.write_bench("unit", "quick", {"step warm": 1.0},
+                       path=tmp_path / "b.json")
+    doc = json.loads(p.read_text())
+    doc["schema"] = 1                    # what a committed v1 file says
+    doc.pop("counters", None)
+    p.write_text(json.dumps(doc))
+    assert bs.load_bench(p)["schema"] == 1
+    bad = dict(doc, schema=1, counters={"dispatches": 1})
+    with pytest.raises(AssertionError):
+        bs.validate(bad)                 # counters require schema >= 2
+
+
+def test_bench_path_env_override(tmp_path, monkeypatch):
+    target = tmp_path / "redirect.json"
+    monkeypatch.setenv("REPRO_BENCH_PATH", str(target))
+    p = bs.write_bench("unit", "quick", {"step warm": 1.0})
+    assert p == target and target.exists()
+
+
+# --------------------------------------------------------------- reporter
+
+def test_obs_report_renders_bundle(tmp_path):
+    obs.enable()
+    _online()
+    trace_p = obs.tracer().save(tmp_path / "trace.json")
+    metrics_p = obs.metrics_registry().save(tmp_path / "metrics.json")
+    obs.disable()
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "obs_report.py"),
+         "--trace", str(trace_p), "--decisions",
+         "--metrics", str(metrics_p)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "decision audit trail" in out.stdout
+    assert "engine_dispatches" in out.stdout
+    # invalid input exits 2
+    bad = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "obs_report.py"),
+         "--trace", str(metrics_p)], capture_output=True, text=True)
+    assert bad.returncode == 2

@@ -31,6 +31,7 @@ sys.path.insert(0, str(_ROOT / "tools"))
 
 import bench_schema as bs                                   # noqa: E402
 
+from repro import obs                                       # noqa: E402
 from repro.autotune import HardwareObjective, hw_space      # noqa: E402
 from repro.core import cache_sim as cs                      # noqa: E402
 
@@ -45,6 +46,7 @@ def main() -> None:
     ap.add_argument("profile", nargs="?", default="std",
                     choices=sorted(PROFILES))
     args = ap.parse_args()
+    obs.enable(trace=False)     # counters into the bench doc, no spans
     p = PROFILES[args.profile]
     space = hw_space(splits=p["splits"])
     configs = space.enumerate()
@@ -86,7 +88,8 @@ def main() -> None:
     out = bs.write_bench("autotune", args.profile, {
         f"batched eval[{k}] warm": t_batched,
         f"serial eval[{k}] warm": t_serial,
-    }, extra={"generation_size": k, "length": p["length"],
+    }, counters=obs.bench_counters(),
+       extra={"generation_size": k, "length": p["length"],
               "speedup": round(speedup, 2),
               "generations_per_s": round(gen_rate, 3),
               "speedup_target": target, "note": note})

@@ -42,6 +42,7 @@ sys.path.insert(0, str(_ROOT / "tools"))
 
 import bench_schema as bs                                   # noqa: E402
 
+from repro import obs                                       # noqa: E402
 from repro.core import engine                               # noqa: E402
 from repro.runtime import ReplicaSpec, run_serial, simulate_fleet  # noqa: E402
 
@@ -69,6 +70,7 @@ def main() -> None:
     except engine.BackendError as e:
         print(f"error: {e}")
         raise SystemExit(2)
+    obs.enable(trace=False)     # counters into the bench doc, no spans
     p = PROFILES[args.profile]
     length, epoch, counts = p["length"], p["epoch"], p["counts"]
     epochs = length // epoch
@@ -104,7 +106,8 @@ def main() -> None:
             ">=0.9x expected (batching must cost nothing)")
     print(f"  [{'PASS' if ok else 'WARN'}] bench_fleet.speedup: fleet vs "
           f"serial at {top} replicas = {speedups[top]:.2f}x ({note})")
-    out = bs.write_bench("fleet", args.profile, timings, extra={
+    out = bs.write_bench("fleet", args.profile, timings,
+                         counters=obs.bench_counters(), extra={
         "backend": backend, "length": length, "epoch_len": epoch,
         "epochs_per_replica": epochs, "speedup": speedups,
         "fleet_mreq_per_s": rates, "speedup_target": target,

@@ -30,6 +30,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 import bench_schema as bs                                   # noqa: E402
 
+from repro import obs                                       # noqa: E402
 from repro.core import cache_sim as cs                      # noqa: E402
 from repro.core import controller as ctl                    # noqa: E402
 from repro.core import engine                               # noqa: E402
@@ -127,9 +128,11 @@ def main() -> None:
         raise SystemExit(2)
     p = PROFILES[args.profile]
     print(f"profile={args.profile} backend={backend}")
+    obs.enable(trace=False)     # counters into the bench doc, no spans
     timings = bench_stream(p["length"], p["epochs"], backend)
     timings.update(bench_governor(p["phased"], backend))
     out = bs.write_bench("runtime", args.profile, timings,
+                         counters=obs.bench_counters(),
                          extra={"backend": backend,
                                 "length": p["length"],
                                 "phased_len": p["phased"]})

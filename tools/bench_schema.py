@@ -12,6 +12,16 @@ Every ``tools/bench_*`` script records its wall-clock timings through
 Timing labels are free-form, but labels containing ``"warm"`` mark
 steady-state measurements — those are the regression-gated ones
 (cold/jit labels include compilation and are machine-noisy).
+
+Schema v2 adds an optional ``counters`` dict — non-negative numbers from
+the observability probes (``repro.obs.bench_counters()``: dispatches,
+compiles, device_get bytes, flush writebacks, epochs) — so a perf diff
+can distinguish "same work, slower" from "more dispatches".  v1 files
+(no ``counters``) stay valid; ``bench_compare --validate`` accepts both.
+
+``REPRO_BENCH_PATH`` redirects ``write_bench``'s default output — CI's
+overhead gate writes throwaway documents without touching the committed
+baselines.
 """
 from __future__ import annotations
 
@@ -21,7 +31,8 @@ import platform
 from pathlib import Path
 from typing import Dict, Optional
 
-SCHEMA = 1
+SCHEMA = 2
+KNOWN_SCHEMAS = (1, 2)
 ROOT = Path(__file__).resolve().parents[1]
 REQUIRED = ("schema", "bench", "profile", "created", "machine", "timings")
 
@@ -46,8 +57,12 @@ def machine_info() -> Dict:
 
 def write_bench(name: str, profile: str, timings: Dict[str, float], *,
                 extra: Optional[Dict] = None,
+                counters: Optional[Dict[str, float]] = None,
                 path: Optional[Path] = None) -> Path:
-    """Write one bench document; ``timings`` maps label -> seconds."""
+    """Write one bench document; ``timings`` maps label -> seconds,
+    ``counters`` maps probe name -> count (``obs.bench_counters()``).
+    ``path`` (or the ``REPRO_BENCH_PATH`` env var) overrides the default
+    committed-baseline location."""
     import time
     doc = {
         "schema": SCHEMA,
@@ -57,10 +72,18 @@ def write_bench(name: str, profile: str, timings: Dict[str, float], *,
         "machine": machine_info(),
         "timings": {k: round(float(v), 4) for k, v in timings.items()},
     }
+    if counters is not None:
+        doc["counters"] = {k: round(float(v), 4) if v != int(v)
+                           else int(v) for k, v in counters.items()}
     if extra:
         doc["extra"] = extra
     validate(doc, name)
-    p = Path(path) if path is not None else bench_path(name)
+    if path is not None:
+        p = Path(path)
+    elif os.environ.get("REPRO_BENCH_PATH"):
+        p = Path(os.environ["REPRO_BENCH_PATH"])
+    else:
+        p = bench_path(name)
     p.write_text(json.dumps(doc, indent=1) + "\n")
     return p
 
@@ -75,10 +98,19 @@ def validate(doc: Dict, ctx: str = "bench file") -> None:
     """Raise AssertionError unless ``doc`` is a valid bench document."""
     missing = [k for k in REQUIRED if k not in doc]
     assert not missing, f"{ctx}: missing keys {missing}"
-    assert doc["schema"] == SCHEMA, \
-        f"{ctx}: schema {doc['schema']!r} != {SCHEMA} (regenerate the file)"
+    assert doc["schema"] in KNOWN_SCHEMAS, (
+        f"{ctx}: schema {doc['schema']!r} not in {KNOWN_SCHEMAS} "
+        f"(regenerate the file)")
     t = doc["timings"]
     assert isinstance(t, dict) and t, f"{ctx}: timings empty or not a dict"
     bad = [k for k, v in t.items()
            if not isinstance(v, (int, float)) or v < 0]
     assert not bad, f"{ctx}: non-numeric/negative timings {bad}"
+    if "counters" in doc:
+        assert doc["schema"] >= 2, \
+            f"{ctx}: counters require schema >= 2"
+        c = doc["counters"]
+        assert isinstance(c, dict), f"{ctx}: counters not a dict"
+        badc = [k for k, v in c.items()
+                if not isinstance(v, (int, float)) or v < 0]
+        assert not badc, f"{ctx}: non-numeric/negative counters {badc}"

@@ -1,0 +1,178 @@
+"""Render an observability bundle: span timeline, decision audit trail,
+metric summaries (docs/observability.md).
+
+  PYTHONPATH=src python tools/obs_report.py --trace TRACE.json
+  PYTHONPATH=src python tools/obs_report.py --trace TRACE.json --decisions
+  PYTHONPATH=src python tools/obs_report.py --metrics METRICS.json
+
+``--trace`` takes the Chrome/Perfetto trace-event JSON written by
+``Tracer.save`` (``--trace-out`` on the launchers/benchmarks) and prints
+a per-span-name timeline aggregate plus — ``--decisions`` — the
+governor's full split-decision audit trail reconstructed from the
+``governor.decision`` instant events (one per recorded
+``repro.obs.DecisionEvent``: epoch, replica, trigger, split movement,
+epsilon, flush cost paid).  ``--metrics`` takes either the JSON snapshot
+(``.json``) or the Prometheus text exposition and prints per-metric
+totals.  Exits 2 on a file that is not a valid bundle of its kind.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import OrderedDict
+from pathlib import Path
+
+
+def _fail(msg: str) -> int:
+    print(f"INVALID: {msg}", file=sys.stderr)
+    return 2
+
+
+# ----------------------------------------------------------------- trace
+
+def load_trace(path: Path) -> list:
+    doc = json.loads(Path(path).read_text())
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise ValueError(f"{path}: no traceEvents — not a trace bundle")
+    evs = doc["traceEvents"]
+    for e in evs:
+        if not isinstance(e, dict) or "name" not in e or "ph" not in e:
+            raise ValueError(f"{path}: malformed trace event {e!r}")
+    return evs
+
+
+def timeline(events) -> None:
+    agg: "OrderedDict[str, dict]" = OrderedDict()
+    for e in events:
+        if e["ph"] != "X":
+            continue
+        a = agg.setdefault(e["name"], {"count": 0, "total": 0.0,
+                                       "max": 0.0})
+        a["count"] += 1
+        a["total"] += e["dur"]
+        a["max"] = max(a["max"], e["dur"])
+    n_instant = sum(e["ph"] == "i" for e in events)
+    print(f"{len(events)} trace events ({n_instant} instants), "
+          f"{len(agg)} span names")
+    if not agg:
+        return
+    print(f"\n{'span':24s} {'count':>7s} {'total_ms':>10s} "
+          f"{'mean_us':>10s} {'max_us':>10s}")
+    for name, a in sorted(agg.items(), key=lambda kv: -kv[1]["total"]):
+        print(f"{name:24s} {a['count']:7d} {a['total'] / 1e3:10.2f} "
+              f"{a['total'] / a['count']:10.1f} {a['max']:10.1f}")
+
+
+def decision_trail(events) -> None:
+    decs = [e for e in events
+            if e["ph"] == "i" and e["name"] == "governor.decision"]
+    print(f"\ndecision audit trail: {len(decs)} events")
+    if not decs:
+        return
+    def render(v):
+        # mode-split tuples arrive as lists; serving chip counts as ints
+        return "(" + "|".join(str(x) for x in v) + ")" \
+            if isinstance(v, list) else str(v)
+
+    print(f"{'epoch':>5s} {'replica':20s} {'trigger':11s} "
+          f"{'split':16s} {'epsilon':>7s} {'flush_wb':>8s}  ctx")
+    switches = 0
+    for e in sorted(decs, key=lambda e: (e["args"].get("epoch", 0),
+                                         e["ts"])):
+        a = e["args"]
+        frm, to = a["from_split"], a["to_split"]
+        moved = frm != to
+        switches += moved
+        split = (f"{render(frm)}->{render(to)}" if moved
+                 else f"{render(frm)} held")
+        print(f"{a['epoch']:5d} {str(a.get('replica', '')):20s} "
+              f"{a['trigger']:11s} {split:16s} {a['epsilon']:7.3f} "
+              f"{a.get('flush_writebacks', 0):8d}  "
+              f"{a.get('ctx') or ''}")
+    print(f"{switches} split switches, "
+          f"{len(decs) - switches} hold decisions")
+
+
+# --------------------------------------------------------------- metrics
+
+def load_metrics(path: Path) -> dict:
+    """{name: {kind, total}} from a JSON snapshot or Prometheus text."""
+    text = Path(path).read_text()
+    if Path(path).suffix == ".json":
+        doc = json.loads(text)
+        if not isinstance(doc, dict) or "metrics" not in doc:
+            raise ValueError(f"{path}: no 'metrics' — not a snapshot")
+        out = {}
+        for m in doc["metrics"]:
+            total = sum(s["value"] for s in m["samples"]) \
+                if m["kind"] != "histogram" else \
+                sum(s["value"][-2] for s in m["samples"])
+            out[m["name"]] = {"kind": m["kind"], "total": total}
+        return out
+    # minimal Prometheus text parse: TYPE lines name the kind, sample
+    # lines accumulate per metric (histograms summarise by _count)
+    kinds, out = {}, {}
+    for ln in text.splitlines():
+        if ln.startswith("# TYPE "):
+            _, _, name, kind = ln.split()
+            kinds[name] = kind
+        elif ln and not ln.startswith("#"):
+            head, val = ln.rsplit(" ", 1)
+            name = head.split("{", 1)[0]
+            base = name.removesuffix("_total")
+            kind = kinds.get(name, "gauge")
+            if kind == "histogram":
+                if not name.endswith("_count"):
+                    continue
+                base = name.removesuffix("_count")
+            e = out.setdefault(base, {"kind": kind, "total": 0.0})
+            e["total"] += float(val)
+    if not out:
+        raise ValueError(f"{path}: no metric samples — not an exposition")
+    return out
+
+
+def metric_summary(metrics: dict) -> None:
+    print(f"\n{len(metrics)} metrics")
+    print(f"{'metric':44s} {'kind':10s} {'total':>14s}")
+    for name in sorted(metrics):
+        m = metrics[name]
+        v = m["total"]
+        val = f"{v:14.3f}" if v != int(v) else f"{int(v):14d}"
+        print(f"{name:44s} {m['kind']:10s} {val}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", type=Path, default=None,
+                    help="Chrome/Perfetto trace-event JSON (Tracer.save)")
+    ap.add_argument("--metrics", type=Path, default=None,
+                    help="metrics snapshot (.json) or Prometheus text")
+    ap.add_argument("--decisions", action="store_true",
+                    help="print the governor decision audit trail "
+                         "(implies --trace)")
+    args = ap.parse_args()
+    if args.trace is None and args.metrics is None:
+        ap.error("nothing to report: pass --trace and/or --metrics")
+    if args.decisions and args.trace is None:
+        ap.error("--decisions needs --trace")
+    if args.trace is not None:
+        try:
+            events = load_trace(args.trace)
+        except (ValueError, OSError, json.JSONDecodeError) as e:
+            return _fail(str(e))
+        timeline(events)
+        if args.decisions:
+            decision_trail(events)
+    if args.metrics is not None:
+        try:
+            metrics = load_metrics(args.metrics)
+        except (ValueError, OSError, json.JSONDecodeError, KeyError) as e:
+            return _fail(str(e))
+        metric_summary(metrics)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
