@@ -233,10 +233,22 @@ if __name__ == "__main__":
                     choices=("quick", "std", "full"))
     ap.add_argument("--quick", action="store_true",
                     help="shorthand for --profile quick")
+    ap.add_argument("--inspect-out", default=None, metavar="PATH",
+                    help="enable the cache microscope for the governed "
+                         "runs and write the decoded per-epoch snapshots "
+                         "here — render with 'obs_report heatmap'")
     args = ap.parse_args()
     if args.quick:
         C.set_profile("quick")
     elif args.profile:
         C.set_profile(args.profile)
+    if args.inspect_out:
+        from repro import obs
+        obs.enable(trace=False, metrics=True, inspect=True)
     with C.Timer(f"fig_qos weights x churn ({C.PROFILE})"):
         run()
+    if args.inspect_out:
+        from repro import obs
+        p = obs.inspector().save(args.inspect_out)
+        print(f"inspect-out: {p} "
+              f"({len(obs.inspector().snapshots)} snapshots)")

@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated module keys (fig1,fig2,fig5,fig11,"
                          "fig12,fig13,tab3,bw,overheads,roofline,online,"
-                         "serving,qos,fleet,autotune)")
+                         "serving,qos,fleet,autotune,char_online)")
     ap.add_argument("--profile", default=None, choices=("quick", "std", "full"))
     ap.add_argument("--seeds", type=int, default=None,
                     help="trace seeds per grid cell; >1 adds mean±std "
@@ -34,7 +34,8 @@ def main() -> None:
     from . import common as C
     from . import (bw_analysis, fig1_core_scaling, fig2_llc_size,
                    fig5_latency, fig11_characterization, fig12_endtoend,
-                   fig13_predictor, fig_autotune, fig_fleet, fig_online,
+                   fig13_predictor, fig_autotune,
+                   fig_characterization_online, fig_fleet, fig_online,
                    fig_qos, fig_serving, roofline_table, tab3_mode_split,
                    tab_overheads)
 
@@ -59,6 +60,8 @@ def main() -> None:
                   fig_fleet.run),
         "autotune": ("Design-space search: regret curves + optima",
                      fig_autotune.run),
+        "char_online": ("Table 2 classes from online introspection",
+                        fig_characterization_online.run),
     }
     only = [k.strip() for k in args.only.split(",") if k.strip()]
     t0 = time.time()

@@ -286,6 +286,47 @@ def init_state(cfg: MorpheusConfig, batch: int = 1) -> EngineState:
     )
 
 
+def decode_state(cfg: MorpheusConfig, state: EngineState,
+                 trace: int = 0) -> dict:
+    """Read-only host-side decode of one trace row's cache contents.
+
+    The introspection layer's view of the carry (``repro.obs.inspect``):
+    per-set valid-way counts per tier, dirty-block totals, recovered full
+    block addresses (``addr = tag * total_sets + global_set`` — the same
+    recovery ``runtime/stream.py::extract_blocks`` uses for handoff),
+    extended-tier byte usage + per-resident physical sizes, the BF1 word
+    array and the stream position.  Pure numpy over a materialized copy:
+    never touches or re-derives device state, so decoding cannot perturb
+    a simulation.
+    """
+    st = jax.tree.map(np.asarray, state)
+    total = max(cfg.amap.total_sets, 1)
+
+    conv_valid = st.conv_valid[trace]
+    s_idx, w_idx = np.nonzero(conv_valid)
+    conv_addr = (st.conv_tags[trace][s_idx, w_idx].astype(np.uint64)
+                 * total + s_idx.astype(np.uint64))
+
+    ext_valid = st.ext_valid[trace]
+    e_s, e_w = np.nonzero(ext_valid)
+    gset = (cfg.amap.conv_sets + e_s).astype(np.uint64)
+    ext_addr = (st.ext_tags[trace][e_s, e_w].astype(np.uint64)
+                * total + gset)
+
+    return {
+        "pos": int(st.pos[trace]),
+        "conv_set_occ": conv_valid.sum(axis=1).astype(np.int64),
+        "conv_dirty_blocks": int(st.conv_dirty[trace][s_idx, w_idx].sum()),
+        "conv_addr": conv_addr,
+        "ext_set_occ": ext_valid.sum(axis=1).astype(np.int64),
+        "ext_dirty_blocks": int(st.ext_dirty[trace][e_s, e_w].sum()),
+        "ext_addr": ext_addr,
+        "ext_size_valid": st.ext_size[trace][e_s, e_w].astype(np.int64),
+        "ext_used": st.ext_used[trace].astype(np.int64),
+        "bf1": st.bf1[trace],
+    }
+
+
 # ------------------------------------------------------------------ engine
 
 def _conv_trace_state(cfg: MorpheusConfig, rows0: ctl.ConvRow, tags, writes,

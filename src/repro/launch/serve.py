@@ -80,11 +80,20 @@ def main() -> None:
                     help="enable observability and write the metrics "
                          "registry here on exit (.json = snapshot, "
                          "anything else = Prometheus text)")
+    ap.add_argument("--inspect-out", default=None, metavar="PATH",
+                    help="enable the cache microscope and write the "
+                         "decoded pool content snapshots (one per round) "
+                         "here on exit — render with 'obs_report heatmap'")
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="attach the pool's block-level event recorder "
+                         "(lookup/insert/evict ring) and export it as a "
+                         "corpus .npz here on exit")
     args = ap.parse_args()
 
     from repro import obs
-    if args.trace_out or args.metrics_out:
-        obs.enable(trace=args.trace_out is not None)
+    if args.trace_out or args.metrics_out or args.inspect_out:
+        obs.enable(trace=args.trace_out is not None,
+                   inspect=args.inspect_out is not None)
 
     if args.mesh != "host":
         if "xla_force_host_platform_device_count" not in \
@@ -125,6 +134,8 @@ def main() -> None:
     eng = Engine(model, params,
                  max_len=args.prompt_len + args.max_new + 8,
                  morpheus=not args.no_morpheus, pool=pool)
+    if args.record_trace:
+        eng.pool.attach_recorder()
     if args.split == "auto":
         from repro.runtime import SERVING_GCFG, ServingGovernor
         # the conservative preset: idle windows and bursty rounds swing
@@ -166,8 +177,8 @@ def main() -> None:
                 print("  " + describe_tick(governor.tick()))
             continue
         reqs = [Request(rid=rid + i, prompt=toks,
-                        max_new_tokens=args.max_new)
-                for i, (_, toks) in enumerate(batch)]
+                        max_new_tokens=args.max_new, tenant=name)
+                for i, (name, toks) in enumerate(batch)]
         rid += len(reqs)
         from repro.workloads.serving import batch_mix
         mix = batch_mix(batch)
@@ -206,12 +217,26 @@ def main() -> None:
         if governor is not None:
             from repro.runtime import describe_tick
             print("  " + describe_tick(governor.tick()))
+        else:
+            # no governor tick to snapshot through: the microscope
+            # captures the pool content at every round boundary itself
+            ins = obs.inspector()
+            if ins is not None and ins.wants(rnd):
+                ins.record(eng.pool.content_snapshot(epoch=rnd,
+                                                     owners=ins.owners))
+                obs.count("state_snapshots", 1, path="serving")
     s = eng.pool.stats
     print(f"pool: conv {s.conv_hits} hits | ext {s.ext_hits} hits | "
           f"pred-miss {s.ext_pred_miss} | false-pos {s.ext_false_pos}")
     if budgeter is not None and tenant_slo:
         print("slo attainment: " + " ".join(
             f"{k}:{met}/{n}" for k, (met, n) in tenant_slo.items()))
+    if args.record_trace and eng.pool.recorder is not None \
+            and len(eng.pool.recorder):
+        p = eng.pool.recorder.save(args.record_trace)
+        c = eng.pool.recorder.counts()
+        print(f"record-trace: {p} (" + " ".join(
+            f"{k}:{v}" for k, v in c.items()) + ")")
     _save_obs(args)
 
 
@@ -223,6 +248,10 @@ def _save_obs(args) -> None:
     if args.metrics_out and obs.metrics_on():
         p = obs.metrics_registry().save(args.metrics_out)
         print(f"metrics-out: {p}")
+    ins = obs.inspector()
+    if getattr(args, "inspect_out", None) and ins is not None:
+        p = ins.save(args.inspect_out)
+        print(f"inspect-out: {p} ({len(ins.snapshots)} snapshots)")
 
 
 if __name__ == "__main__":

@@ -28,8 +28,10 @@ from __future__ import annotations
 import os
 from typing import Optional
 
+from . import inspect as _inspect
 from . import metrics as _metrics
 from .decision import TRIGGERS, DecisionEvent  # noqa: F401
+from .inspect import Inspector, Snapshot  # noqa: F401
 from .metrics import (Registry, bench_counters,  # noqa: F401
                       count, observe, set_gauge)
 from .trace import NULL_SPAN, Span, Tracer  # noqa: F401
@@ -38,23 +40,33 @@ _TRACER: Optional[Tracer] = None
 
 
 def enable(*, trace: bool = True, metrics: bool = True,
-           clock=None) -> None:
-    """Activate observability (idempotent: live collectors are kept)."""
+           clock=None, inspect: bool = False,
+           inspect_every: int = 1) -> None:
+    """Activate observability (idempotent: live collectors are kept).
+
+    ``inspect=True`` additionally installs the cache-content inspector
+    (``repro.obs.inspect``): decoded per-epoch state snapshots, strided
+    by ``inspect_every``.  Off by default — snapshot decoding is host
+    work the regular span/metric probes never pay."""
     global _TRACER
     if trace and _TRACER is None:
         _TRACER = Tracer(clock=clock)
     if metrics:
         _metrics.activate()
+    if inspect and _inspect.active() is None:
+        _inspect.activate(Inspector(every=inspect_every))
 
 
 def disable() -> None:
     global _TRACER
     _TRACER = None
     _metrics.deactivate()
+    _inspect.deactivate()
 
 
 def enabled() -> bool:
-    return _TRACER is not None or _metrics.active() is not None
+    return (_TRACER is not None or _metrics.active() is not None
+            or _inspect.active() is not None)
 
 
 def tracing() -> bool:
@@ -73,6 +85,12 @@ def tracer() -> Optional[Tracer]:
 
 def metrics_registry() -> Optional[Registry]:
     return _metrics.active()
+
+
+def inspector() -> Optional[Inspector]:
+    """The active cache-content inspector, or None (the one None-check
+    every introspection site pays when the microscope is off)."""
+    return _inspect.active()
 
 
 def span(name: str, **tags):

@@ -59,6 +59,11 @@ class DecisionEvent:
     flush_writebacks: int = 0     # filled by the driver after the handoff
     replica: str = ""             # filled by the driver (fleet runs)
     ctx: Optional[int] = None     # external phase context, if any
+    # cache-state summary at decision time (filled by the driver from the
+    # epoch's telemetry — occupancy, hit rate, fairness...).  Always-on
+    # bookkeeping like the rest of the event: computed from numbers the
+    # driver already holds, so it is bit-identical with obs on or off.
+    summary: Dict[str, float] = field(default_factory=dict)
 
     def __post_init__(self):
         assert self.trigger in TRIGGERS, \
@@ -77,7 +82,8 @@ class DecisionEvent:
                 "epsilon": float(self.epsilon), "hint": int(self.hint),
                 "estimates": dict(self.estimates),
                 "flush_writebacks": int(self.flush_writebacks),
-                "replica": self.replica, "ctx": self.ctx}
+                "replica": self.replica, "ctx": self.ctx,
+                "summary": {k: float(v) for k, v in self.summary.items()}}
 
     def compact(self) -> str:
         """Short rendering for the telemetry ``decision`` column, e.g.

@@ -30,6 +30,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 PREFIX = "morpheus_"
 
+#: JSON snapshot schema version.  Versionless snapshots (pre-schema
+#: exports) are read as version 1 by ``tools/obs_report.py``; an unknown
+#: version is a hard reader error (exit 2), never a traceback.
+SNAPSHOT_SCHEMA = 1
+
 DEFAULT_BUCKETS = (1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8)
 
 LabelKey = Tuple[Tuple[str, str], ...]
@@ -178,7 +183,7 @@ class Registry:
 
     # ------------------------------------------------------------- export
     def snapshot(self) -> Dict:
-        return {"metrics": [
+        return {"schema": SNAPSHOT_SCHEMA, "metrics": [
             {"name": m.name, "kind": m.kind, "help": m.help,
              "samples": m.samples()} for m in self._metrics.values()]}
 
@@ -277,6 +282,7 @@ BENCH_COUNTER_KEYS = {
     "device_get_bytes": "device_get_bytes",
     "flush_writebacks": "flush_writebacks",
     "epochs": "epochs",
+    "snapshots": "state_snapshots",
 }
 
 

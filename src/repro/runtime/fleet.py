@@ -250,18 +250,29 @@ def _advance_group(cfg, group, backend: str, mesh) -> None:
         # the epilogues consume plus the extended-tier telemetry arrays
         # (on the scalar path _epoch_telemetry reads those from the
         # device state, one extra sync per replica per epoch)
-        host_delta, host_used, host_valid = jax.device_get(
-            (delta, ext_used, ext_valid))
+        host_states = None
+        if obs.inspector() is not None:
+            # introspection rides the same single transfer: the decoded
+            # snapshots need the whole carry on host, so the per-replica
+            # states join the batched readback instead of adding one
+            # device sync per replica
+            host_delta, host_used, host_valid, host_states = \
+                jax.device_get((delta, ext_used, ext_valid, new_states))
+        else:
+            host_delta, host_used, host_valid = jax.device_get(
+                (delta, ext_used, ext_valid))
         if obs.metrics_on():
             obs.count("device_get_bytes",
                       sum(np.asarray(x).nbytes for x in
                           jax.tree.leaves((host_delta, host_used,
                                            host_valid))))
         o = 0
-        for (rep, k), st in zip(rows, new_states):
+        for i, ((rep, k), st) in enumerate(zip(rows, new_states)):
             sl = slice(o, o + k)
             rep.consume(st, jax.tree.map(lambda x: x[sl], host_delta),
-                        ext_used=host_used[sl], ext_valid=host_valid[sl])
+                        ext_used=host_used[sl], ext_valid=host_valid[sl],
+                        host_state=None if host_states is None
+                        else host_states[i])
             o += k
 
 

@@ -46,7 +46,7 @@ from ..obs.decision import DecisionEvent
 from ..core.compression import BLOCK_BYTES
 from ..core.controller import Stats
 from . import stream as rt_stream
-from .telemetry import EpochRecord, TelemetryLog
+from .telemetry import EpochRecord, TelemetryLog, jains_index
 
 Split = Tuple[int, int]      # (n_compute, n_cache)
 
@@ -634,8 +634,17 @@ class ServingGovernor:
             ev.replica = "serving"
             if flushed and ev.switched:
                 ev.flush_writebacks = flushed
+            ev.summary = {"hit_rate": hit / lookups, "ext_occupancy": ext_occ,
+                          "pred_accuracy": tel["pred_accuracy"],
+                          "reward": reward}
             obs.instant("governor.decision", **ev.to_dict())
         self._dec_seen = len(self.gov.decisions)
+        ins = obs.inspector()
+        if ins is not None and ins.wants(self.epoch):
+            ins.record(self.pool.content_snapshot(epoch=self.epoch,
+                                                  replica="serving",
+                                                  owners=ins.owners))
+            obs.count("state_snapshots", 1, path="serving")
         rec = {"epoch": self.epoch, "chips": chips, "lookups": int(
             delta.lookups), "ns_per_lookup": ns_per,
             "hit_rate_interval": hit / lookups, "ext_occupancy": ext_occ,
@@ -979,7 +988,8 @@ class OnlineReplica:
 
     def consume(self, state, delta_rows: Stats, *,
                 ext_used: Optional[np.ndarray] = None,
-                ext_valid: Optional[np.ndarray] = None) -> None:
+                ext_valid: Optional[np.ndarray] = None,
+                host_state=None) -> None:
         """Epilogue of the epoch last described by ``epoch_inputs``.
 
         ``state`` is the advanced ``EngineState`` (this replica's rows);
@@ -987,7 +997,10 @@ class OnlineReplica:
         shape (n_tenants,).  ``ext_used``/``ext_valid`` are optional
         pre-fetched host copies of the state's extended-tier telemetry
         (rows of this replica) — the fleet passes them so telemetry
-        needs no per-replica device sync.
+        needs no per-replica device sync.  ``host_state`` is an optional
+        pre-fetched host copy of the *whole* state, used only by the
+        cache-content inspector (the fleet batches it into the same
+        single transfer when introspection is on).
         """
         assert self._cur is not None, "consume() without epoch_inputs()"
         lo, hi, nc, nk, cfg = self._cur
@@ -1054,6 +1067,41 @@ class OnlineReplica:
         occ, acc, saved = _epoch_telemetry(cfg, state, delta,
                                            ext_used=ext_used,
                                            ext_valid=ext_valid)
+        # fairness audit: Jain's index over the ACTIVE tenants' IPC terms
+        # (departed tenants excluded, like the QoS reward).  Always
+        # computed — a handful of host float ops — so the telemetry
+        # column is identical with obs on or off.
+        if tenant_ipc is None:
+            fairness = 1.0
+        else:
+            fairness = jains_index([x for x, c in zip(tenant_ipc, t_counts)
+                                    if c > 0])
+        if obs.metrics_on():
+            obs.set_gauge("fairness_jain", fairness, replica=self.name)
+        # cache microscope: decode the epoch's end-state into a content
+        # snapshot.  Captured BEFORE the governor decides — a switch
+        # below replaces the state under a new geometry, and the
+        # snapshot must describe the state the epoch actually ran on.
+        ins = obs.inspector()
+        if ins is not None and ins.wants(self.epoch_i):
+            from ..obs import inspect as obs_inspect
+            dec = engine.decode_state(
+                cfg, state if host_state is None else host_state)
+            stride, names = 0, None
+            if workload is not None:
+                from ..workloads.tenancy import TENANT_STRIDE_BLOCKS
+                stride = TENANT_STRIDE_BLOCKS
+                names = [t.name for t in wl.tenants]
+            tot = self.total_stats
+            ins.record(obs_inspect.snapshot_from_decode(
+                dec, epoch=self.epoch_i, replica=self.name,
+                conv_ways=cfg.conv_ways, ext_max_ways=cfg.ext_max_ways,
+                ext_budget_bytes=cfg.ext_budget_bytes,
+                block_bytes=tr.BLOCK_BYTES, tenant_stride=stride,
+                tenant_names=names,
+                probe_counters=(int(np.asarray(tot.ext_false_pos)),
+                                int(np.asarray(tot.ext_pred_miss)))))
+            obs.count("state_snapshots", 1, path="online")
         # bottleneck direction: the runtime sees which term binds (stall
         # counters in a real system; the roofline terms here).  Compute-
         # bound => more compute cores can help (+1); a full extended
@@ -1102,6 +1150,11 @@ class OnlineReplica:
             ev.replica = self.name
             if flush_wbs and ev.switched:
                 ev.flush_writebacks = flush_wbs
+            # cache-state summary at decision time: numbers the epilogue
+            # already computed, so the event is bit-identical obs on/off
+            ev.summary = {"hit_rate": rr.llc_hit_rate, "ext_occupancy": occ,
+                          "pred_accuracy": acc, "fairness": fairness,
+                          "reward": reward}
             obs.instant("governor.decision", **ev.to_dict())
         obs.count("epochs", 1, path="online")
         rec = EpochRecord(
@@ -1117,6 +1170,7 @@ class OnlineReplica:
             tenant_ipc="" if tenant_ipc is None else "|".join(
                 f"{t.name}:{x:.4f}"
                 for t, x in zip(wl.tenants, tenant_ipc)),
+            fairness=fairness,
             decision=";".join(ev.compact() for ev in new_events))
         self.records.append(rec)
         self.log.append(rec)

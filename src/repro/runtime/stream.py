@@ -23,7 +23,7 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,21 @@ from ..core.compression import BLOCK_BYTES
 from ..core.controller import MorpheusConfig, Stats
 from ..core.engine import EngineState, PackedTraces
 from ..core.tag_store import LRU_MAX_INT
+
+
+class StreamSnapshot(NamedTuple):
+    """A resumable ``EpochStream`` checkpoint: the engine carry plus the
+    stream-level bookkeeping that is NOT recoverable from the carry —
+    the stream position (the carry's ``pos`` is cumulative across warm
+    handoffs, not trace-relative), the epoch counter (the introspection
+    snapshot stride position), and the Bloom probe-counter baselines the
+    stream measures its cumulative false-positive rate against.  Without
+    these a restored run resumed from a warm-started donor would fold
+    the donor's pre-existing probe counters into its own FP rate."""
+    state: EngineState
+    pos: int
+    epoch: int
+    probe_base: Tuple[int, int]     # (ext_false_pos, ext_pred_miss)
 
 
 class EpochStream:
@@ -115,6 +130,10 @@ class EpochStream:
         self._base = int(np.asarray(self.state.pos)[0])
         self._host_pos = 0
         self.epoch = 0
+        # Bloom probe baseline: a warm (handoff-carried) state arrives
+        # with nonzero predictor counters; this stream's cumulative
+        # false-positive rate is measured against them
+        self._probe_base = self._probe_totals()
         self.ring = int(ring)
         self._ring: Deque[Tuple[int, int, PackedTraces]] = deque()
         self._packed_to = 0
@@ -136,6 +155,25 @@ class EpochStream:
         if len(self._masks) == 1:
             return jax.tree.map(lambda x: x[0], self.state.stats)
         return jax.tree.map(lambda x: x.sum(axis=0), self.state.stats)
+
+    def _probe_totals(self) -> Tuple[int, int]:
+        st = self.state.stats
+        return (int(np.asarray(st.ext_false_pos).sum()),
+                int(np.asarray(st.ext_pred_miss).sum()))
+
+    def probe_counters(self) -> Tuple[int, int]:
+        """Cumulative Bloom probe counters *of this stream* — the state
+        totals minus the warm-start baseline: (false positives, correctly
+        predicted misses)."""
+        fp, pm = self._probe_totals()
+        return fp - self._probe_base[0], pm - self._probe_base[1]
+
+    def fp_rate(self) -> float:
+        """Measured cumulative false-positive rate of the Bloom
+        predictor over this stream's probes (false positives over all
+        predicted-present-or-miss probe outcomes)."""
+        fp, pm = self.probe_counters()
+        return fp / max(fp + pm, 1)
 
     def tenant_stats(self) -> Dict[str, Stats]:
         """Per-tenant accumulated Stats (workload mode only)."""
@@ -216,11 +254,32 @@ class EpochStream:
                                                       self.state,
                                                       self.backend)
             obs.count("epochs", 1, path="stream")
+            ins = obs.inspector()
+            if ins is not None and ins.wants(self.epoch):
+                self._record_snapshot(ins)
             self.epoch += 1
             self._host_pos = hi
             if len(self._masks) == 1:
                 return jax.tree.map(lambda x: x[0], delta)
             return jax.tree.map(lambda x: x.sum(axis=0), delta)
+
+    def _record_snapshot(self, ins) -> None:
+        """Cache-microscope hook: decode the post-epoch carry into a
+        content snapshot (host-side, off the dispatch path)."""
+        from ..obs import inspect as obs_inspect
+        dec = engine.decode_state(self.cfg, self.state)
+        stride, names = 0, None
+        if self.workload is not None:
+            from ..workloads.tenancy import TENANT_STRIDE_BLOCKS
+            stride = TENANT_STRIDE_BLOCKS
+            names = [t.name for t in self.workload.tenants]
+        ins.record(obs_inspect.snapshot_from_decode(
+            dec, epoch=self.epoch, conv_ways=self.cfg.conv_ways,
+            ext_max_ways=self.cfg.ext_max_ways,
+            ext_budget_bytes=self.cfg.ext_budget_bytes,
+            block_bytes=BLOCK_BYTES, tenant_stride=stride,
+            tenant_names=names, probe_counters=self.probe_counters()))
+        obs.count("state_snapshots", 1, path="stream")
 
     def run(self) -> Stats:
         """Drain the remaining epochs; returns the accumulated Stats."""
@@ -229,14 +288,31 @@ class EpochStream:
         return self.stats
 
     # --------------------------------------------------- snapshot/restore
-    def snapshot(self) -> EngineState:
-        """Host-materialized copy of the full carry (numpy leaves)."""
-        return jax.tree.map(np.asarray, self.state)
+    def snapshot(self) -> StreamSnapshot:
+        """Host-materialized checkpoint: the full carry (numpy leaves)
+        plus the stream position, epoch counter and probe baselines."""
+        return StreamSnapshot(state=jax.tree.map(np.asarray, self.state),
+                              pos=self._host_pos, epoch=self.epoch,
+                              probe_base=self._probe_base)
 
-    def restore(self, state: EngineState) -> None:
-        """Resume from a previously captured snapshot."""
-        self.state = jax.tree.map(jnp.asarray, state)
-        self._host_pos = int(np.asarray(state.pos)[0]) - self._base
+    def restore(self, state: StreamSnapshot | EngineState) -> None:
+        """Resume from a previously captured snapshot.
+
+        Accepts a ``StreamSnapshot`` (position, epoch counter and probe
+        baselines carry over — cumulative FP rates resume bit-identical)
+        or a legacy bare ``EngineState`` (position re-derived from the
+        carry's cumulative ``pos`` against this stream's own baseline)."""
+        if isinstance(state, StreamSnapshot):
+            self.epoch = int(state.epoch)
+            self._probe_base = (int(state.probe_base[0]),
+                                int(state.probe_base[1]))
+            self._host_pos = int(state.pos)
+            state = state.state
+            self._base = int(np.asarray(state.pos)[0]) - self._host_pos
+            self.state = jax.tree.map(jnp.asarray, state)
+        else:
+            self.state = jax.tree.map(jnp.asarray, state)
+            self._host_pos = int(np.asarray(state.pos)[0]) - self._base
         # pre-packed epochs may not match the restored position: drop
         # them; likewise the churn detector's last signature belongs to
         # wherever the stream was before the rollback — comparing the
@@ -246,23 +322,45 @@ class EpochStream:
         self._sig = None
 
 
-def save_state(path: str | Path, state: EngineState) -> Path:
-    """Serialize an ``EngineState`` to ``.npz`` (leaves in pytree order)."""
+_STREAM_META_KEY = "stream_meta"
+
+
+def save_state(path: str | Path,
+               state: StreamSnapshot | EngineState) -> Path:
+    """Serialize an ``EngineState`` or ``StreamSnapshot`` to ``.npz``
+    (engine leaves in pytree order; snapshot metadata under a reserved
+    side key, so legacy state files and new snapshot files coexist)."""
     path = Path(path)
-    leaves = jax.tree_util.tree_leaves(state)
-    np.savez(path, **{f"leaf{i}": np.asarray(x)
-                      for i, x in enumerate(leaves)})
+    meta = None
+    if isinstance(state, StreamSnapshot):
+        meta = np.asarray([state.pos, state.epoch,
+                           state.probe_base[0], state.probe_base[1]],
+                          np.int64)
+        state = state.state
+    arrs = {f"leaf{i}": np.asarray(x)
+            for i, x in enumerate(jax.tree_util.tree_leaves(state))}
+    if meta is not None:
+        arrs[_STREAM_META_KEY] = meta
+    np.savez(path, **arrs)
     return path
 
 
 def load_state(path: str | Path, cfg: MorpheusConfig,
-               batch: int = 1) -> EngineState:
+               batch: int = 1) -> StreamSnapshot | EngineState:
     """Load a state saved by ``save_state``; the treedef comes from
-    ``engine.init_state(cfg, batch)`` so cfg must match the saved run."""
+    ``engine.init_state(cfg, batch)`` so cfg must match the saved run.
+    Files written from a ``StreamSnapshot`` load back as one; legacy
+    files load as a bare ``EngineState``."""
     with np.load(Path(path)) as z:
-        leaves = [z[f"leaf{i}"] for i in range(len(z.files))]
+        meta = z[_STREAM_META_KEY] if _STREAM_META_KEY in z.files else None
+        n = len(z.files) - (1 if meta is not None else 0)
+        leaves = [z[f"leaf{i}"] for i in range(n)]
     treedef = jax.tree_util.tree_structure(engine.init_state(cfg, batch))
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    if meta is None:
+        return state
+    return StreamSnapshot(state=state, pos=int(meta[0]), epoch=int(meta[1]),
+                          probe_base=(int(meta[2]), int(meta[3])))
 
 
 # ------------------------------------------------------- mode transitions

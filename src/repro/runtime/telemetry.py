@@ -29,6 +29,9 @@ Schema (one row per epoch, documented in docs/runtime.md):
   tenant_ipc   multi-tenant replay: per-tenant modeled IPC terms
                ("name:ipc|name:ipc") — the inputs to the QoS reward
                objectives (docs/qos.md)
+  fairness     Jain's fairness index over the active tenants' IPC terms
+               this epoch (1.0 for single-tenant runs) — the rolling
+               fairness audit gauge (docs/qos.md)
   decision     governor decision provenance this epoch: the compact
                rendering of every ``repro.obs.DecisionEvent`` the
                decision recorded (";"-joined, e.g.
@@ -72,6 +75,10 @@ class EpochRecord:
     # multi-tenant replay: per-tenant modeled IPC terms this epoch
     # ("name:ipc|name:ipc"; what the QoS objectives weigh — docs/qos.md)
     tenant_ipc: str = ""
+    # rolling Jain's fairness index over the per-tenant IPC terms this
+    # epoch (1.0 for single-tenant runs and perfectly even mixes; the
+    # fairness audit gauge — docs/observability.md, docs/qos.md)
+    fairness: float = 1.0
     # governor decision provenance: compact DecisionEvent renderings,
     # ";"-joined (empty when the governor held still) —
     # docs/observability.md
@@ -82,6 +89,24 @@ class EpochRecord:
 
 
 FIELDS = list(EpochRecord.__dataclass_fields__)
+
+
+def jains_index(xs: Sequence[float]) -> float:
+    """Jain's fairness index J(x) = (Σx)² / (n·Σx²) over non-negative
+    allocations; 1.0 means perfectly even, 1/n means one tenant takes
+    everything.  Exact by construction at the boundary cases the audit
+    relies on: K ≤ 1 and all-equal inputs return exactly 1.0 (no float
+    round-off), an all-zero vector reads as fair (nothing allocated,
+    nobody disadvantaged)."""
+    xs = [float(x) for x in xs]
+    n = len(xs)
+    if n <= 1 or len(set(xs)) == 1:
+        return 1.0
+    s = sum(xs)
+    sq = sum(x * x for x in xs)
+    if sq <= 0.0:
+        return 1.0
+    return (s * s) / (n * sq)
 
 
 class TelemetryLog:

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..configs.base import ArchConfig
 from ..models.transformer import LM
 from . import sampler as S
@@ -37,6 +38,7 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    tenant: str = ""     # owning tenant label (residency audit only)
 
 
 def _prefix_hash(tokens: List[int]) -> int:
@@ -84,10 +86,16 @@ class Engine:
 
         # ---- page-cache consultation for prompt KV (prefix caching)
         n_pages = plen // PAGE_TOKENS
+        ins = obs.inspector()
         for r in requests:
             for pg in range(n_pages):
                 prefix = r.prompt[: (pg + 1) * PAGE_TOKENS]
                 key = page_key(_prefix_hash(prefix), 0, pg)
+                if ins is not None and r.tenant:
+                    # page keys carry no tenant bits; note ownership at
+                    # consult time so the pool's residency decode can
+                    # attribute resident pages back to tenants
+                    ins.note_owner(key, r.tenant)
                 plan = self.pool.lookup_batch(np.asarray([key], np.uint32))
                 if plan.tier[0] == 2:
                     self.pages_fetched += 1

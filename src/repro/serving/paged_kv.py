@@ -32,6 +32,79 @@ from ..kernels import ops as K
 
 Array = jnp.ndarray
 
+# TraceRecorder event codes (also the ``levels`` column of a corpus
+# export, so they must stay in the corpus-legal {0, 1, 2} range)
+EV_LOOKUP, EV_INSERT, EV_EVICT = 0, 1, 2
+EVENT_NAMES = ("lookup", "insert", "evict")
+
+
+class TraceRecorder:
+    """Fixed-capacity ring of block-level pool events (lookup / insert /
+    evict), recorded as parallel numpy columns.
+
+    Pure logging: attaching a recorder changes no pool decision and no
+    stat (the pool's planning code never reads it).  Past capacity the
+    oldest events are overwritten — ``total`` keeps the true count so an
+    export states what it dropped.  ``save()`` writes the ring through
+    ``workloads.corpus.save_trace``: ``addrs`` = page keys, ``levels`` =
+    the event code, ``writes`` = mutating events (insert/evict), which
+    makes the file loadable by every corpus tool
+    (``tools/trace_corpus.py info/validate``)."""
+
+    def __init__(self, capacity: int = 65536):
+        assert capacity > 0
+        self.capacity = int(capacity)
+        self.keys = np.zeros(self.capacity, np.uint32)
+        self.events = np.zeros(self.capacity, np.int8)
+        self.tiers = np.zeros(self.capacity, np.int8)
+        self._next = 0
+        self._count = 0
+        self.total = 0
+
+    def record(self, event: int, keys, tiers) -> None:
+        keys = np.atleast_1d(np.asarray(keys, np.uint32))
+        tiers = np.broadcast_to(np.asarray(tiers, np.int8), keys.shape)
+        for k, t in zip(keys, tiers):
+            self.keys[self._next] = k
+            self.events[self._next] = event
+            self.tiers[self._next] = t
+            self._next = (self._next + 1) % self.capacity
+        self._count = min(self._count + len(keys), self.capacity)
+        self.total += len(keys)
+
+    def __len__(self) -> int:
+        return self._count
+
+    def arrays(self):
+        """(keys, events, tiers) held in the ring, oldest first."""
+        if self._count < self.capacity:
+            sl = slice(0, self._count)
+            return self.keys[sl], self.events[sl], self.tiers[sl]
+        idx = np.r_[self._next:self.capacity, 0:self._next]
+        return self.keys[idx], self.events[idx], self.tiers[idx]
+
+    def counts(self) -> Dict[str, int]:
+        _, ev, _ = self.arrays()
+        return {name: int((ev == code).sum())
+                for code, name in enumerate(EVENT_NAMES)}
+
+    def save(self, path, *, name: str = "pool_events"):
+        from ..workloads import corpus
+        keys, ev, tiers = self.arrays()
+        assert len(keys) > 0, "recorder is empty"
+        return corpus.save_trace(
+            path, keys, ev != EV_LOOKUP, ev.astype(np.int32),
+            name=name, like="pool_events", n_cores=0, seed=0, ws_scale=1.0,
+            extra={"kind": "pool_events",
+                   "event_codes": dict(enumerate(EVENT_NAMES)),
+                   "column_semantics": {
+                       "addrs": "page key", "levels": "event code",
+                       "writes": "mutating event (insert/evict)"},
+                   "events": self.counts(),
+                   "tier_counts": {str(t): int((tiers == t).sum())
+                                   for t in np.unique(tiers)},
+                   "dropped": max(self.total - self._count, 0)})
+
 
 @dataclass(frozen=True)
 class PoolConfig:
@@ -115,6 +188,15 @@ class MorpheusPagePool:
         self.ext_base = jnp.zeros((es, mw), jnp.uint32)
         self.stats = PoolStats.zero()
         self.costs = TPUv5e()
+        # optional block-level event recorder (pure logging; survives
+        # reconfigure like the cumulative stats)
+        self.recorder: Optional[TraceRecorder] = None
+
+    def attach_recorder(self, rec: Optional["TraceRecorder"] = None
+                        ) -> "TraceRecorder":
+        """Attach (or create) a block-level event recorder."""
+        self.recorder = rec if rec is not None else TraceRecorder()
+        return self.recorder
 
     # ------------------------------------------------------------ planning
     def lookup_batch(self, keys: np.ndarray) -> GatherPlan:
@@ -203,6 +285,8 @@ class MorpheusPagePool:
             self._ext_fill(sets[~ehit], tags[idx[~ehit]])
 
         self.stats = self.stats + PoolStats(**add)
+        if self.recorder is not None:
+            self.recorder.record(EV_LOOKUP, keys, out_tier)
         return GatherPlan(out_tier, out_set, out_way)
 
     # ------------------------------------------------------------ payloads
@@ -260,11 +344,22 @@ class MorpheusPagePool:
             return True, int(np.argmax(m))
         return False, 0
 
+    def _key_of(self, gset: int, tag: int) -> int:
+        """Inverse of route/tag_of: the page key resident at (global set,
+        tag) — key = tag * total_sets + gset."""
+        return (int(tag) * self.cfg.amap.total_sets + int(gset)) \
+            & 0xFFFFFFFF
+
     def _conv_fill(self, s: int, tag: int):
         row_v = np.asarray(self.conv_valid[s])
         row_l = np.asarray(self.conv_lru[s]).astype(np.int64)
         row_l[~row_v] = -1
         w = int(np.argmin(row_l))
+        if self.recorder is not None:
+            if row_v[w]:
+                old = int(np.asarray(self.conv_tags[s, w]))
+                self.recorder.record(EV_EVICT, self._key_of(s, old), 0)
+            self.recorder.record(EV_INSERT, self._key_of(s, tag), 0)
         self.conv_tags = self.conv_tags.at[s, w].set(np.uint32(tag))
         self.conv_valid = self.conv_valid.at[s, w].set(True)
         self.conv_lru = self.conv_lru.at[s, w].set(0xFFF)
@@ -276,11 +371,18 @@ class MorpheusPagePool:
         return m.any(axis=1), np.argmax(m, axis=1).astype(np.int32)
 
     def _ext_fill(self, sets: np.ndarray, tags: np.ndarray):
+        conv_sets = self.cfg.amap.conv_sets
         for s, tag in zip(sets, tags):
             v = np.asarray(self.ext_valid[s])
             l = np.asarray(self.ext_lru[s]).astype(np.int64)
             l[~v] = -1
             w = int(np.argmin(l))
+            if self.recorder is not None:
+                gs = conv_sets + int(s)
+                if v[w]:
+                    old = int(np.asarray(self.ext_tags[s, w]))
+                    self.recorder.record(EV_EVICT, self._key_of(gs, old), 1)
+                self.recorder.record(EV_INSERT, self._key_of(gs, tag), 1)
             self.ext_tags = self.ext_tags.at[int(s), w].set(np.uint32(tag))
             self.ext_valid = self.ext_valid.at[int(s), w].set(True)
             self.ext_lru = self.ext_lru.at[int(s), w].set(0xFFF)
@@ -329,6 +431,59 @@ class MorpheusPagePool:
             "num_cache_chips": float(self.cfg.num_cache_chips),
         }
 
+    # -------------------------------------------------------- introspection
+    def resident_keys(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(conventional, extended) page keys currently resident —
+        read-only decode of the tag stores (key = tag * total + set)."""
+        amap = self.cfg.amap
+        total = max(amap.total_sets, 1)
+        cv = np.asarray(self.conv_valid)
+        s_idx, w_idx = np.nonzero(cv)
+        conv = (np.asarray(self.conv_tags)[s_idx, w_idx].astype(np.uint64)
+                * total + s_idx.astype(np.uint64)).astype(np.uint32)
+        ev = np.asarray(self.ext_valid)
+        e_s, e_w = np.nonzero(ev)
+        ext = (np.asarray(self.ext_tags)[e_s, e_w].astype(np.uint64)
+               * total + (amap.conv_sets + e_s).astype(np.uint64)
+               ).astype(np.uint32)
+        if amap.ext_sets == 0:
+            ext = ext[:0]
+        return conv, ext
+
+    def content_snapshot(self, *, epoch: int = 0, replica: str = "serving",
+                         owners: Optional[Dict[int, str]] = None):
+        """Decoded cache-content ``obs.Snapshot`` of the pool.
+
+        ``owners`` maps page key -> tenant label (the serving engine's
+        insert-time notes, ``obs.Inspector.owners``); keys without a
+        note count under ``"?"``."""
+        from ..obs.inspect import Snapshot, bloom_fill_ratio
+        cv = np.asarray(self.conv_valid)
+        ev = np.asarray(self.ext_valid)
+        conv_occ = cv.sum(axis=1).astype(np.int64)
+        ext_occ = ev.sum(axis=1).astype(np.int64)
+        s = self.stats
+        fp, pm = s.ext_false_pos, s.ext_pred_miss
+        residency: Dict[str, int] = {}
+        if owners is not None:
+            conv_k, ext_k = self.resident_keys()
+            for k in np.concatenate([conv_k, ext_k]):
+                label = owners.get(int(k), "?")
+                residency[label] = residency.get(label, 0) + 1
+        return Snapshot(
+            epoch=int(epoch), pos=int(s.lookups), replica=replica,
+            conv_set_occ=[int(x) for x in conv_occ],
+            ext_set_occ=[int(x) for x in ext_occ],
+            conv_occupancy=float(cv.mean()),
+            ext_occupancy=float(ev.mean())
+            if self.cfg.num_cache_chips else 0.0,
+            byte_util=float(ev.mean())
+            if self.cfg.num_cache_chips else 0.0,
+            bloom_fill=bloom_fill_ratio(np.asarray(self.bf1))
+            if self.cfg.num_cache_chips else 0.0,
+            bloom_fp_rate=fp / max(fp + pm, 1),
+            residency=residency)
+
     # ------------------------------------------------------ mode transition
     def reconfigure(self, num_cache_chips: int) -> int:
         """Mode transition: re-provision the pool for a new cache-chip
@@ -343,9 +498,18 @@ class MorpheusPagePool:
         flushed = int(np.asarray(self.conv_valid).sum())
         if self.cfg.num_cache_chips:
             flushed += int(np.asarray(self.ext_valid).sum())
-        stats = self.stats
+        stats, rec = self.stats, self.recorder
+        if rec is not None and flushed:
+            # a mode transition flushes every resident page: those are
+            # evict events like any other
+            conv_k, ext_k = self.resident_keys()
+            if len(conv_k):
+                rec.record(EV_EVICT, conv_k, 0)
+            if len(ext_k):
+                rec.record(EV_EVICT, ext_k, 1)
         self.__init__(replace_cfg(self.cfg, num_cache_chips))
         self.stats = stats
+        self.recorder = rec
         return flushed
 
 

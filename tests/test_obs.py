@@ -372,7 +372,7 @@ def _run_tuner(path):
 
 def test_tuner_trajectory_bytes_identical_under_obs(tmp_path):
     off = _run_tuner(tmp_path / "off.jsonl")
-    obs.enable()
+    obs.enable(inspect=True)       # full stack incl. the cache microscope
     on = _run_tuner(tmp_path / "on.jsonl")
     spans = [e for e in obs.tracer().events
              if e["name"] == "tuner.generation"]
@@ -427,7 +427,299 @@ def test_bench_path_env_override(tmp_path, monkeypatch):
     assert p == target and target.exists()
 
 
+# ----------------------------------------- cache microscope (ISSUE 9)
+
+def _stats_ints(stats):
+    return [int(np.asarray(v)) for v in stats]
+
+
+@pytest.mark.parametrize("backend", [
+    "jnp",
+    pytest.param("pallas", marks=pytest.mark.skipif(
+        not _pallas_ok, reason=_pallas_why)),
+])
+def test_enabled_introspection_is_bit_identical(backend):
+    """Full microscope on (per-epoch state snapshots) changes NO
+    simulator output: integer Stats, telemetry rows and the decision
+    sequence stay bit-identical on both backends."""
+    base = _online(backend=backend)
+    obs.enable(trace=False, metrics=False, inspect=True)
+    on = _online(backend=backend)
+    snaps = obs.inspector().snapshots
+    obs.disable()
+    assert snaps, "microscope recorded no snapshots"
+    assert _stats_ints(base.stats) == _stats_ints(on.stats)
+    assert [rec.to_dict() for rec in base.records] == \
+        [rec.to_dict() for rec in on.records]
+    assert [e.to_dict() for e in base.decisions] == \
+        [e.to_dict() for e in on.decisions]
+    assert (base.ipc, base.switches, base.converged_split) == \
+        (on.ipc, on.switches, on.converged_split)
+
+
+def test_snapshot_counter_and_decode_sanity():
+    obs.enable(trace=False, metrics=True, inspect=True)
+    r = _online()
+    snaps = obs.inspector().snapshots
+    c = obs.bench_counters()
+    obs.disable()
+    assert len(snaps) == len(r.records) == c["snapshots"]
+    assert [s.epoch for s in snaps] == sorted(s.epoch for s in snaps)
+    for s in snaps:
+        assert 0.0 <= s.conv_occupancy <= 1.0
+        assert 0.0 <= s.ext_occupancy <= 1.0
+        assert 0.0 <= s.byte_util <= 1.0
+        assert 0.0 <= s.bloom_fill <= 1.0
+        assert 0.0 <= s.bloom_fp_rate <= 1.0
+        assert s.expansion >= 1.0          # BDI never inflates
+        if s.conv_occupancy > 0:
+            # occupancy = valid / (sets * ways): recover the way count
+            ways = sum(s.conv_set_occ) / (s.conv_occupancy
+                                          * len(s.conv_set_occ))
+            assert ways == pytest.approx(round(ways)) and ways >= 1
+    # occupancy only grows on this single-phase-dominated stream prefix
+    assert snaps[-1].conv_occupancy >= snaps[0].conv_occupancy
+    json.dumps(snaps[-1].to_dict())        # export is JSON-clean
+
+
+def test_inspect_every_strides_snapshots():
+    obs.enable(trace=False, metrics=False, inspect=True, inspect_every=3)
+    r = _online()
+    snaps = obs.inspector().snapshots
+    obs.disable()
+    assert [s.epoch for s in snaps] == \
+        [e for e in range(len(r.records)) if e % 3 == 0]
+
+
+def test_residency_sums_to_valid_blocks_every_epoch():
+    """Per-tenant residency (owners recovered from block addresses) must
+    account for every valid block in both tiers, every epoch."""
+    from repro.core import cache_sim as cs
+    from repro.workloads import tenancy
+    wl = tenancy.make_workload("cfd,kmeans", length=9_000, n_cores=32,
+                               arrival="det:2e6", seed=0,
+                               ws_scale=1.0 / cs.SIM_SCALE)
+    obs.enable(trace=False, metrics=False, inspect=True)
+    simulate_online(wl, "Morpheus-ALL", epoch_len=1_500)
+    snaps = obs.inspector().snapshots
+    obs.disable()
+    assert snaps
+    names = {t.name for t in wl.tenants}
+    for s in snaps:
+        total = sum(s.conv_set_occ) + sum(s.ext_set_occ)
+        assert sum(s.residency.values()) == total, \
+            f"epoch {s.epoch}: residency does not account for all blocks"
+        assert set(s.residency) <= names
+    assert any(len(s.residency) == 2 for s in snaps), \
+        "both tenants should hold residency at some epoch"
+
+
+def test_inspector_caps_and_drops():
+    from repro.obs.inspect import Inspector, Snapshot
+    ins = Inspector(max_snapshots=2)
+    for i in range(5):
+        ins.record(Snapshot(epoch=i, pos=i))
+    assert len(ins.snapshots) == 2 and ins.dropped == 3
+    assert ins.to_json()["dropped"] == 3
+
+
+# ------------------------------------------------------- stream profiler
+
+def test_reuse_histogram_mass_invariant():
+    from repro.obs import profile as prof
+    rng = np.random.default_rng(0)
+    for addrs in ([], [7], [7, 7, 7], list(range(100)),
+                  rng.integers(0, 50, 1_000)):
+        h = prof.reuse_histogram(addrs)
+        assert h["mass"] == h["cold"] + sum(h["bins"]) == len(addrs)
+
+
+def test_reuse_distances_exact_small_cases():
+    from repro.obs import profile as prof
+    # 1 1: re-touch distance 0; 1 2 1: one distinct block in between
+    assert prof.reuse_distances([1, 1]).tolist() == [prof.COLD, 0]
+    assert prof.reuse_distances([1, 2, 1]).tolist() == \
+        [prof.COLD, prof.COLD, 1]
+    assert prof.reuse_distances([1, 2, 3, 1, 2]).tolist() == \
+        [prof.COLD, prof.COLD, prof.COLD, 2, 2]
+    h = prof.reuse_histogram([1, 1, 1])
+    assert h["cold"] == 1 and h["bins"][0] == 2     # distance-0 bin
+
+
+def test_wss_curve_and_per_tenant_profile():
+    from repro.obs import profile as prof
+    addrs = [1, 2, 1, 3, 2, 4]
+    tid = [0, 1, 0, 1, 1, 0]
+    p = prof.profile_trace(addrs, tenant_id=tid, names=["a", "b"])
+    assert p["wss"]["footprint_blocks"] == 4
+    assert p["wss"]["distinct_blocks"][-1] == 4
+    assert sorted(p["tenants"]) == ["a", "b"]
+    # per-tenant masses sum to the global mass
+    assert sum(t["reuse"]["mass"] for t in p["tenants"].values()) == \
+        p["reuse"]["mass"] == len(addrs)
+    assert p["tenants"]["a"]["wss"]["footprint_blocks"] == 2  # {1, 4}
+
+
+# ------------------------------------------------------- fairness gauge
+
+def test_jains_index_exact_unity_cases():
+    from repro.runtime.telemetry import jains_index
+    assert jains_index([]) == 1.0
+    assert jains_index([3.7]) == 1.0                 # K=1: exactly 1.0
+    assert jains_index([0.4] * 8) == 1.0             # identical tenants
+    assert jains_index([0.0, 0.0]) == 1.0            # all-idle epoch
+    assert jains_index([1.0, 0.0]) == pytest.approx(0.5)
+    # bounds: 1/n <= J <= 1
+    xs = [5.0, 1.0, 0.5, 0.25]
+    assert 1 / len(xs) <= jains_index(xs) < 1.0
+
+
+def test_fairness_column_in_epoch_records():
+    from repro.core import cache_sim as cs
+    from repro.workloads import tenancy
+    assert "fairness" in FIELDS and FIELDS[-1] == "decision"
+    r = _online()                    # single tenant: exactly 1.0
+    assert all(rec.fairness == 1.0 for rec in r.records)
+    wl = tenancy.make_workload("cfd,kmeans", length=9_000, n_cores=32,
+                               arrival="det:2e6", seed=0,
+                               ws_scale=1.0 / cs.SIM_SCALE)
+    m = simulate_online(wl, "Morpheus-ALL", epoch_len=1_500)
+    assert all(0.0 < rec.fairness <= 1.0 for rec in m.records)
+
+
+def test_fairness_gauge_registered():
+    obs.enable(trace=False, metrics=True)
+    _online()
+    text = obs.metrics_registry().to_prometheus()
+    obs.disable()
+    assert "morpheus_fairness_jain" in text
+
+
+def test_decision_events_carry_summary():
+    r = _online()
+    for e in r.decisions:
+        assert {"hit_rate", "ext_occupancy", "fairness",
+                "reward"} <= set(e.summary)
+        assert e.to_dict()["summary"]["fairness"] == e.summary["fairness"]
+
+
+# ------------------------------------------------- pool event recorder
+
+def _pool(chips=2):
+    from repro.serving.paged_kv import MorpheusPagePool, PoolConfig
+    return MorpheusPagePool(PoolConfig(conv_sets=16, ext_sets_per_chip=8,
+                                       num_cache_chips=chips, ways=2))
+
+
+def test_pool_recorder_logs_and_is_pure(tmp_path):
+    from repro.serving import paged_kv as pk
+    from repro.workloads import corpus
+    keys = np.arange(1, 25, dtype=np.uint32)
+    ref = _pool()
+    ref.lookup_batch(keys)
+    ref.lookup_batch(keys)
+    pool = _pool()
+    rec = pool.attach_recorder()
+    pool.lookup_batch(keys)
+    pool.lookup_batch(keys)
+    # pure logging: stats identical with and without the recorder
+    assert pool.stats == ref.stats
+    c = rec.counts()
+    assert c["lookup"] == 2 * len(keys)
+    assert c["insert"] > 0
+    # every insert/evict key routes to a real set (inverse key mapping)
+    ks, ev, tiers = rec.arrays()
+    assert set(np.unique(ev)) <= {pk.EV_LOOKUP, pk.EV_INSERT, pk.EV_EVICT}
+    p = rec.save(tmp_path / "pool.npz")
+    addrs, writes, levels, meta = corpus.load_trace(p)
+    assert corpus.validate_trace(p) == []
+    assert meta["extra"]["kind"] == "pool_events"
+    assert meta["extra"]["events"] == c
+    assert int(writes.sum()) == c["insert"] + c["evict"]
+
+
+def test_pool_recorder_survives_reconfigure():
+    from repro.serving.paged_kv import EV_EVICT
+    pool = _pool(chips=2)
+    rec = pool.attach_recorder()
+    pool.lookup_batch(np.arange(1, 25, dtype=np.uint32))
+    resident = sum(len(k) for k in pool.resident_keys())
+    evicts_before = rec.counts()["evict"]
+    flushed = pool.reconfigure(1)
+    assert pool.recorder is rec, "recorder must survive reconfigure"
+    assert flushed == resident
+    assert rec.counts()["evict"] == evicts_before + resident, \
+        "a mode transition must log one evict per flushed page"
+
+
+def test_pool_recorder_ring_wraps_oldest_first():
+    from repro.serving.paged_kv import EV_LOOKUP, TraceRecorder
+    rec = TraceRecorder(capacity=8)
+    rec.record(EV_LOOKUP, np.arange(20, dtype=np.uint32), 0)
+    ks, _, _ = rec.arrays()
+    assert rec.total == 20 and len(rec) == 8
+    assert ks.tolist() == list(range(12, 20)), "export must be oldest-first"
+
+
+def test_pool_content_snapshot_residency():
+    from repro.obs.inspect import Inspector
+    pool = _pool()
+    keys = np.arange(1, 25, dtype=np.uint32)
+    pool.lookup_batch(keys)
+    ins = Inspector()
+    for k in keys[:10]:
+        ins.note_owner(int(k), "tenantA")
+    snap = pool.content_snapshot(epoch=3, owners=ins.owners)
+    valid = sum(snap.conv_set_occ) + sum(snap.ext_set_occ)
+    assert sum(snap.residency.values()) == valid
+    assert snap.residency.get("tenantA", 0) > 0
+    assert "?" in snap.residency          # un-noted keys stay visible
+    assert snap.pos == pool.stats.lookups
+
+
 # --------------------------------------------------------------- reporter
+
+def test_obs_report_heatmap_and_filters(tmp_path):
+    obs.enable(trace=True, metrics=False, inspect=True)
+    _online()
+    ins_p = obs.inspector().save(tmp_path / "inspect.json")
+    trace_p = obs.tracer().save(tmp_path / "trace.json")
+    obs.disable()
+    tool = str(ROOT / "tools" / "obs_report.py")
+    out = subprocess.run(
+        [sys.executable, tool, "heatmap", str(ins_p),
+         "--csv-prefix", str(tmp_path / "hm"),
+         "--html", str(tmp_path / "hm.html")],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "set occupancy over epochs" in out.stdout
+    assert (tmp_path / "hm_occupancy.csv").exists()
+    assert (tmp_path / "hm.html").exists()
+    # decision-trail selectors
+    out = subprocess.run(
+        [sys.executable, tool, "--trace", str(trace_p), "--decisions",
+         "--filter", "trigger=explore", "--epochs", "0:99"],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "trigger=explore" in out.stdout
+    # unknown inspect schema exits 2, no traceback
+    bad = dict(json.loads(ins_p.read_text()), schema=99)
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps(bad))
+    r = subprocess.run([sys.executable, tool, "heatmap", str(bad_p)],
+                       capture_output=True, text=True)
+    assert r.returncode == 2 and "Traceback" not in r.stderr
+
+
+def test_obs_report_unknown_metrics_schema_exits_2(tmp_path):
+    p = tmp_path / "m.json"
+    p.write_text(json.dumps({"schema": 9, "metrics": []}))
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "obs_report.py"),
+         "--metrics", str(p)], capture_output=True, text=True)
+    assert r.returncode == 2 and "Traceback" not in r.stderr
+    assert "unknown metrics snapshot schema" in r.stderr
+
 
 def test_obs_report_renders_bundle(tmp_path):
     obs.enable()

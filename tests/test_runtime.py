@@ -146,6 +146,61 @@ def test_snapshot_restore_resumes_identically(tmp_path):
     _assert_int_identical(ref_stats, s3.run(), "npz round-trip")
 
 
+def test_snapshot_restore_carries_probe_counters(tmp_path):
+    """The snapshot/restore round-trip must carry the stream's epoch
+    counter (the introspection snapshot stride position) and the Bloom
+    probe-counter baselines — a resumed run must report bit-identical
+    cumulative false-positive rates, even when the donor stream started
+    from a warm (handoff-carried) state whose Stats were nonzero."""
+    cfg = _cfg()
+    addrs, writes, levels = _trace(seed=4)
+
+    # warm prior: a full run leaves nonzero probe counters in the state
+    s0 = EpochStream(cfg, addrs, writes, levels, epoch_len=500)
+    s0.run()
+    warm = jax.tree.map(np.asarray, s0.state)
+    assert int(warm.stats.ext_false_pos.sum()) > 0, \
+        "fixture must produce false positives for the baseline to matter"
+
+    a2, w2, l2 = _trace(seed=14)
+    donor = EpochStream(cfg, a2, w2, l2, epoch_len=500, state=warm)
+    donor.step()
+    donor.step()
+    snap = donor.snapshot()
+    assert snap.epoch == 2 and snap.pos == 1000
+    save_state(tmp_path / "snap.npz", snap)
+    while not donor.done:
+        donor.step()
+
+    # in-memory restore into a cold-constructed stream
+    s2 = EpochStream(cfg, a2, w2, l2, epoch_len=500)
+    s2.restore(snap)
+    assert s2.epoch == 2 and s2.pos == 1000
+    while not s2.done:
+        s2.step()
+    assert s2.epoch == donor.epoch
+    assert s2.probe_counters() == donor.probe_counters()
+    assert s2.fp_rate() == donor.fp_rate()
+
+    # .npz round-trip preserves the stream metadata too
+    loaded = load_state(tmp_path / "snap.npz", cfg)
+    s3 = EpochStream(cfg, a2, w2, l2, epoch_len=500)
+    s3.restore(loaded)
+    assert s3.epoch == 2 and s3.pos == 1000
+    while not s3.done:
+        s3.step()
+    assert s3.probe_counters() == donor.probe_counters()
+    assert s3.fp_rate() == donor.fp_rate()
+
+    # a legacy bare-EngineState snapshot still restores (old behaviour:
+    # position measured against the receiving stream's own baseline)
+    s4 = EpochStream(cfg, a2, w2, l2, epoch_len=500)
+    s4.restore(snap.state)
+    assert s4.pos == int(np.asarray(snap.state.pos)[0])
+    _assert_int_identical(jax.tree.map(lambda x: x[0], snap.state.stats),
+                          s4.stats, "legacy restore stats")
+
+
 def test_epoch_stream_partial_stats_monotone():
     """Per-epoch deltas sum to the accumulated stats."""
     cfg = _cfg()

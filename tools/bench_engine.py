@@ -135,7 +135,7 @@ def obs_gate():
         t0 = time.time()
         cs.run_batch(pts)
         t_off = min(t_off, time.time() - t0)
-        obs.enable()                                # spans + metrics
+        obs.enable(inspect=True)                    # spans + metrics + microscope
         t0 = time.time()
         cs.run_batch(pts)
         t_on = min(t_on, time.time() - t0)

@@ -130,6 +130,10 @@ def main() -> None:
     print(f"profile={args.profile} backend={backend}")
     obs.enable(trace=False)     # counters into the bench doc, no spans
     timings = bench_stream(p["length"], p["epochs"], backend)
+    # governor leg runs with the cache microscope on (strided) so the
+    # committed baseline exercises the snapshots counter too; the timed
+    # stream sweeps above stay microscope-free
+    obs.enable(trace=False, inspect=True, inspect_every=4)
     timings.update(bench_governor(p["phased"], backend))
     out = bs.write_bench("runtime", args.profile, timings,
                          counters=obs.bench_counters(),

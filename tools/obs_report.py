@@ -1,9 +1,13 @@
 """Render an observability bundle: span timeline, decision audit trail,
-metric summaries (docs/observability.md).
+metric summaries, cache-content heatmaps (docs/observability.md).
 
   PYTHONPATH=src python tools/obs_report.py --trace TRACE.json
   PYTHONPATH=src python tools/obs_report.py --trace TRACE.json --decisions
+  PYTHONPATH=src python tools/obs_report.py --trace TRACE.json \
+      --decisions --filter trigger=greedy --epochs 4:12
   PYTHONPATH=src python tools/obs_report.py --metrics METRICS.json
+  PYTHONPATH=src python tools/obs_report.py heatmap INSPECT.json \
+      --csv-prefix out/heat --html out/heat.html
 
 ``--trace`` takes the Chrome/Perfetto trace-event JSON written by
 ``Tracer.save`` (``--trace-out`` on the launchers/benchmarks) and prints
@@ -11,9 +15,16 @@ a per-span-name timeline aggregate plus — ``--decisions`` — the
 governor's full split-decision audit trail reconstructed from the
 ``governor.decision`` instant events (one per recorded
 ``repro.obs.DecisionEvent``: epoch, replica, trigger, split movement,
-epsilon, flush cost paid).  ``--metrics`` takes either the JSON snapshot
-(``.json``) or the Prometheus text exposition and prints per-metric
-totals.  Exits 2 on a file that is not a valid bundle of its kind.
+epsilon, flush cost paid).  ``--filter trigger=<kind>`` and
+``--epochs a:b`` select a slice of the trail.  ``--metrics`` takes
+either the JSON snapshot (``.json``) or the Prometheus text exposition
+and prints per-metric totals — versionless legacy snapshots read as
+schema 1; an unknown schema version is a reader error.  The ``heatmap``
+subcommand renders a cache-microscope export (``--inspect-out`` on the
+launchers, ``obs.Inspector.save``) as set-occupancy-over-epochs and
+per-tenant-residency-over-epochs heatmaps: ASCII to stdout, plus CSV
+(``--csv-prefix``) and a standalone HTML page (``--html``).  Exits 2 on
+a file that is not a valid bundle of its kind.
 """
 from __future__ import annotations
 
@@ -64,10 +75,21 @@ def timeline(events) -> None:
               f"{a['total'] / a['count']:10.1f} {a['max']:10.1f}")
 
 
-def decision_trail(events) -> None:
+def decision_trail(events, trigger: str = None,
+                   epochs: tuple = None) -> None:
     decs = [e for e in events
             if e["ph"] == "i" and e["name"] == "governor.decision"]
-    print(f"\ndecision audit trail: {len(decs)} events")
+    sel = []
+    if trigger is not None:
+        decs = [e for e in decs if e["args"].get("trigger") == trigger]
+        sel.append(f"trigger={trigger}")
+    if epochs is not None:
+        lo, hi = epochs
+        decs = [e for e in decs
+                if lo <= e["args"].get("epoch", 0) < hi]
+        sel.append(f"epochs {lo}:{hi}")
+    note = f" ({', '.join(sel)})" if sel else ""
+    print(f"\ndecision audit trail: {len(decs)} events{note}")
     if not decs:
         return
     def render(v):
@@ -86,10 +108,15 @@ def decision_trail(events) -> None:
         switches += moved
         split = (f"{render(frm)}->{render(to)}" if moved
                  else f"{render(frm)} held")
+        summ = a.get("summary") or {}
+        tail = "" if not summ else "  " + " ".join(
+            f"{k.split('_')[-1]}={summ[k]:.3f}"
+            for k in ("hit_rate", "ext_occupancy", "fairness")
+            if k in summ)
         print(f"{a['epoch']:5d} {str(a.get('replica', '')):20s} "
               f"{a['trigger']:11s} {split:16s} {a['epsilon']:7.3f} "
               f"{a.get('flush_writebacks', 0):8d}  "
-              f"{a.get('ctx') or ''}")
+              f"{a.get('ctx') or ''}{tail}")
     print(f"{switches} split switches, "
           f"{len(decs) - switches} hold decisions")
 
@@ -103,6 +130,11 @@ def load_metrics(path: Path) -> dict:
         doc = json.loads(text)
         if not isinstance(doc, dict) or "metrics" not in doc:
             raise ValueError(f"{path}: no 'metrics' — not a snapshot")
+        # versionless files predate the schema key: read as version 1
+        ver = doc.get("schema", 1)
+        if ver != 1:
+            raise ValueError(f"{path}: unknown metrics snapshot schema "
+                             f"{ver!r} (this reader knows schema 1)")
         out = {}
         for m in doc["metrics"]:
             total = sum(s["value"] for s in m["samples"]) \
@@ -143,7 +175,167 @@ def metric_summary(metrics: dict) -> None:
         print(f"{name:44s} {m['kind']:10s} {val}")
 
 
+# --------------------------------------------------------------- heatmap
+
+SHADES = " .:-=+*#%@"
+INSPECT_SCHEMA = 1
+
+
+def load_inspect_doc(path: Path) -> dict:
+    doc = json.loads(Path(path).read_text())
+    if not isinstance(doc, dict) or doc.get("kind") != "inspect":
+        raise ValueError(f"{path}: not an inspect bundle")
+    if doc.get("schema") != INSPECT_SCHEMA:
+        raise ValueError(f"{path}: unknown inspect schema "
+                         f"{doc.get('schema')!r} (this reader knows "
+                         f"schema {INSPECT_SCHEMA})")
+    if not doc.get("snapshots"):
+        raise ValueError(f"{path}: inspect bundle holds no snapshots")
+    return doc
+
+
+def _bin_means(vals, bins: int):
+    """Mean over ``bins`` equal contiguous chunks (fewer when short)."""
+    n = len(vals)
+    if n == 0:
+        return []
+    bins = min(bins, n)
+    edges = [round(i * n / bins) for i in range(bins + 1)]
+    return [sum(vals[a:b]) / max(b - a, 1)
+            for a, b in zip(edges, edges[1:])]
+
+
+def _shade(v: float, vmax: float) -> str:
+    if vmax <= 0:
+        return SHADES[0]
+    i = int(min(v / vmax, 1.0) * (len(SHADES) - 1))
+    return SHADES[i]
+
+
+def _ascii_heatmap(title: str, row_labels, grid, col_note: str) -> None:
+    vmax = max((v for row in grid for v in row), default=0.0)
+    print(f"\n{title} (cols: {col_note}; shade 0..{vmax:.2f} "
+          f"as '{SHADES}')")
+    for label, row in zip(row_labels, grid):
+        print(f"  {label:>8s} |" + "".join(_shade(v, vmax)
+                                           for v in row) + "|")
+
+
+def _write_csv(path: Path, header, rows) -> None:
+    import csv
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with path.open("w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    print(f"wrote {path}")
+
+
+def _html_cell(v: float, vmax: float) -> str:
+    x = 0 if vmax <= 0 else min(v / vmax, 1.0)
+    # white -> dark blue ramp
+    c = int(255 - x * 200)
+    return (f'<td title="{v:.3f}" style="background:rgb({c},{c},255);'
+            f'width:10px;height:10px"></td>')
+
+
+def _html_table(title: str, row_labels, grid) -> str:
+    vmax = max((v for row in grid for v in row), default=0.0)
+    rows = "\n".join(
+        "<tr><th style='text-align:right;font:10px monospace'>"
+        f"{label}</th>" + "".join(_html_cell(v, vmax) for v in row)
+        + "</tr>" for label, row in zip(row_labels, grid))
+    return (f"<h3 style='font-family:monospace'>{title}</h3>"
+            f"<table style='border-collapse:collapse'>{rows}</table>")
+
+
+def cmd_heatmap(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="obs_report.py heatmap",
+        description="Render a cache-microscope export (Inspector.save / "
+                    "--inspect-out) as occupancy + residency heatmaps")
+    ap.add_argument("inspect", type=Path,
+                    help="inspect bundle JSON (obs.Inspector.save)")
+    ap.add_argument("--bins", type=int, default=48,
+                    help="set-axis resolution (columns; default 48)")
+    ap.add_argument("--csv-prefix", type=Path, default=None, metavar="P",
+                    help="write P_occupancy.csv and P_residency.csv")
+    ap.add_argument("--html", type=Path, default=None, metavar="PATH",
+                    help="write a standalone HTML heatmap page")
+    args = ap.parse_args(argv)
+    try:
+        doc = load_inspect_doc(args.inspect)
+    except (ValueError, OSError, json.JSONDecodeError) as e:
+        return _fail(str(e))
+    snaps = doc["snapshots"]
+    labels = [f"ep{int(s.get('epoch', i))}" for i, s in enumerate(snaps)]
+    dropped = doc.get("dropped", 0)
+    print(f"{len(snaps)} snapshots"
+          + (f" ({dropped} dropped past capacity)" if dropped else ""))
+
+    html_parts = []
+    csv_rows = {"occupancy": [], "residency": []}
+    for tier, key in (("conv", "conv_set_occ"), ("ext", "ext_set_occ")):
+        grids = [_bin_means(s.get(key) or [], args.bins) for s in snaps]
+        if not any(grids):
+            continue
+        width = max(len(g) for g in grids)
+        grid = [g + [0.0] * (width - len(g)) for g in grids]
+        n_sets = max(len(s.get(key) or []) for s in snaps)
+        _ascii_heatmap(f"{tier} tier set occupancy over epochs",
+                       labels, grid,
+                       f"{n_sets} sets in {width} bins, valid ways/set")
+        for label, row in zip(labels, grid):
+            csv_rows["occupancy"].append(
+                [label, tier] + [f"{v:.4f}" for v in row])
+        html_parts.append(_html_table(
+            f"{tier} tier set occupancy (rows: epochs)", labels, grid))
+
+    owners = sorted({k for s in snaps for k in (s.get("residency") or {})})
+    if owners:
+        grid = [[float((s.get("residency") or {}).get(o, 0))
+                 for o in owners] for s in snaps]
+        _ascii_heatmap("per-tenant residency over epochs", labels, grid,
+                       "owners " + ",".join(owners) + ", resident blocks")
+        for label, row in zip(labels, grid):
+            csv_rows["residency"].append(
+                [label] + [int(v) for v in row])
+        html_parts.append(_html_table(
+            "per-tenant residency (rows: epochs, cols: "
+            + ",".join(owners) + ")", labels, grid))
+    else:
+        print("\nno residency data (no tenant owners recorded)")
+
+    if args.csv_prefix is not None:
+        p = args.csv_prefix
+        occ_w = max((len(r) - 2 for r in csv_rows["occupancy"]),
+                    default=0)
+        _write_csv(Path(f"{p}_occupancy.csv"),
+                   ["epoch", "tier"] + [f"bin{i}" for i in range(occ_w)],
+                   csv_rows["occupancy"])
+        _write_csv(Path(f"{p}_residency.csv"), ["epoch"] + owners,
+                   csv_rows["residency"])
+    if args.html is not None:
+        args.html.parent.mkdir(parents=True, exist_ok=True)
+        args.html.write_text(
+            "<!doctype html><title>cache microscope</title>"
+            + "".join(html_parts) + "\n")
+        print(f"wrote {args.html}")
+    return 0
+
+
+def _parse_epochs(spec: str):
+    lo, _, hi = spec.partition(":")
+    try:
+        return (int(lo) if lo else 0,
+                int(hi) if hi else (1 << 62))
+    except ValueError:
+        raise ValueError(f"bad --epochs {spec!r} (want a:b)")
+
+
 def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "heatmap":
+        return cmd_heatmap(sys.argv[2:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", type=Path, default=None,
                     help="Chrome/Perfetto trace-event JSON (Tracer.save)")
@@ -152,11 +344,32 @@ def main() -> int:
     ap.add_argument("--decisions", action="store_true",
                     help="print the governor decision audit trail "
                          "(implies --trace)")
+    ap.add_argument("--filter", default=None, metavar="trigger=KIND",
+                    help="decision-trail selector: only events whose "
+                         "trigger matches (e.g. trigger=greedy)")
+    ap.add_argument("--epochs", default=None, metavar="A:B",
+                    help="decision-trail selector: only epochs in "
+                         "[A, B) (either bound optional)")
     args = ap.parse_args()
     if args.trace is None and args.metrics is None:
         ap.error("nothing to report: pass --trace and/or --metrics")
     if args.decisions and args.trace is None:
         ap.error("--decisions needs --trace")
+    if (args.filter or args.epochs) and not args.decisions:
+        ap.error("--filter/--epochs select from the decision trail; "
+                 "add --decisions")
+    trigger = epochs = None
+    if args.filter is not None:
+        key, _, val = args.filter.partition("=")
+        if key != "trigger" or not val:
+            return _fail(f"bad --filter {args.filter!r} "
+                         f"(want trigger=<kind>)")
+        trigger = val
+    if args.epochs is not None:
+        try:
+            epochs = _parse_epochs(args.epochs)
+        except ValueError as e:
+            return _fail(str(e))
     if args.trace is not None:
         try:
             events = load_trace(args.trace)
@@ -164,7 +377,7 @@ def main() -> int:
             return _fail(str(e))
         timeline(events)
         if args.decisions:
-            decision_trail(events)
+            decision_trail(events, trigger=trigger, epochs=epochs)
     if args.metrics is not None:
         try:
             metrics = load_metrics(args.metrics)
