@@ -1,0 +1,224 @@
+"""Overload figure: graceful degradation under admission control.
+
+The overload layer's headline claims (docs/qos.md), measured on a
+three-tenant mix (hi: priority 2, weight 2, tight SLO; mid; lo) under
+sustained 2-10x offered load (``repro.workloads.overload`` — the same
+scenario definitions tests/test_overload.py pins goldens against):
+
+  * **high-priority attainment holds** — with admission control, the hi
+    tenant's SLO attainment stays >= 0.9 at every swept load >= 4x,
+    while the no-admission baseline (serve everything) drops below at
+    those loads: under overload the controller sheds/defers the cheap
+    tenants' work instead of blowing every tenant's SLO;
+  * **degradation is graceful** — the served fraction is monotone
+    non-increasing in offered load (small tolerance), and the absolute
+    served throughput per round never cliffs (>= 0.75x the best load's),
+    because capacity is budgeted, not collapsed;
+  * **attribution stays exact** — per-tenant integer hit/miss counters
+    sum to the global run bit-identically in every cell, admission on or
+    off (the count-masked engine rows don't care who was shed);
+  * **disabled == absent** — ``AdmissionConfig(enabled=False)`` and
+    ``admission=None`` produce bit-identical integer Stats and decision
+    sequences (the controller is provably inert when off, which is what
+    keeps fig_serving/fig_qos untouched by this layer).
+
+SLOs are *calibrated*, not hard-coded: a short fixed-split 1x run
+measures the base round time, and the tenant SLOs are set as multiples
+of it — the figure measures admission behaviour, not the cost model.
+
+Outputs ``benchmarks/out/fig_overload.csv`` (one row per load x mode)
+and ``benchmarks/out/fig_overload_rounds.csv`` (per-round curves).
+
+  PYTHONPATH=src python -m benchmarks.fig_overload --quick
+  PYTHONPATH=src python -m benchmarks.run --only overload
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.runtime.admission import AdmissionConfig, simulate_overload
+from repro.workloads.overload import LoadScenario, demand_schedule
+from repro.workloads.serving import TenantSLO, TenantSLOBudgeter
+
+from . import common as C
+
+SYSTEM = "Morpheus-ALL"
+# The fig_serving transition ladder as explicit splits: the governor's
+# walk space, without re-running the offline policy sweep per cell.
+LADDER = ((18, 50), (32, 36), (48, 20), (68, 0))
+HEADROOM = 0.85          # budget envelope as a fraction of the min SLO
+SLO_MULT = {"hi": 1.35, "mid": 2.7, "lo": 5.4}   # x calibrated base ms
+
+_LOADS = {"quick": (1.0, 2.0, 4.0, 6.0),
+          "std": (1.0, 2.0, 4.0, 6.0, 8.0),
+          "full": (1.0, 2.0, 4.0, 6.0, 8.0, 10.0)}
+_ROUNDS = {"quick": 14, "std": 24, "full": 36}
+_BASE = {"quick": 48, "std": 96, "full": 128}
+SEED = 7
+
+
+def _tenants(base_ms: float) -> List[TenantSLO]:
+    return [
+        TenantSLO("hi", SLO_MULT["hi"] * base_ms, weight=2.0,
+                  priority=2, app="cfd"),
+        TenantSLO("mid", SLO_MULT["mid"] * base_ms, weight=1.0,
+                  priority=1, app="kmeans"),
+        TenantSLO("lo", SLO_MULT["lo"] * base_ms, weight=1.0,
+                  priority=0, app="histo"),
+    ]
+
+
+def _budgeter(tenants, base: int) -> TenantSLOBudgeter:
+    return TenantSLOBudgeter(tenants, min_total=4, max_total=8 * base,
+                             initial_total=base, headroom=HEADROOM)
+
+
+def _calibrate(base: int) -> float:
+    """Mean 1x round time (ms) at the middle ladder split, no admission,
+    budgets wide open — the unit the tenant SLOs are defined in."""
+    tenants = _tenants(1.0)   # placeholder SLOs; attainment unused here
+    scn = LoadScenario("calibrate", "sustained", 1.0, rounds=6,
+                       seed=SEED)
+    res = simulate_overload(
+        tenants, demand_schedule(scn, tenants, base), system=SYSTEM,
+        admission=None, fixed_split=LADDER[1], seed=SEED,
+        budgeter=TenantSLOBudgeter(tenants, min_total=base,
+                                   max_total=8 * base,
+                                   initial_total=8 * base))
+    times = [r["round_ms"] for r in res.rounds if not r.get("idle")]
+    assert times, "calibration run served nothing"
+    return float(np.mean(times))
+
+
+def _run_cell(tenants, base: int, load: float, rounds: int, mode):
+    scn = LoadScenario(f"sustained{load:g}", "sustained", load,
+                       rounds=rounds, seed=SEED)
+    return simulate_overload(
+        tenants, demand_schedule(scn, tenants, base), system=SYSTEM,
+        admission=mode, budgeter=_budgeter(tenants, base),
+        candidates=LADDER, seed=SEED)
+
+
+def run() -> None:
+    rounds, base = _ROUNDS[C.PROFILE], _BASE[C.PROFILE]
+    base_ms = _calibrate(base)
+    tenants = _tenants(base_ms)
+    print(f"  calibrated base round: {base_ms:.4g} ms -> SLOs "
+          + " ".join(f"{t.name}:{t.slo_ms:.4g}ms" for t in tenants))
+
+    rows, round_rows = [], []
+    per_round_tp: Dict[str, float] = {}   # mode:load -> served/round
+    frac: Dict[str, Dict[float, float]] = {"adm": {}, "none": {}}
+    attain: Dict[str, Dict[float, Dict[str, float]]] = \
+        {"adm": {}, "none": {}}
+    sums_ok = []
+    for load in _LOADS[C.PROFILE]:
+        for mode_name, mode in (("adm", AdmissionConfig()),
+                                ("none", None)):
+            r = _run_cell(tenants, base, load, rounds, mode)
+            sums_ok.append(r.attribution_exact())
+            live = [x for x in r.rounds if not x.get("idle")]
+            served_round = (sum(sum(x["served"].values()) for x in live)
+                            / max(len(live), 1))
+            per_round_tp[f"{mode_name}:{load:g}"] = served_round
+            frac[mode_name][load] = r.served_fraction()
+            attain[mode_name][load] = dict(r.attainment)
+            mean_ms = float(np.mean([x["round_ms"] for x in live])) \
+                if live else 0.0
+            mean_press = float(np.mean([x["pressure"] for x in live])) \
+                if live else 0.0
+            rows.append([
+                load, mode_name, rounds,
+                sum(r.offered.values()), sum(r.served.values()),
+                sum(r.shed.values()), sum(r.backlog.values()),
+                round(r.served_fraction(), 4),
+                round(r.attainment["hi"], 4),
+                round(r.attainment["mid"], 4),
+                round(r.attainment["lo"], 4),
+                round(float(np.mean(r.fairness)) if r.fairness
+                      else 1.0, 4),
+                round(mean_ms, 4), round(mean_press, 3),
+                sum(1 for d in r.decisions if d.switched)])
+            for x in r.rounds:
+                round_rows.append([
+                    load, mode_name, x["round"],
+                    sum(x["offered"].values()),
+                    sum(x["served"].values()),
+                    round(x["round_ms"], 4), round(x["pressure"], 3),
+                    round(x["fairness"], 4), x["backlog"]])
+
+    # gate 1: hi attainment holds under admission, drops without
+    hi_loads = [l for l in _LOADS[C.PROFILE] if l >= 4.0]
+    adm_ok = all(attain["adm"][l]["hi"] >= 0.9 for l in hi_loads)
+    base_drops = all(attain["none"][l]["hi"] < 0.9 for l in hi_loads)
+    C.verdict("fig_overload.high-prio-attainment",
+              adm_ok and base_drops,
+              "hi attainment at >=4x: adm "
+              + " ".join(f"{l:g}x:{attain['adm'][l]['hi']:.2f}"
+                         for l in hi_loads)
+              + " | baseline "
+              + " ".join(f"{l:g}x:{attain['none'][l]['hi']:.2f}"
+                         for l in hi_loads))
+
+    # gate 2: graceful degradation — served fraction monotone
+    # non-increasing in load (tolerance), per-round throughput no cliff
+    loads = list(_LOADS[C.PROFILE])
+    fr = [frac["adm"][l] for l in loads]
+    mono = all(fr[i + 1] <= fr[i] + 0.05 for i in range(len(fr) - 1))
+    tps = [per_round_tp[f"adm:{l:g}"] for l in loads]
+    no_cliff = min(tps) >= 0.75 * max(tps)
+    C.verdict("fig_overload.graceful-degradation", mono and no_cliff,
+              "served fraction "
+              + " ".join(f"{l:g}x:{f:.2f}" for l, f in zip(loads, fr))
+              + f" | served/round {min(tps):.0f}..{max(tps):.0f}")
+
+    # gate 3: per-tenant Stats attribution exact in every cell
+    C.verdict("fig_overload.tenant-attribution-exact", all(sums_ok),
+              f"{sum(sums_ok)}/{len(sums_ok)} cells sum per-tenant "
+              "integer counters to the global run bit-identically")
+
+    # gate 4: disabled controller == no controller, bit-identically
+    import jax
+    mid = loads[len(loads) // 2]
+    r_off = _run_cell(tenants, base, mid, rounds,
+                      AdmissionConfig(enabled=False))
+    r_none = _run_cell(tenants, base, mid, rounds, None)
+    same_stats = all(
+        bool(np.array_equal(a, b)) for a, b in
+        zip(jax.tree_util.tree_leaves(r_off.stats),
+            jax.tree_util.tree_leaves(r_none.stats)))
+    same_dec = [d.compact() for d in r_off.decisions] \
+        == [d.compact() for d in r_none.decisions]
+    C.verdict("fig_overload.admission-off-bit-identical",
+              same_stats and same_dec and not r_off.events,
+              f"enabled=False vs absent at {mid:g}x: stats "
+              f"{'==' if same_stats else '!='}, decisions "
+              f"{'==' if same_dec else '!='}, {len(r_off.events)} events")
+
+    C.write_csv("fig_overload",
+                ["load", "mode", "rounds", "offered", "served", "shed",
+                 "backlog", "served_fraction", "attain_hi", "attain_mid",
+                 "attain_lo", "mean_fairness", "mean_round_ms",
+                 "mean_pressure", "switches"], rows)
+    C.write_csv("fig_overload_rounds",
+                ["load", "mode", "round", "offered", "served",
+                 "round_ms", "pressure", "fairness", "backlog"],
+                round_rows)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default=None,
+                    choices=("quick", "std", "full"))
+    ap.add_argument("--quick", action="store_true",
+                    help="shorthand for --profile quick")
+    args = ap.parse_args()
+    if args.quick:
+        C.set_profile("quick")
+    elif args.profile:
+        C.set_profile(args.profile)
+    with C.Timer(f"fig_overload admission x load ({C.PROFILE})"):
+        run()

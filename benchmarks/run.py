@@ -19,7 +19,8 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated module keys (fig1,fig2,fig5,fig11,"
                          "fig12,fig13,tab3,bw,overheads,roofline,online,"
-                         "serving,qos,fleet,autotune,char_online)")
+                         "serving,qos,overload,fleet,autotune,"
+                         "char_online)")
     ap.add_argument("--profile", default=None, choices=("quick", "std", "full"))
     ap.add_argument("--seeds", type=int, default=None,
                     help="trace seeds per grid cell; >1 adds mean±std "
@@ -36,8 +37,8 @@ def main() -> None:
                    fig5_latency, fig11_characterization, fig12_endtoend,
                    fig13_predictor, fig_autotune,
                    fig_characterization_online, fig_fleet, fig_online,
-                   fig_qos, fig_serving, roofline_table, tab3_mode_split,
-                   tab_overheads)
+                   fig_overload, fig_qos, fig_serving, roofline_table,
+                   tab3_mode_split, tab_overheads)
 
     modules = {
         "fig5": ("Fig. 5 latency timelines", fig5_latency.run),
@@ -56,6 +57,8 @@ def main() -> None:
         "serving": ("Multi-tenant bursty replay (workload subsystem)",
                     fig_serving.run),
         "qos": ("QoS governor: weighted tenants x churn", fig_qos.run),
+        "overload": ("Overload admission: graceful degradation x SLOs",
+                     fig_overload.run),
         "fleet": ("Fleet-scale sharded serving: replicas x advisor",
                   fig_fleet.run),
         "autotune": ("Design-space search: regret curves + optima",

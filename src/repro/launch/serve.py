@@ -25,6 +25,14 @@ converts the pool's observed ns/lookup into the next round's request
 budget so each round's modeled service time tracks the target, reported
 per tenant (docs/qos.md).
 
+``--tenant-slo name:slo_ms[:weight[:priority]],...`` is the per-tenant
+successor: one SLO per tenant family, round budgets apportioned by
+weight x learned per-tenant cost under largest-remainder
+(``TenantSLOBudgeter``); add ``--admission`` to shed/defer the
+lowest-priority tenants when the joint SLO set is unattainable
+(``repro.runtime.admission``) — deferred work ages back in, and with
+``--split auto`` the overload pressure feeds the governor's tick.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --batch 4
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --split auto
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
@@ -68,6 +76,19 @@ def main() -> None:
                          "next round's request budget so each round's "
                          "modeled service time tracks this target "
                          "(replaces --arrival's fixed round sizes)")
+    ap.add_argument("--tenant-slo", default=None, metavar="SPEC",
+                    help="per-tenant SLO budgeting: "
+                         "'name:slo_ms[:weight[:priority]],...' — one "
+                         "SLO per tenant family, round budgets "
+                         "apportioned by weight x learned per-tenant "
+                         "cost (largest remainder); supersedes --slo-ms "
+                         "and --workload (the names ARE the families)")
+    ap.add_argument("--admission", action="store_true",
+                    help="with --tenant-slo: admission control — shed/"
+                         "defer lowest-priority tenants when the joint "
+                         "SLO set is unattainable, deferred work aged "
+                         "back in (docs/qos.md), overload pressure fed "
+                         "to the --split auto governor")
     ap.add_argument("--mesh", choices=("host", "pod", "multipod"),
                     default="host")
     ap.add_argument("--shape", default="decode_32k")
@@ -123,6 +144,11 @@ def main() -> None:
     if args.no_morpheus and args.split != "static":
         ap.error("--split pins/adapts the extended tier; it conflicts "
                  "with --no-morpheus")
+    if args.tenant_slo and args.slo_ms:
+        ap.error("--tenant-slo supersedes --slo-ms; pick one")
+    if args.admission and not args.tenant_slo:
+        ap.error("--admission needs --tenant-slo (per-tenant budgets "
+                 "are what it apportions under overload)")
 
     cfg = configs.get(args.arch).reduced()
     model = build_model(cfg)
@@ -144,9 +170,36 @@ def main() -> None:
         print(f"governor: candidates {governor.gov.candidates}, starting "
               f"at {eng.pool.cfg.num_cache_chips} cache chips")
     prompt = [(5 * j + 11) % 89 + 1 for j in range(args.prompt_len)]
-    rounds = args.rounds or (6 if governor or args.slo_ms else 2)
-    budgeter = None
-    if args.slo_ms:
+    rounds = args.rounds or (6 if governor or args.slo_ms
+                             or args.tenant_slo else 2)
+    budgeter = tbudgeter = ctrl = None
+    if args.tenant_slo:
+        from repro.runtime.admission import AdmissionController
+        from repro.workloads.serving import (TenantSLO, TenantSLOBudgeter,
+                                             proportional_interleave,
+                                             tenant_prompts)
+        tenants = []
+        for spec in args.tenant_slo.split(","):
+            parts = [p.strip() for p in spec.strip().split(":")]
+            if not 2 <= len(parts) <= 4:
+                ap.error(f"bad --tenant-slo entry {spec!r} (want "
+                         "name:slo_ms[:weight[:priority]])")
+            tenants.append(TenantSLO(
+                parts[0], float(parts[1]),
+                weight=float(parts[2]) if len(parts) > 2 else 1.0,
+                priority=int(parts[3]) if len(parts) > 3 else 0))
+        tbudgeter = TenantSLOBudgeter(tenants, max_total=4 * args.batch,
+                                      initial_total=args.batch)
+        fams = dict(tenant_prompts(",".join(t.name for t in tenants),
+                                   args.prompt_len))
+        if args.admission:
+            ctrl = AdmissionController(tenants)
+        sched = None
+        print("tenant-slo budgeter: " + " ".join(
+            f"{t.name}:{t.slo_ms:g}ms(w{t.weight:g},p{t.priority})"
+            for t in tenants)
+            + (" | admission control on" if ctrl is not None else ""))
+    elif args.slo_ms:
         from repro.workloads.serving import SLOBudgeter, slo_batches
         budgeter = SLOBudgeter(args.slo_ms, max_batch=4 * args.batch,
                                initial_batch=args.batch)
@@ -166,15 +219,33 @@ def main() -> None:
     pool_last = eng.pool.stats
     tenant_slo = {}          # tenant -> [rounds met, rounds seen]
     for rnd in range(rounds):
-        # SLO mode re-sizes each round from the latest telemetry; the
+        # SLO modes re-size each round from the latest telemetry; the
         # pre-built schedule is only consulted in the fixed modes
-        batch = next(batches) if budgeter is not None else sched[rnd]
+        pressure = 0.0
+        if tbudgeter is not None:
+            budgets = tbudgeter.next_budgets()
+            if ctrl is not None:
+                # fresh offered demand: --batch requests per tenant; the
+                # controller decides who runs within the round budgets
+                plan = ctrl.plan({t.name: args.batch for t in tenants},
+                                 budgets)
+                serve = plan.served()
+                pressure = plan.pressure
+            else:
+                plan, serve = None, budgets
+            counts = [serve[t.name] for t in tenants]
+            batch = [(tenants[k].name, fams[tenants[k].name])
+                     for k in proportional_interleave(counts)]
+        elif budgeter is not None:
+            batch = next(batches)
+        else:
+            batch = sched[rnd]
         round_ = "cold" if rnd == 0 else f"warm{rnd}"
         if not batch:
             print(f"[{round_}] idle window (no arrivals)")
             if governor is not None:
                 from repro.runtime import describe_tick
-                print("  " + describe_tick(governor.tick()))
+                print("  " + describe_tick(governor.tick(pressure)))
             continue
         reqs = [Request(rid=rid + i, prompt=toks,
                         max_new_tokens=args.max_new, tenant=name)
@@ -214,9 +285,28 @@ def main() -> None:
                     obs.set_gauge("tenant_slo_attainment",
                                   t[0] / t[1], tenant=tenant)
                     obs.count("tenant_requests", n, tenant=tenant)
+        if tbudgeter is not None:
+            d = eng.pool.stats - pool_last
+            pool_last = eng.pool.stats
+            round_ms = (d.time_ns / 1e6) if d.lookups else 0.0
+            tbudgeter.observe(mix, round_ms)
+            line = (f"  tenant-slo: {round_ms:.3f} ms round | budgets "
+                    + " ".join(f"{k}:{v}" for k, v in budgets.items())
+                    + " | attain "
+                    + " ".join(f"{t.name}:{tbudgeter.attainment(t.name):.2f}"
+                               for t in tenants))
+            if ctrl is not None:
+                line += (f" | pressure {pressure:.2f}"
+                         + (f" backlog {ctrl.backlog()}"
+                            if ctrl.backlog() else ""))
+                dropped = [e.compact() for e in plan.events
+                           if e.kind in ("defer", "shed", "resume")]
+                if dropped:
+                    line += " | " + " ".join(dropped)
+            print(line)
         if governor is not None:
             from repro.runtime import describe_tick
-            print("  " + describe_tick(governor.tick()))
+            print("  " + describe_tick(governor.tick(pressure)))
         else:
             # no governor tick to snapshot through: the microscope
             # captures the pool content at every round boundary itself
@@ -231,6 +321,14 @@ def main() -> None:
     if budgeter is not None and tenant_slo:
         print("slo attainment: " + " ".join(
             f"{k}:{met}/{n}" for k, (met, n) in tenant_slo.items()))
+    if tbudgeter is not None:
+        print("tenant-slo attainment: " + " ".join(
+            f"{t.name}:{tbudgeter.attainment(t.name):.2f}"
+            for t in tenants))
+        if ctrl is not None:
+            print("admission: " + " ".join(
+                f"{k}:{v}" for k, v in ctrl.counters.items())
+                + f" | backlog {ctrl.backlog()}")
     if args.record_trace and eng.pool.recorder is not None \
             and len(eng.pool.recorder):
         p = eng.pool.recorder.save(args.record_trace)

@@ -30,10 +30,11 @@ from typing import Optional
 
 from . import inspect as _inspect
 from . import metrics as _metrics
-from .decision import TRIGGERS, DecisionEvent  # noqa: F401
+from .decision import (ADMISSION_KINDS, TRIGGERS,  # noqa: F401
+                       AdmissionEvent, DecisionEvent)
 from .inspect import Inspector, Snapshot  # noqa: F401
-from .metrics import (Registry, bench_counters,  # noqa: F401
-                      count, observe, set_gauge)
+from .metrics import (Registry, admission_counters,  # noqa: F401
+                      bench_counters, count, observe, set_gauge)
 from .trace import NULL_SPAN, Span, Tracer  # noqa: F401
 
 _TRACER: Optional[Tracer] = None

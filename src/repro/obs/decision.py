@@ -92,3 +92,55 @@ class DecisionEvent:
             return self.trigger
         return (f"{self.trigger}:{_split_str(self.from_split)}"
                 f"->{_split_str(self.to_split)}")
+
+
+ADMISSION_KINDS = ("admit", "defer", "shed", "resume")
+
+
+@dataclass
+class AdmissionEvent:
+    """One admission-control outcome for one tenant in one round
+    (docs/observability.md) — the QoS analogue of ``DecisionEvent``,
+    with the same provenance contract: the controller appends one event
+    per nonzero outcome unconditionally, pure host bookkeeping touching
+    no RNG, so the event stream is bit-identical with obs on or off.
+
+    Kind taxonomy (``ADMISSION_KINDS``):
+
+      admit    fresh requests served in the round they arrived
+      defer    requests the round could not afford, re-queued with aging
+      shed     requests dropped — the tenant's deferred backlog was at
+               ``defer_cap``, so the overflow (newest work) is refused
+      resume   previously-deferred requests finally served (``age`` =
+               rounds the oldest of them waited)
+    """
+
+    round: int
+    kind: str
+    tenant: str
+    requests: int
+    age: int = 0               # resume: rounds the oldest served batch
+    #                            waited; defer/shed/admit: 0
+    priority: int = 0          # the tenant's admission priority
+    budget: int = 0            # the tenant's apportioned round budget
+    pressure: float = 0.0      # round demand / round capacity
+    replica: str = ""          # filled by the driver (fleet runs)
+
+    def __post_init__(self):
+        assert self.kind in ADMISSION_KINDS, \
+            f"unknown admission kind {self.kind!r} (known: {ADMISSION_KINDS})"
+        assert self.requests >= 0 and self.age >= 0
+
+    def to_dict(self) -> Dict:
+        return {"round": int(self.round), "kind": self.kind,
+                "tenant": self.tenant, "requests": int(self.requests),
+                "age": int(self.age), "priority": int(self.priority),
+                "budget": int(self.budget),
+                "pressure": float(self.pressure),
+                "replica": self.replica}
+
+    def compact(self) -> str:
+        """Short rendering for logs/goldens, e.g. ``defer:lo:3`` or
+        ``resume:lo:3+4`` (+4 = rounds waited)."""
+        s = f"{self.kind}:{self.tenant}:{int(self.requests)}"
+        return s + (f"+{int(self.age)}" if self.age else "")

@@ -297,3 +297,22 @@ def bench_counters(reg: Optional[Registry] = None) -> Dict[str, float]:
         v = m.total() if m is not None else 0
         out[key] = int(v) if float(v).is_integer() else float(v)
     return out
+
+
+def admission_counters(reg: Optional[Registry] = None) -> Dict[str, int]:
+    """Flat {kind: requests} over the admission-control taxonomy
+    (``repro.obs.decision.ADMISSION_KINDS``), read from the
+    ``admission_requests`` counter's per-kind label sets; 0 for kinds the
+    run never emitted.  Deliberately NOT part of ``BENCH_COUNTER_KEYS``:
+    the committed ``BENCH_*.json`` baselines are schema-validated against
+    that exact key set, so the QoS view is additive on the side."""
+    reg = reg if reg is not None else _ACTIVE
+    kinds = ("admit", "defer", "shed", "resume")
+    out = {k: 0 for k in kinds}
+    m = reg.get("admission_requests") if reg is not None else None
+    if m is not None:
+        for labels, v in m.values.items():
+            kind = dict(labels).get("kind")
+            if kind in out:
+                out[kind] += int(v)
+    return out

@@ -17,7 +17,14 @@ be in cache mode for the work arriving *right now*?
   * ``fleet``     — N replicas per dispatch: same-config replicas batch
     into one (optionally shard_map-sharded) engine step, with a shared
     split-advisor for cross-replica warm starts (docs/fleet.md).
+  * ``admission`` — overload-aware admission control: when the
+    per-tenant SLO budgeter says the joint SLO set is unattainable,
+    shed/defer the lowest-priority tenants with aging (no starvation),
+    and feed the overload pressure back into the governor (docs/qos.md).
 """
+from .admission import (AdmissionConfig,  # noqa: F401
+                        AdmissionController, OverloadResult, RoundPlan,
+                        simulate_overload)
 from .fleet import (FleetResult, ReplicaSpec,  # noqa: F401
                     SplitAdvisor, build_replicas, convergence_epoch,
                     evaluate_governors, run_serial, simulate_fleet)
@@ -26,7 +33,7 @@ from .governor import (SERVING_GCFG, Governor,  # noqa: F401
                        OnlineResult, ServingGovernor,
                        candidates_for, demo_pool, describe_tick,
                        gcfg_from_dict, qos_reward, simulate_online,
-                       tenant_epoch_ipcs)
+                       tenant_epoch_costs, tenant_epoch_ipcs)
 from .stream import EpochStream, HandoffReport, handoff  # noqa: F401
 from .telemetry import (EpochRecord, TelemetryLog,  # noqa: F401
                         merge_logs)

@@ -78,6 +78,12 @@ class ReplicaSpec:
     warm_handoff: bool = True
     burn_in: Optional[int] = None
     name: str = ""
+    # optional per-tenant SLO budgeter (workloads.serving
+    # TenantSLOBudgeter) — the replica feeds it per-epoch tenant costs
+    # and turns envelope overruns into governor overload pressure
+    # (docs/qos.md).  One instance per spec: the budgeter is mutable
+    # learned state, so specs must not share it.
+    slo: Optional[object] = None
 
     def build(self) -> OnlineReplica:
         return OnlineReplica(
@@ -86,7 +92,7 @@ class ReplicaSpec:
             target_epoch=self.target_epoch, seed=self.seed,
             gcfg=self.gcfg, candidates=self.candidates,
             fixed_split=self.fixed_split, warm_handoff=self.warm_handoff,
-            burn_in=self.burn_in, name=self.name)
+            burn_in=self.burn_in, name=self.name, slo=self.slo)
 
 
 class SplitAdvisor:

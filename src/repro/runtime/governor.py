@@ -196,6 +196,7 @@ class GovernorState(NamedTuple):
     phase_jumps: int
     last_switched: bool
     rng_state: Dict                  # numpy bit-generator state
+    pressure: float = 0.0            # last observed overload pressure
 
 
 class Governor:
@@ -225,6 +226,7 @@ class Governor:
         self.warm_left = cfg.warm_epochs
         self.measured = False    # has this visit recorded a real epoch yet?
         self.hint = 0
+        self.pressure = 0.0      # overload pressure (admission coupling)
         self.hint_strikes: Dict[int, int] = {}   # direction -> refutations
         self._probe: Optional[Tuple[int, float]] = None  # (dir, origin est)
         self.phase_table: Dict[int, int] = {}    # phase key -> best index
@@ -355,7 +357,8 @@ class Governor:
             switches=self.switches, phase_shifts=self.phase_shifts,
             phase_jumps=self.phase_jumps,
             last_switched=self.last_switched,
-            rng_state=self.rng.bit_generator.state)
+            rng_state=self.rng.bit_generator.state,
+            pressure=self.pressure)
 
     def restore_state(self, s: GovernorState) -> None:
         """Inverse of ``export_state``.  The governor must have been
@@ -387,10 +390,12 @@ class Governor:
         self.phase_jumps = s.phase_jumps
         self.last_switched = s.last_switched
         self.rng.bit_generator.state = s.rng_state
+        self.pressure = getattr(s, "pressure", 0.0)
 
     # ------------------------------------------------------------ observe
     def observe(self, reward: float, hint: int = 0,
-                signature: Optional[float] = None) -> None:
+                signature: Optional[float] = None,
+                pressure: float = 0.0) -> None:
         """Record the reward of one epoch run at ``current``.
 
         ``hint`` is the observed bottleneck direction (+1: the epoch was
@@ -403,10 +408,20 @@ class Governor:
         ``signature`` is an observable phase fingerprint in [0, 1]
         (drivers pass the epoch hit rate): a jump vs. the last signature
         seen *at the same split* flags a phase shift even when the reward
-        itself is saturated and doesn't move."""
+        itself is saturated and doesn't move.
+
+        ``pressure`` is the admission layer's overload signal — offered
+        demand over round capacity (docs/qos.md).  Pressure > 1 means
+        requests are being deferred or shed *right now*, so the hint's
+        staleness gate is waived in ``decide()``: a hinted probe that
+        would normally wait out ``hint_stale_after`` epochs fires
+        immediately, and split adaptation stops fighting admission for
+        whole deferral cycles.  The default 0.0 leaves the decision path
+        byte-identical to the pre-admission governor."""
         self.epoch += 1
         self.last_visit[self._i] = self.epoch
         self.hint = int(np.sign(hint))
+        self.pressure = float(pressure)
         if self.warm_left > 0:       # post-transition epoch: state re-warming
             self.warm_left -= 1
             return
@@ -494,7 +509,8 @@ class Governor:
             self.hint_strikes.get(self.hint, 0) < self.cfg.hint_max_strikes \
             and (hinted not in self.est    # nothing known (e.g. post-reset)
                  or self.epoch - self.last_visit.get(hinted, -10**9)
-                 > self.cfg.hint_stale_after)
+                 > self.cfg.hint_stale_after
+                 or self.pressure > 1.0)   # overload: probe NOW, not later
         eps = max(self.eps, self.cfg.epsilon_hint) if hint_ok else self.eps
         if self.rng.random() < eps:
             # With a bottleneck hint, only ever explore in the hinted
@@ -577,9 +593,15 @@ class ServingGovernor:
         self.history: List[Dict] = []
         self._dec_seen = 0      # provenance events already attributed
 
-    def tick(self) -> Dict:
+    def tick(self, pressure: float = 0.0) -> Dict:
         """Consume the interval since the last tick; maybe reconfigure.
-        Returns a record of the observation and the decision."""
+        Returns a record of the observation and the decision.
+
+        ``pressure`` forwards the admission controller's overload signal
+        (offered/capacity) into ``Governor.observe`` — under sustained
+        overload (> 1) the chip governor probes its bottleneck hint
+        immediately instead of waiting out the staleness gate.  The
+        default 0.0 keeps the pre-admission path byte-identical."""
         chips = self.pool.cfg.num_cache_chips
         delta = self.pool.stats - self._last
         self._last = self.pool.stats
@@ -620,7 +642,8 @@ class ServingGovernor:
             hint = -1
         else:
             hint = 0
-        self.gov.observe(self.reward_ema, hint, signature=hit / lookups)
+        self.gov.observe(self.reward_ema, hint, signature=hit / lookups,
+                         pressure=pressure)
         ema_observed = self.reward_ema
         new_chips = self.gov.decide()
         flushed = 0
@@ -755,16 +778,32 @@ def tenant_epoch_ipcs(wl, system: str, nc: int, nk: int, lo: int, hi: int,
     actually steers the governor (docs/qos.md).  A tenant with no
     requests in the epoch (idle or departed) scores 0.
     """
+    return tenant_epoch_costs(wl, system, nc, nk, lo, hi, delta_rows,
+                              seed, counts=counts)[0]
+
+
+def tenant_epoch_costs(wl, system: str, nc: int, nk: int, lo: int, hi: int,
+                       delta_rows: Stats, seed: int = 0,
+                       counts: Optional[np.ndarray] = None
+                       ) -> Tuple[List[float], List[float]]:
+    """Per-tenant modeled (IPC terms, exec times in seconds) of one
+    epoch — ``tenant_epoch_ipcs`` plus the time-side view of the same
+    finalize: tenant k's exec time over its own masked Stats row is the
+    modeled cost of serving its share of the epoch, which is what the
+    per-tenant SLO budgeter's ns/request EMA learns from
+    (``workloads/serving.py::TenantSLOBudgeter``, docs/qos.md).
+    Zero-request tenants score (0 IPC, 0 s)."""
     if counts is None:
         counts = wl.tenant_counts(lo, hi)
-    out = []
+    ipcs, times = [], []
     for k, t in enumerate(wl.tenants):
         n_k = int(counts[k])
         row = jax.tree.map(lambda x, k=k: x[k], delta_rows)
         rr = cs._finalize(cs.RunPoint(t.app, system, nc, nk, n_k, seed),
                           nc, nk, n_k, row)
-        out.append(rr.ipc)
-    return out
+        ipcs.append(rr.ipc)
+        times.append(rr.exec_time_s if n_k > 0 else 0.0)
+    return ipcs, times
 
 
 def qos_reward(gcfg: GovernorConfig, ipcs: Sequence[float],
@@ -859,7 +898,7 @@ class OnlineReplica:
                  burn_in: Optional[int] = None,
                  log: Optional[TelemetryLog] = None,
                  initial_split: Optional[Split] = None,
-                 name: str = ""):
+                 name: str = "", slo=None):
         workload = phases if hasattr(phases, "tenants") else None
         spec = cs.SYSTEMS[system]
         ws_scale = 1.0 / cs.SIM_SCALE
@@ -939,6 +978,19 @@ class OnlineReplica:
         self.seed = seed
         self.burn_in = burn_in
         self.gov = gov
+        # optional per-tenant SLO budgeter (workloads/serving.py
+        # TenantSLOBudgeter, one instance per replica): when attached to
+        # a workload replay, each epoch feeds it the per-tenant modeled
+        # costs and the epoch's envelope overrun becomes the governor's
+        # overload pressure (docs/qos.md).  None (default) leaves the
+        # epilogue byte-identical to the pre-admission replica.
+        if slo is not None:
+            assert workload is not None, \
+                "per-tenant SLO budgeter needs a composed Workload"
+            assert set(slo.names) == {t.name for t in wl.tenants}, \
+                (f"budgeter tenants {slo.names} do not match workload "
+                 f"tenants {[t.name for t in wl.tenants]}")
+        self.slo = slo
         self.name = name or f"{system}:{'+'.join(phase_names)}#{seed}"
         self.log = log if log is not None else TelemetryLog()
         self.records: List[EpochRecord] = []
@@ -1044,9 +1096,9 @@ class OnlineReplica:
                                           seed),
                               nc, nk, n_req, delta, insts=insts,
                               knee=wl.contention_knee(lo, hi))
-            tenant_ipc = tenant_epoch_ipcs(wl, system, nc, nk, lo, hi,
-                                           delta_rows, seed,
-                                           counts=t_counts)
+            tenant_ipc, tenant_t = tenant_epoch_costs(
+                wl, system, nc, nk, lo, hi, delta_rows, seed,
+                counts=t_counts)
         else:
             app = self.phases[int(np.searchsorted(self.bounds, lo,
                                                   side="right"))]
@@ -1119,7 +1171,23 @@ class OnlineReplica:
             # scoped to the new mix; a remembered mix is jumped to on
             # the next decide()
             gov.set_context(wl.active_signature(lo, hi))
-        gov.observe(reward, hint, signature=rr.llc_hit_rate)
+        pressure = 0.0
+        if self.slo is not None:
+            # per-tenant SLO closed loop: the budgeter learns each
+            # tenant's modeled cost from its masked row, and the epoch's
+            # overrun of the joint SLO envelope (the tightest active
+            # SLO) becomes the governor's overload pressure
+            round_ms = rr.exec_time_s * 1e3
+            names = [t.name for t in wl.tenants]
+            self.slo.observe(
+                {n: int(c) for n, c in zip(names, t_counts)}, round_ms,
+                {n: tenant_t[k] * 1e9 / int(t_counts[k])
+                 for k, n in enumerate(names) if int(t_counts[k]) > 0})
+            active = [n for n, c in zip(names, t_counts) if int(c) > 0]
+            if active and round_ms > 0:
+                pressure = round_ms / self.slo.round_ms(active)
+        gov.observe(reward, hint, signature=rr.llc_hit_rate,
+                    pressure=pressure)
         eps = gov.eps
         new_split = gov.decide() if self.fixed_split is None \
             else gov.current

@@ -20,6 +20,7 @@ preserving the predictor's no-false-negative invariant.
 """
 from __future__ import annotations
 
+import json
 from collections import deque
 from dataclasses import dataclass
 from pathlib import Path
@@ -52,6 +53,13 @@ class StreamSnapshot(NamedTuple):
     pos: int
     epoch: int
     probe_base: Tuple[int, int]     # (ext_false_pos, ext_pred_miss)
+    # serving-layer carry (``attach_serving``): one JSON-clean state dict
+    # per attached component — budgeter EMAs/attainment, admission queues
+    # and ages.  Without it a restored QoS run forgets its learned
+    # per-tenant costs and silently resets deferred work's aging clock
+    # (the starvation-freedom guarantee).  None for plain sim streams and
+    # for snapshots taken before the serving layer existed.
+    serving: Optional[Tuple[dict, ...]] = None
 
 
 class EpochStream:
@@ -137,6 +145,21 @@ class EpochStream:
         self.ring = int(ring)
         self._ring: Deque[Tuple[int, int, PackedTraces]] = deque()
         self._packed_to = 0
+        # serving-layer components whose state rides along in snapshots
+        self._serving: List = []
+
+    def attach_serving(self, *components) -> None:
+        """Register serving-layer components (``TenantSLOBudgeter``,
+        ``AdmissionController``, anything with ``export_state()`` /
+        ``restore_state(d)``) so ``snapshot()``/``restore()`` and
+        ``save_state``/``load_state`` carry their state alongside the
+        engine carry.  Order matters: restore zips states back to the
+        components in attachment order."""
+        for c in components:
+            assert callable(getattr(c, "export_state", None)) and \
+                callable(getattr(c, "restore_state", None)), \
+                f"{type(c).__name__} lacks export_state/restore_state"
+            self._serving.append(c)
 
     # ------------------------------------------------------------- basics
     @property
@@ -293,7 +316,10 @@ class EpochStream:
         plus the stream position, epoch counter and probe baselines."""
         return StreamSnapshot(state=jax.tree.map(np.asarray, self.state),
                               pos=self._host_pos, epoch=self.epoch,
-                              probe_base=self._probe_base)
+                              probe_base=self._probe_base,
+                              serving=tuple(c.export_state()
+                                            for c in self._serving)
+                              if self._serving else None)
 
     def restore(self, state: StreamSnapshot | EngineState) -> None:
         """Resume from a previously captured snapshot.
@@ -307,6 +333,16 @@ class EpochStream:
             self._probe_base = (int(state.probe_base[0]),
                                 int(state.probe_base[1]))
             self._host_pos = int(state.pos)
+            serving = getattr(state, "serving", None)
+            if serving is not None:
+                # zip back in attachment order; a mismatch means the
+                # stream was rebuilt with different serving components
+                # than the snapshot was taken with
+                assert len(serving) == len(self._serving), \
+                    (f"snapshot carries {len(serving)} serving states "
+                     f"but {len(self._serving)} components are attached")
+                for c, d in zip(self._serving, serving):
+                    c.restore_state(d)
             state = state.state
             self._base = int(np.asarray(state.pos)[0]) - self._host_pos
             self.state = jax.tree.map(jnp.asarray, state)
@@ -323,24 +359,32 @@ class EpochStream:
 
 
 _STREAM_META_KEY = "stream_meta"
+_SERVING_META_KEY = "serving_meta"
 
 
 def save_state(path: str | Path,
                state: StreamSnapshot | EngineState) -> Path:
     """Serialize an ``EngineState`` or ``StreamSnapshot`` to ``.npz``
-    (engine leaves in pytree order; snapshot metadata under a reserved
-    side key, so legacy state files and new snapshot files coexist)."""
+    (engine leaves in pytree order; snapshot metadata — and, when
+    present, the serving-layer state dicts as JSON bytes — under
+    reserved side keys, so legacy state files and new snapshot files
+    coexist)."""
     path = Path(path)
-    meta = None
+    meta = serving = None
     if isinstance(state, StreamSnapshot):
         meta = np.asarray([state.pos, state.epoch,
                            state.probe_base[0], state.probe_base[1]],
                           np.int64)
+        if state.serving is not None:
+            serving = np.frombuffer(
+                json.dumps(list(state.serving)).encode(), np.uint8)
         state = state.state
     arrs = {f"leaf{i}": np.asarray(x)
             for i, x in enumerate(jax.tree_util.tree_leaves(state))}
     if meta is not None:
         arrs[_STREAM_META_KEY] = meta
+    if serving is not None:
+        arrs[_SERVING_META_KEY] = serving
     np.savez(path, **arrs)
     return path
 
@@ -353,14 +397,19 @@ def load_state(path: str | Path, cfg: MorpheusConfig,
     files load as a bare ``EngineState``."""
     with np.load(Path(path)) as z:
         meta = z[_STREAM_META_KEY] if _STREAM_META_KEY in z.files else None
-        n = len(z.files) - (1 if meta is not None else 0)
+        serving = None
+        if _SERVING_META_KEY in z.files:
+            serving = tuple(json.loads(z[_SERVING_META_KEY].tobytes()))
+        n = len(z.files) - (1 if meta is not None else 0) \
+            - (1 if serving is not None else 0)
         leaves = [z[f"leaf{i}"] for i in range(n)]
     treedef = jax.tree_util.tree_structure(engine.init_state(cfg, batch))
     state = jax.tree_util.tree_unflatten(treedef, leaves)
     if meta is None:
         return state
     return StreamSnapshot(state=state, pos=int(meta[0]), epoch=int(meta[1]),
-                          probe_base=(int(meta[2]), int(meta[3])))
+                          probe_base=(int(meta[2]), int(meta[3])),
+                          serving=serving)
 
 
 # ------------------------------------------------------- mode transitions

@@ -52,10 +52,18 @@ _EXPORTS = {
     "round_requests": "serving", "SLOBudgeter": "serving",
     "slo_batches": "serving", "batch_mix": "serving",
     "bursty_workload": "serving",
+    "TenantSLO": "serving", "TenantSLOBudgeter": "serving",
+    "tenant_slo_batches": "serving",
+    "apportion_largest_remainder": "serving",
+    "proportional_interleave": "serving",
+    # overload scenarios
+    "LoadScenario": "overload", "SHAPES": "overload",
+    "demand_schedule": "overload", "offered_totals": "overload",
+    "SCENARIOS": "overload",
 }
 
-_SUBMODULES = ("arrivals", "corpus", "serving", "sources", "synthetic",
-               "tenancy")
+_SUBMODULES = ("arrivals", "corpus", "overload", "serving", "sources",
+               "synthetic", "tenancy")
 
 __all__ = sorted(_EXPORTS) + list(_SUBMODULES)
 

@@ -14,6 +14,11 @@ repeated demo batch.
 round size, a closed loop converts the pool's observed ns/lookup
 telemetry into the next round's request budget, so each round's modeled
 service time tracks a latency target (docs/qos.md).
+``TenantSLOBudgeter`` generalizes it to one SLO per tenant
+(``--tenant-slo``): the round envelope is the tightest active SLO and
+the budget is apportioned across tenants by weight over learned
+per-tenant cost (largest-remainder, conserving the round total) — the
+input side of the admission controller (``runtime/admission.py``).
 
 The helpers return plain data (counts, token lists); the launchers build
 ``serving.Request`` objects themselves — workloads stays below serving
@@ -22,7 +27,7 @@ in the layering.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -136,6 +141,227 @@ class SLOBudgeter:
         fit = int(self.slo_ms * 1e6 // self.ns_per_request)
         return int(np.clip(fit, self.min_batch, self.max_batch))
 
+    # learned state, for snapshot/restore (docs/qos.md): a resumed run
+    # must not silently reset the cost EMA back to the cold-start budget
+    def export_state(self) -> Dict:
+        return {"ns_per_request": self.ns_per_request,
+                "rounds_observed": self.rounds_observed,
+                "rounds_met": self.rounds_met}
+
+    def restore_state(self, d: Mapping) -> None:
+        self.ns_per_request = d["ns_per_request"]
+        self.rounds_observed = int(d["rounds_observed"])
+        self.rounds_met = int(d["rounds_met"])
+
+
+def apportion_largest_remainder(quotas: Sequence[float],
+                                total: int) -> List[int]:
+    """Non-negative integer shares of ``total`` proportional to
+    ``quotas``, summing to **exactly** ``total`` (largest-remainder
+    method, the same rule the multi-tenant composer uses for request
+    volumes).  Floors first, then hands the leftover units to the
+    largest fractional remainders; ties break by index, so the result is
+    a pure function of the inputs.  All-zero quotas fall back to equal
+    shares.  Conservation is property-tested (tests/test_properties.py).
+    """
+    q = np.asarray(list(quotas), np.float64)
+    n = len(q)
+    assert n > 0 and int(total) >= 0 and np.all(q >= 0) \
+        and np.all(np.isfinite(q)), f"bad apportion inputs {quotas}/{total}"
+    total = int(total)
+    if q.sum() <= 0:
+        q = np.ones(n)
+    ideal = q / q.sum() * total
+    out = np.floor(ideal).astype(np.int64)
+    order = sorted(range(n), key=lambda i: (-(ideal[i] - out[i]), i))
+    for i in order[:total - int(out.sum())]:
+        out[i] += 1
+    return [int(x) for x in out]
+
+
+def proportional_interleave(counts: Sequence[int]) -> List[int]:
+    """Deterministic proportional interleave: a sequence of indices in
+    which index ``k`` appears ``counts[k]`` times, spread as evenly as
+    the counts allow (tenant k's j-th slot keys at ``(j+0.5)/n_k``).
+    Shared by the per-tenant round builder below and the overload
+    driver's trace composer — no tenant's requests clump at the end of a
+    round, so a round cut anywhere stays representative of the mix."""
+    keyed = []
+    for k, n in enumerate(counts):
+        n = int(n)
+        assert n >= 0
+        keyed.extend(((j + 0.5) / n, k) for j in range(n))
+    keyed.sort()
+    return [k for _, k in keyed]
+
+
+@dataclass(frozen=True)
+class TenantSLO:
+    """One tenant's service contract: a latency target for the rounds it
+    participates in, a weight (its share of the round's time envelope)
+    and a priority (admission order under overload — higher first).
+    ``app`` optionally names the tenant's simulator trace profile for
+    the overload driver (``runtime/admission.py``); the serving
+    launchers ignore it."""
+    name: str
+    slo_ms: float
+    weight: float = 1.0
+    priority: int = 0
+    app: str = ""
+
+    def __post_init__(self):
+        assert self.name and self.slo_ms > 0 and self.weight >= 0
+
+
+class TenantSLOBudgeter:
+    """Per-tenant generalization of ``SLOBudgeter`` (docs/qos.md).
+
+    One ``slo_ms`` target per tenant.  The round's time envelope is the
+    *tightest* SLO among the tenants active in the round (every tenant
+    in a round shares its service time, so the round must fit the
+    strictest contract), scaled by ``headroom``.  Per tenant the modeled
+    ns/request is learned as an idle-frozen EMA — same blend, same
+    freeze rule as the global budgeter — and the next round's budget is
+    apportioned across tenants so each gets a **time slice proportional
+    to its weight**: tenant k's request quota is ``w_k / c_k`` (weight
+    over learned cost), integerized by ``apportion_largest_remainder``
+    so the per-tenant budgets sum to the round total exactly
+    (tests/test_properties.py pins conservation).
+
+    Attainment is tracked per tenant: a round met tenant k's SLO iff the
+    round's service time fit ``slo_ms[k]`` — deferred work waits outside
+    the round and is scored only in the round that serves it.
+    """
+
+    def __init__(self, tenants: Sequence[TenantSLO], *,
+                 min_total: int = 1, max_total: int = 64,
+                 alpha: float = 0.5, initial_total: Optional[int] = None,
+                 headroom: float = 1.0):
+        tenants = list(tenants)
+        names = [t.name for t in tenants]
+        assert tenants and len(set(names)) == len(names), \
+            f"tenant names must be unique and non-empty: {names}"
+        assert 1 <= min_total <= max_total and 0 < alpha <= 1 \
+            and 0 < headroom <= 1
+        self.tenants = tenants
+        self.names = names
+        self.min_total = int(min_total)
+        self.max_total = int(max_total)
+        self.alpha = float(alpha)
+        self.initial_total = initial_total
+        self.headroom = float(headroom)
+        self._slo = {t.name: float(t.slo_ms) for t in tenants}
+        self._w = {t.name: float(t.weight) for t in tenants}
+        self.ns_per_request: Dict[str, Optional[float]] = \
+            {n: None for n in names}
+        self.rounds_observed: Dict[str, int] = {n: 0 for n in names}
+        self.rounds_met: Dict[str, int] = {n: 0 for n in names}
+
+    def observe(self, requests: Mapping[str, int], round_ms: float,
+                ns_per_request: Optional[Mapping[str, float]] = None
+                ) -> None:
+        """Feed one round's telemetry.
+
+        ``requests``: served requests per tenant this round.  ``ns_per_
+        request``: per-tenant measured cost when the driver can separate
+        it (the overload driver's masked per-tenant Stats rows can);
+        omitted, every participating tenant samples the round-mean cost
+        (the serving pool's telemetry is not separable).  Idle rounds
+        (no requests) freeze every EMA, as in the global budgeter."""
+        total = sum(int(requests.get(n, 0)) for n in self.names)
+        if total <= 0 or round_ms <= 0:
+            return
+        for name in self.names:
+            r = int(requests.get(name, 0))
+            if r <= 0:
+                continue
+            if ns_per_request is not None and name in ns_per_request:
+                per = float(ns_per_request[name])
+            else:
+                per = round_ms * 1e6 / total
+            old = self.ns_per_request[name]
+            self.ns_per_request[name] = per if old is None else \
+                (1.0 - self.alpha) * old + self.alpha * per
+            self.rounds_observed[name] += 1
+            if round_ms <= self._slo[name]:
+                self.rounds_met[name] += 1
+        if obs.metrics_on():
+            obs.set_gauge("slo_round_ms", round_ms)
+            for name in self.names:
+                if int(requests.get(name, 0)) > 0:
+                    obs.set_gauge("tenant_slo_attainment",
+                                  self.attainment(name), tenant=name)
+
+    def attainment(self, name: Optional[str] = None) -> float:
+        """Fraction of tenant ``name``'s served rounds that met its SLO
+        (1.0 before any observation); with no name, the worst tenant's."""
+        if name is None:
+            return min((self.attainment(n) for n in self.names),
+                       default=1.0)
+        seen = self.rounds_observed[name]
+        return 1.0 if seen == 0 else self.rounds_met[name] / seen
+
+    def round_ms(self, active: Optional[Sequence[str]] = None) -> float:
+        """The round's time envelope: tightest SLO among the active
+        tenants (default: all), scaled by ``headroom``."""
+        names = list(active) if active is not None else self.names
+        assert names and all(n in self._slo for n in names), \
+            f"unknown tenants in {names}"
+        return self.headroom * min(self._slo[n] for n in names)
+
+    def next_budgets(self, active: Optional[Sequence[str]] = None
+                     ) -> Dict[str, int]:
+        """Per-tenant request budgets for the next round (conserving
+        apportionment of the round total — see class docstring)."""
+        names = [n for n in self.names
+                 if active is None or n in set(active)]
+        assert names, f"no known tenant active in {active}"
+        env_ns = self.round_ms(names) * 1e6
+        known = [self.ns_per_request[n] for n in names
+                 if self.ns_per_request[n] is not None
+                 and self.ns_per_request[n] > 0]
+        if not known:
+            # cold start: no learned cost yet -> weight-only shares of
+            # the conservative initial total
+            start = self.initial_total if self.initial_total is not None \
+                else self.min_total
+            total = int(np.clip(start, self.min_total, self.max_total))
+            shares = apportion_largest_remainder(
+                [self._w[n] for n in names], total)
+            return dict(zip(names, shares))
+        fallback = float(np.mean(known))   # unlearned tenant: mean cost
+        cost = {n: (self.ns_per_request[n]
+                    if self.ns_per_request[n] else fallback)
+                for n in names}
+        w_sum = sum(self._w[n] for n in names)
+        quotas = [(self._w[n] if w_sum > 0 else 1.0) / cost[n]
+                  for n in names]
+        # Σ n_k c_k == env when n_k ∝ w_k/c_k: the total that fits is
+        # env * Σ(w_k/c_k) / Σ w_k  (uniform shares when all weights 0)
+        total = int(env_ns * sum(quotas) / (w_sum if w_sum > 0
+                                            else float(len(names))))
+        total = int(np.clip(total, self.min_total, self.max_total))
+        return dict(zip(names,
+                        apportion_largest_remainder(quotas, total)))
+
+    # -------------------------------------------- snapshot/restore state
+    def export_state(self) -> Dict:
+        """JSON-clean learned state (docs/qos.md): what a resumed run
+        must carry so the cost model does not reset to cold start."""
+        return {"ns_per_request": dict(self.ns_per_request),
+                "rounds_observed": dict(self.rounds_observed),
+                "rounds_met": dict(self.rounds_met)}
+
+    def restore_state(self, d: Mapping) -> None:
+        assert set(d["ns_per_request"]) == set(self.names), \
+            "state does not match this budgeter's tenant set"
+        self.ns_per_request = {n: d["ns_per_request"][n]
+                               for n in self.names}
+        self.rounds_observed = {n: int(d["rounds_observed"][n])
+                                for n in self.names}
+        self.rounds_met = {n: int(d["rounds_met"][n])
+                           for n in self.names}
+
 
 def slo_batches(workload: str, budgeter: SLOBudgeter, prompt_len: int
                 ):
@@ -152,6 +378,26 @@ def slo_batches(workload: str, budgeter: SLOBudgeter, prompt_len: int
             batch.append(fams[k % len(fams)])
             k += 1
         yield batch
+
+
+def tenant_slo_batches(workload: str, budgeter: TenantSLOBudgeter,
+                       prompt_len: int):
+    """Per-tenant successor of ``slo_batches``: each ``next()`` yields
+    one round's (tenant, prompt) batch sized by
+    ``budgeter.next_budgets()`` at yield time — tenant k contributes
+    exactly its apportioned budget, proportionally interleaved, instead
+    of the global budget round-robining across families.  The budgeter's
+    tenant names must be the workload spec's family names.  Feed the
+    budgeter between rounds."""
+    fams = dict(tenant_prompts(workload, prompt_len))
+    assert set(budgeter.names) <= set(fams), \
+        (f"budgeter tenants {budgeter.names} not all in workload "
+         f"families {sorted(fams)}")
+    while True:
+        budgets = budgeter.next_budgets()
+        counts = [budgets[n] for n in budgeter.names]
+        yield [(budgeter.names[k], fams[budgeter.names[k]])
+               for k in proportional_interleave(counts)]
 
 
 def batch_mix(batch) -> dict:

@@ -1,0 +1,403 @@
+"""Overload QoS layer: apportioning, admission control, scenarios.
+
+Four families of guarantees (docs/qos.md):
+
+  * **apportioning** — the largest-remainder budgets conserve the round
+    total exactly and follow weight x learned cost (the budgeter);
+  * **admission semantics** — the controller's shed/defer/resume event
+    sequences for the canonical scenarios are pinned (CRC32 goldens via
+    tests/scenarios.py, the fixtures fig_overload also sweeps), the
+    disabled controller is provably inert (bit-identical to running
+    with no controller at all, on BOTH engine backends), aging prevents
+    starvation, and the whole plan is a pure function of its inputs —
+    byte-identical across two fresh processes;
+  * **attribution** — per-tenant integer Stats still sum to the global
+    run exactly under admission (shed work simply never reaches the
+    engine);
+  * **state carry** — budgeter + admission state ride along in
+    ``EpochStream.snapshot()/restore()`` and the ``.npz`` save path
+    (regression: PR 9's restore carried no serving-layer state, so a
+    resumed run forgot learned costs and reset deferred work's aging).
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import scenarios as sc
+from repro.core import engine
+from repro.core import address_separation as asep
+from repro.core import controller as ctl
+from repro.obs.decision import ADMISSION_KINDS, AdmissionEvent
+from repro.runtime import stream as rt_stream
+from repro.runtime.admission import (AdmissionConfig, AdmissionController,
+                                     simulate_overload)
+from repro.runtime.governor import Governor, GovernorConfig
+from repro.runtime.stream import EpochStream
+from repro.workloads.overload import LoadScenario, demand_schedule
+from repro.workloads.serving import (TenantSLO, TenantSLOBudgeter,
+                                     apportion_largest_remainder,
+                                     proportional_interleave)
+
+# ------------------------------------------------- largest remainder
+
+def test_apportion_conserves_and_follows_quotas():
+    assert apportion_largest_remainder([2.0, 1.0, 1.0], 10) == [5, 3, 2]
+    # exact proportionality when it divides evenly
+    assert apportion_largest_remainder([2.0, 1.0, 1.0], 8) == [4, 2, 2]
+    # remainder goes to the largest fractional part, index-stable ties
+    assert apportion_largest_remainder([1.0, 1.0, 1.0], 4) == [2, 1, 1]
+    assert apportion_largest_remainder([1.0, 1.0], 0) == [0, 0]
+
+
+def test_apportion_all_zero_quotas_splits_equally():
+    assert sum(apportion_largest_remainder([0.0, 0.0, 0.0], 7)) == 7
+
+
+def test_proportional_interleave_partitions_counts():
+    counts = [5, 2, 0, 3]
+    order = proportional_interleave(counts)
+    assert sorted(order) == sorted(
+        k for k, c in enumerate(counts) for _ in range(c))
+    # proportional: the heavy tenant never runs a long solo prefix
+    assert order[:2] != [0, 0] or counts[0] > sum(counts) / 2
+
+
+# ------------------------------------------------- per-tenant budgeter
+
+def _fixed_cost_budgeter(costs, **kw):
+    b = TenantSLOBudgeter(sc.TENANTS, **kw)
+    b.restore_state({"ns_per_request": dict(costs),
+                     "rounds_observed": {n: 5 for n in costs},
+                     "rounds_met": {n: 5 for n in costs}})
+    return b
+
+
+def test_budgeter_budgets_conserve_and_follow_weight_over_cost():
+    b = _fixed_cost_budgeter({"hi": 100.0, "mid": 100.0, "lo": 100.0},
+                             max_total=100_000, headroom=1.0)
+    budgets = b.next_budgets()
+    # equal costs: shares follow weights (2:1:1)
+    assert budgets["hi"] == budgets["mid"] + budgets["lo"]
+    # round envelope = min SLO (hi: 4 ms) -> total = env * sum(w/c)/sum(w)
+    assert sum(budgets.values()) == int(4.0e6 * (2 / 100 + 1 / 100
+                                                 + 1 / 100) / 4)
+    # doubling one tenant's cost halves its time-slice share
+    b2 = _fixed_cost_budgeter({"hi": 200.0, "mid": 100.0, "lo": 100.0},
+                              max_total=100_000, headroom=1.0)
+    assert b2.next_budgets()["hi"] < budgets["hi"]
+    # the max_total clip is a hard cap on the conserved total
+    b3 = _fixed_cost_budgeter({"hi": 100.0, "mid": 100.0, "lo": 100.0},
+                              max_total=10_000, headroom=1.0)
+    assert sum(b3.next_budgets().values()) == 10_000
+
+
+def test_budgeter_attainment_is_per_tenant_and_participation_scoped():
+    b = TenantSLOBudgeter(sc.TENANTS)
+    b.observe({"hi": 4, "mid": 4, "lo": 4}, 6.0)   # hi (4ms) missed
+    b.observe({"mid": 4, "lo": 4}, 6.0)            # hi absent: not scored
+    assert b.attainment("hi") == 0.0
+    assert b.attainment("mid") == 1.0 and b.attainment("lo") == 1.0
+    assert b.attainment() == 0.0                   # min over tenants
+
+
+# ------------------------------------------------- scenario shapes
+
+def test_scenario_shapes_and_schedule_conservation():
+    step = LoadScenario("s", "step", 4.0, rounds=9)
+    assert step.multipliers() == [1.0] * 3 + [4.0] * 6
+    spike = LoadScenario("p", "spike", 6.0, rounds=10)
+    m = spike.multipliers()
+    assert m[3] == m[4] == m[9] == 6.0 and m[0] == m[5] == 1.0
+    sus = LoadScenario("u", "sustained", 2.0, rounds=4)
+    assert sus.multipliers() == [2.0] * 4
+    for scn in (step, spike, sus):
+        for mult, d in zip(scn.multipliers(),
+                           demand_schedule(scn, sc.TENANTS, 24)):
+            assert sum(d.values()) == int(round(24 * mult))
+    with pytest.raises(AssertionError):
+        LoadScenario("x", "ramp", 2.0, rounds=4)
+
+
+# ------------------------------------------------- pinned goldens
+
+@pytest.mark.parametrize("name", sorted(sc.SCENARIOS))
+def test_pinned_admission_event_goldens(name):
+    """The controller's event sequence for each canonical scenario is
+    frozen: any admission-semantics change must consciously re-pin."""
+    ctrl, plans = sc.run_controller(sc.SCENARIOS[name])
+    assert sc.event_crc(ctrl) == sc.GOLDEN_CRC[name], (
+        f"admission event trace changed for {name!r}:\n"
+        f"{sc.event_trace(ctrl)}")
+    # plan-level conservation, every round: fresh demand is exactly
+    # admitted + deferred + shed, and served work never exceeds capacity
+    for demand, p in zip(demand_schedule(sc.SCENARIOS[name], sc.TENANTS,
+                                         sc.BASE_TOTAL), plans):
+        for n in demand:
+            assert demand[n] == p.admitted[n] + p.deferred[n] + p.shed[n]
+        assert p.total_served <= sc.CAPACITY
+
+
+def test_disabled_controller_is_inert():
+    ctrl, plans = sc.run_controller(sc.SCENARIOS["sustained8"],
+                                    AdmissionConfig(enabled=False))
+    assert ctrl.events == [] and ctrl.backlog() == 0
+    for demand, p in zip(
+            demand_schedule(sc.SCENARIOS["sustained8"], sc.TENANTS,
+                            sc.BASE_TOTAL), plans):
+        assert p.served() == dict(demand) and p.pressure == 0.0
+
+
+def test_aging_prevents_starvation():
+    """Under sustained 8x overload the best-effort tenant keeps being
+    served: its oldest deferred batch never waits past age_boost plus
+    the rounds one capacity-bounded drain takes."""
+    cfg = AdmissionConfig(age_boost=3, defer_cap=24)
+    ctrl = AdmissionController(sc.TENANTS, cfg)
+    budgets = sc.fixed_budgets()
+    scn = LoadScenario("hammer", "sustained", 8.0, rounds=30)
+    lo_served, max_age = [], 0
+    for demand in demand_schedule(scn, sc.TENANTS, sc.BASE_TOTAL):
+        p = ctrl.plan(demand, budgets)
+        lo_served.append(p.served()["lo"])
+        max_age = max(max_age, ctrl.oldest_age("lo"))
+    drain_rounds = -(-cfg.defer_cap // sc.CAPACITY)   # ceil
+    assert max_age <= cfg.age_boost + drain_rounds + 1, max_age
+    # served regularly, not just once: no window of 2*age_boost rounds
+    # passes without the lo tenant running something
+    w = 2 * cfg.age_boost
+    assert all(sum(lo_served[i:i + w]) > 0
+               for i in range(len(lo_served) - w))
+
+
+def test_plan_is_pure_across_processes():
+    """Admission decisions are a pure function of (tenants, config,
+    demand history): two fresh interpreter processes produce the
+    byte-identical event trace and counters."""
+    prog = ("import sys; sys.path[:0] = ['src', 'tests']\n"
+            "import json, scenarios as sc\n"
+            "ctrl, _ = sc.run_controller(sc.SCENARIOS['spike6'])\n"
+            "print(sc.event_trace(ctrl))\n"
+            "print(json.dumps(ctrl.counters, sort_keys=True))\n")
+    outs = [subprocess.run([sys.executable, "-c", prog],
+                           capture_output=True, check=True).stdout
+            for _ in range(2)]
+    assert outs[0] == outs[1] and len(outs[0]) > 40
+
+
+# ----------------------------------- driver: bit-identity + attribution
+
+_TENANTS2 = [TenantSLO("a", 4.0, weight=2.0, priority=1, app="cfd"),
+             TenantSLO("b", 8.0, weight=1.0, priority=0, app="kmeans")]
+_CANDS = [(60, 8), (52, 16)]
+
+
+def _int_leaves_equal(s1, s2):
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(s1),
+                    jax.tree_util.tree_leaves(s2)):
+        a, b = np.asarray(a), np.asarray(b)
+        if np.issubdtype(a.dtype, np.integer):
+            assert np.array_equal(a, b)
+
+
+def _disabled_equals_absent(backend):
+    scn = LoadScenario("s", "sustained", 3.0, rounds=6)
+    sched = demand_schedule(scn, _TENANTS2, 18)
+    runs = [simulate_overload(_TENANTS2, sched, admission=mode,
+                              candidates=_CANDS, max_total=48, seed=5,
+                              backend=backend)
+            for mode in (None, AdmissionConfig(enabled=False))]
+    _int_leaves_equal(runs[0].stats, runs[1].stats)
+    for n in ("a", "b"):
+        _int_leaves_equal(runs[0].tenant_stats[n],
+                          runs[1].tenant_stats[n])
+    assert [d.compact() for d in runs[0].decisions] \
+        == [d.compact() for d in runs[1].decisions]
+    assert [r["served"] for r in runs[0].rounds] \
+        == [r["served"] for r in runs[1].rounds]
+    assert runs[0].events == [] and runs[1].events == []
+
+
+def test_admission_disabled_bitidentical_jnp():
+    _disabled_equals_absent("jnp")
+
+
+_pallas_ok, _pallas_why = engine.backend_status("pallas")
+
+
+@pytest.mark.skipif(not _pallas_ok, reason=_pallas_why)
+def test_admission_disabled_bitidentical_pallas():
+    _disabled_equals_absent("pallas")
+
+
+def test_overload_attribution_exact_under_admission():
+    scn = LoadScenario("s", "sustained", 4.0, rounds=8)
+    res = simulate_overload(_TENANTS2, demand_schedule(scn, _TENANTS2, 20),
+                            candidates=_CANDS, max_total=24, seed=2,
+                            backend="jnp")
+    assert res.attribution_exact()
+    assert sum(res.shed.values()) > 0      # the overload actually bit
+    # offered = served + shed + still-deferred, per tenant
+    for n in res.offered:
+        assert res.offered[n] == res.served[n] + res.shed[n] \
+            + res.backlog[n]
+
+
+# ------------------------------------------------- snapshot regression
+
+def _cfg():
+    amap = asep.make_map(conv_sets=8, num_cache_chips=2, sets_per_chip=4)
+    return ctl.MorpheusConfig(amap=amap, conv_ways=4, ext_ways=4)
+
+
+def _trace(n=1200, span=1024, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, span, size=n).astype(np.uint32),
+            rng.random(n) < 0.3, np.zeros(n, np.int32))
+
+
+def _warmed_serving_pair():
+    b = TenantSLOBudgeter(sc.TENANTS)
+    b.observe({"hi": 8, "mid": 4, "lo": 4}, 3.0)
+    b.observe({"hi": 6, "mid": 6, "lo": 2}, 5.0)
+    c = AdmissionController(sc.TENANTS, AdmissionConfig(age_boost=2))
+    c.plan({"hi": 30, "mid": 20, "lo": 20}, sc.fixed_budgets())
+    c.plan({"hi": 30, "mid": 20, "lo": 20}, sc.fixed_budgets())
+    return b, c
+
+
+def test_snapshot_carries_serving_state(tmp_path):
+    """Regression: budgeter EMAs/attainment and admission queues (with
+    their ages) must survive snapshot()/restore() AND the .npz
+    save_state/load_state path — previously StreamSnapshot carried only
+    engine-side state, so a restored QoS run silently forgot both."""
+    cfg = _cfg()
+    a, w, l = _trace()
+    st1 = EpochStream(cfg, a, w, l, epoch_len=300)
+    bud, ctrl = _warmed_serving_pair()
+    st1.attach_serving(bud, ctrl)
+    st1.step()
+    snap = st1.snapshot()
+    assert snap.serving is not None and len(snap.serving) == 2
+    # restore into a FRESH stream with fresh (cold) components
+    st2 = EpochStream(cfg, a, w, l, epoch_len=300)
+    bud2 = TenantSLOBudgeter(sc.TENANTS)
+    ctrl2 = AdmissionController(sc.TENANTS, AdmissionConfig(age_boost=2))
+    st2.attach_serving(bud2, ctrl2)
+    st2.restore(snap)
+    assert bud2.export_state() == bud.export_state()
+    assert ctrl2.export_state() == ctrl.export_state()
+    assert ctrl2.oldest_age("lo") == ctrl.oldest_age("lo") > 0
+    # .npz roundtrip carries the same serving payload
+    p = rt_stream.save_state(tmp_path / "snap.npz", snap)
+    loaded = rt_stream.load_state(p, cfg, batch=1)
+    assert json.dumps(list(loaded.serving), sort_keys=True) \
+        == json.dumps(list(snap.serving), sort_keys=True)
+    # resuming from the file restores the components too
+    bud3 = TenantSLOBudgeter(sc.TENANTS)
+    ctrl3 = AdmissionController(sc.TENANTS, AdmissionConfig(age_boost=2))
+    st3 = EpochStream(cfg, a, w, l, epoch_len=300)
+    st3.attach_serving(bud3, ctrl3)
+    st3.restore(loaded)
+    assert bud3.export_state() == bud.export_state()
+    assert ctrl3.export_state() == ctrl.export_state()
+    # and the restored stream still steps
+    st3.step()
+
+
+def test_snapshot_serving_mismatch_is_refused():
+    cfg = _cfg()
+    a, w, l = _trace()
+    st1 = EpochStream(cfg, a, w, l, epoch_len=300)
+    bud, ctrl = _warmed_serving_pair()
+    st1.attach_serving(bud, ctrl)
+    snap = st1.snapshot()
+    st2 = EpochStream(cfg, a, w, l, epoch_len=300)   # nothing attached
+    with pytest.raises(AssertionError):
+        st2.restore(snap)
+
+
+def test_legacy_snapshot_without_serving_still_restores():
+    """Old snapshots (serving=None) restore into a serving-enabled
+    stream without touching the attached components."""
+    cfg = _cfg()
+    a, w, l = _trace()
+    st1 = EpochStream(cfg, a, w, l, epoch_len=300)
+    st1.step()
+    snap = st1.snapshot()        # no serving attached -> serving=None
+    assert snap.serving is None
+    st2 = EpochStream(cfg, a, w, l, epoch_len=300)
+    bud, ctrl = _warmed_serving_pair()
+    before = (bud.export_state(), ctrl.export_state())
+    st2.attach_serving(bud, ctrl)
+    st2.restore(snap)
+    assert (bud.export_state(), ctrl.export_state()) == before
+    assert st2.pos == st1.pos
+
+
+# ------------------------------------------------- governor coupling
+
+def test_governor_pressure_waives_hint_staleness_gate():
+    """Deterministic: with a fresh, already-measured hinted neighbour
+    the hint gate is closed at pressure 0 (no move), and overload
+    pressure > 1 opens it immediately (an epsilon_hint=1 draw fires the
+    'hint' trigger)."""
+    def mk():
+        gcfg = GovernorConfig(hysteresis=1, min_gain=10.0, epsilon=0.0,
+                              epsilon_min=0.0, epsilon_decay=1.0,
+                              epsilon_hint=1.0, warm_epochs=0,
+                              hint_stale_after=1000)
+        g = Governor([10, 20, 30], gcfg, initial=0)
+        g.observe(1.0, hint=+1)          # measures index 0, sets hint
+        # hinted neighbour (index 1) already measured and freshly
+        # visited: the staleness clause alone would keep the gate shut
+        g.est[1] = 0.5
+        g.last_visit[1] = g.epoch
+        return g
+    g0 = mk()
+    assert g0.decide() == g0.candidates[0]       # pressure 0: no probe
+    assert all(d.trigger != "hint" for d in g0.decisions)
+    g1 = mk()
+    g1.observe(1.0, hint=+1, pressure=2.0)
+    assert g1.decide() == g1.candidates[1]       # overload: probe NOW
+    assert g1.decisions[-1].trigger == "hint"
+
+
+def test_governor_pressure_survives_state_roundtrip():
+    g = Governor([1, 2], GovernorConfig())
+    g.observe(1.0, pressure=1.7)
+    g2 = Governor([1, 2], GovernorConfig())
+    g2.restore_state(g.export_state())
+    assert g2.pressure == 1.7
+
+
+# ------------------------------------------------- obs plumbing
+
+def test_admission_events_flow_through_obs_and_counters():
+    from repro import obs
+    from repro.obs.metrics import admission_counters
+    obs.enable(trace=True, metrics=True)
+    try:
+        ctrl, _ = sc.run_controller(sc.SCENARIOS["sustained2"])
+        reg = obs.metrics_registry()
+        got = admission_counters(reg)
+        assert got == {k: ctrl.counters[k] for k in got}
+        assert sum(got.values()) > 0
+        names = [e["name"]
+                 for e in obs.tracer().to_chrome()["traceEvents"]
+                 if e.get("ph") == "i"]
+        assert "admission.event" in names
+    finally:
+        obs.disable()
+
+
+def test_admission_event_taxonomy_is_closed():
+    with pytest.raises(AssertionError):
+        AdmissionEvent(round=0, kind="drop", tenant="t", requests=1)
+    ev = AdmissionEvent(round=1, kind="resume", tenant="t", requests=3,
+                        age=4)
+    assert ev.compact() == "resume:t:3+4"
+    assert set(ADMISSION_KINDS) == {"admit", "defer", "shed", "resume"}

@@ -162,3 +162,92 @@ def test_masked_epoch_streaming_sums_to_global(sc):
         assert int(np.asarray(getattr(total, f))) == \
             int(np.asarray(getattr(mono, f))), \
             f"{f}: masked stream != global (k={k}, cuts={sc['cuts']})"
+
+
+# ---------------------------------------------- overload QoS invariants
+# (PR: overload-aware admission — docs/qos.md.)  hypothesis draws the
+# quota vectors, tenant sets, admission knobs and demand histories the
+# fixed scenarios in tests/test_overload.py never anticipate.
+
+from repro.runtime.admission import (AdmissionConfig,  # noqa: E402
+                                     AdmissionController)
+from repro.workloads.serving import (TenantSLO,  # noqa: E402
+                                     apportion_largest_remainder)
+
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(st.lists(st.floats(0.0, 1e6, allow_nan=False,
+                          allow_infinity=False),
+                min_size=1, max_size=8),
+       st.integers(0, 10_000))
+def test_largest_remainder_conserves_total(quotas, total):
+    """Apportionment conserves the round total exactly for ANY quota
+    vector, and never strays more than one unit from the ideal share."""
+    out = apportion_largest_remainder(quotas, total)
+    assert sum(out) == total
+    assert all(v >= 0 for v in out)
+    s = sum(quotas)
+    if s > 0:
+        for q, v in zip(quotas, out):
+            ideal = q / s * total
+            assert ideal - 1 - 1e-6 < v < ideal + 1 + 1e-6
+
+
+def _draw_admission(data):
+    k = data.draw(st.integers(2, 4))
+    tenants = [TenantSLO(f"t{i}", 5.0, weight=1.0,
+                         priority=data.draw(st.integers(0, 3)))
+               for i in range(k)]
+    cfg = AdmissionConfig(age_boost=data.draw(st.integers(1, 4)),
+                          defer_cap=data.draw(st.integers(1, 16)))
+    cap = data.draw(st.integers(1, 12))
+    budgets = dict(zip([t.name for t in tenants],
+                       apportion_largest_remainder([1.0] * k, cap)))
+    history = [
+        {t.name: data.draw(st.integers(0, 10)) for t in tenants}
+        for _ in range(data.draw(st.integers(5, 25)))]
+    return tenants, cfg, cap, budgets, history
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(st.data())
+def test_admission_starvation_freedom(data):
+    """Aging bounds every tenant's wait: once a batch reaches age_boost
+    it outranks all fresh work oldest-first, and the total backlog is
+    capped at K x defer_cap, so no oldest batch can wait longer than
+    age_boost + the rounds one capacity-bounded drain takes — for ANY
+    demand history and priority assignment."""
+    tenants, cfg, cap, budgets, history = _draw_admission(data)
+    ctrl = AdmissionController(tenants, cfg)
+    bound = cfg.age_boost \
+        + -(-len(tenants) * cfg.defer_cap // cap) + 1   # ceil drain
+    for demand in history:
+        p = ctrl.plan(demand, budgets)
+        # round conservation, every tenant, every round
+        for n in demand:
+            assert demand[n] == p.admitted[n] + p.deferred[n] + p.shed[n]
+        assert p.total_served <= cap
+        for t in tenants:
+            assert ctrl.oldest_age(t.name) <= bound, \
+                (t.name, ctrl.oldest_age(t.name), bound)
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(st.data())
+def test_admission_plan_is_pure(data):
+    """Admission decisions are a pure function of (tenant set, config,
+    demand history): two fresh controllers replaying the same drawn
+    history emit byte-identical event traces and counters.  (The
+    cross-process half of this claim is pinned by
+    tests/test_overload.py::test_plan_is_pure_across_processes.)"""
+    tenants, cfg, cap, budgets, history = _draw_admission(data)
+
+    def replay():
+        ctrl = AdmissionController(tenants, cfg)
+        for demand in history:
+            ctrl.plan(demand, budgets)
+        return (";".join(e.compact() for e in ctrl.events),
+                dict(ctrl.counters),
+                {n: ctrl.queues[n] for n in ctrl.names})
+
+    assert replay() == replay()
